@@ -1,0 +1,174 @@
+"""Benchmark harnesses, one per paper figure (Sec. 2.3).
+
+Fig. 3 — task enqueue throughput vs ensemble size (peak ~3e5 samples/s in
+         the paper, plateau above 1e5 samples; `merlin run` itself is O(1)).
+Fig. 4 — pre-sample startup latency vs worker count (1000-sample study:
+         ~50 s @ 1 worker -> ~3 s @ 4 workers in the paper).
+Fig. 5 — per-task overhead distribution (paper: median 32.8 ms,
+         right-skewed tail; ours is in-memory + fused so ~1000x lower).
+Fig. 6 — makespan vs workers for fixed-duration null tasks (ideal halving).
+Extra  — device-fused bundle overhead: the TPU adaptation's per-sample cost.
+"""
+from __future__ import annotations
+
+import statistics
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import hierarchy as H
+from repro.core.queue import InMemoryBroker, new_task
+from repro.core.runtime import MerlinRuntime
+from repro.core.spec import Step, StudySpec
+from repro.core.worker import WorkerPool
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3: enqueue + expansion throughput
+# ---------------------------------------------------------------------------
+
+def bench_enqueue(sizes=(100, 1000, 10_000, 100_000, 1_000_000),
+                  fanout=64, bundle=1) -> List[Dict]:
+    rows = []
+    for n in sizes:
+        cfg = H.HierarchyCfg(max_fanout=fanout, bundle=bundle)
+        broker = InMemoryBroker()
+        t0 = time.perf_counter()
+        broker.put(H.root_task("bench", "0", n, cfg))
+        t_root = time.perf_counter() - t0
+        # drive the hierarchy to leaves (what workers do collectively);
+        # count only generation work — the producer-side cost of Fig. 3
+        t0 = time.perf_counter()
+        n_real = 0
+        while True:
+            lease = broker.get(timeout=0)
+            if lease is None:
+                break
+            if lease.task.kind == "gen":
+                broker.put_many(H.expand(lease.task))
+            else:
+                n_real += 1
+            broker.ack(lease.tag)
+        t_expand = time.perf_counter() - t0
+        rows.append({
+            "n_samples": n,
+            "merlin_run_s": t_root,            # producer: O(1) by design
+            "expand_s": t_expand,
+            "samples_per_s": n / t_expand if t_expand > 0 else float("inf"),
+            "n_real": n_real,
+        })
+        assert n_real == -(-n // bundle)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4: pre-sample startup time
+# ---------------------------------------------------------------------------
+
+def bench_startup(n_samples=1000, workers=(1, 2, 4, 8), bundle=1,
+                  fanout=8) -> List[Dict]:
+    rows = []
+    for w in workers:
+        with tempfile.TemporaryDirectory() as ws:
+            rt = MerlinRuntime(workspace=ws,
+                               hierarchy=H.HierarchyCfg(max_fanout=fanout,
+                                                        bundle=bundle))
+            rt.register("noop", lambda ctx: None)
+            spec = StudySpec(name="b", steps=[Step(name="noop", fn="noop")])
+            t0 = time.monotonic()
+            pool = WorkerPool(rt, n_workers=w)
+            try:
+                rt.run(spec, np.zeros((n_samples, 1), np.float32))
+                first = None
+                deadline = time.monotonic() + 60
+                while first is None and time.monotonic() < deadline:
+                    starts = [x.first_real_at for x in pool.workers
+                              if x.first_real_at]
+                    first = min(starts) if starts else None
+                    time.sleep(0.001)
+                rows.append({"workers": w, "n_samples": n_samples,
+                             "startup_s": (first or float("nan")) - t0})
+            finally:
+                pool.shutdown()
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5: per-task overhead distribution
+# ---------------------------------------------------------------------------
+
+def bench_overhead(n_samples=2000, bundle=1, sleep_s=0.001) -> Dict:
+    with tempfile.TemporaryDirectory() as ws:
+        rt = MerlinRuntime(workspace=ws,
+                           hierarchy=H.HierarchyCfg(max_fanout=16,
+                                                    bundle=bundle))
+        durations = []
+
+        def task(ctx):
+            t0 = time.perf_counter()
+            time.sleep(sleep_s)
+            durations.append(time.perf_counter() - t0)
+
+        rt.register("task", task)
+        spec = StudySpec(name="o", steps=[Step(name="task", fn="task")])
+        wall0 = time.monotonic()
+        with WorkerPool(rt, n_workers=4) as pool:
+            sid = rt.run(spec, np.zeros((n_samples, 1), np.float32))
+            assert rt.wait(sid, timeout=120)
+        wall = time.monotonic() - wall0
+    # total system overhead per task = (wall * workers - sum(work)) / n
+    busy = sum(durations)
+    over = (wall * 4 - busy) / n_samples
+    return {"n": n_samples, "wall_s": wall, "work_s": busy,
+            "overhead_per_task_s": over,
+            "median_task_s": statistics.median(durations)}
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6: worker scaling
+# ---------------------------------------------------------------------------
+
+def bench_scaling(n_samples=256, task_s=0.01, workers=(1, 2, 4, 8)) -> List[Dict]:
+    rows = []
+    for w in workers:
+        with tempfile.TemporaryDirectory() as ws:
+            rt = MerlinRuntime(workspace=ws,
+                               hierarchy=H.HierarchyCfg(max_fanout=16,
+                                                        bundle=1))
+            rt.register("sleep", lambda ctx: time.sleep(task_s))
+            spec = StudySpec(name="s", steps=[Step(name="sleep", fn="sleep")])
+            t0 = time.monotonic()
+            with WorkerPool(rt, n_workers=w) as pool:
+                sid = rt.run(spec, np.zeros((n_samples, 1), np.float32))
+                assert rt.wait(sid, timeout=120)
+            wall = time.monotonic() - t0
+            ideal = n_samples * task_s / w
+            rows.append({"workers": w, "wall_s": wall, "ideal_s": ideal,
+                         "efficiency": ideal / wall})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# device-fused bundles (the TPU adaptation; DESIGN.md)
+# ---------------------------------------------------------------------------
+
+def bench_fused(bundle_sizes=(1, 16, 256, 1024), n_total=2048) -> List[Dict]:
+    import jax
+    from repro.core.ensemble import EnsembleExecutor
+    from repro.sim import jag_simulate
+    rows = []
+    rng = np.random.default_rng(0)
+    for bs in bundle_sizes:
+        ex = EnsembleExecutor(jag_simulate)
+        samples = rng.random((bs, 5)).astype(np.float32)
+        ex.run_bundle(0, bs, samples)  # compile
+        n_bundles = max(1, n_total // bs)
+        t0 = time.perf_counter()
+        for i in range(n_bundles):
+            ex.run_bundle(i * bs, (i + 1) * bs, samples)
+        dt = time.perf_counter() - t0
+        rows.append({"bundle": bs, "samples_per_s": n_bundles * bs / dt,
+                     "us_per_sample": dt / (n_bundles * bs) * 1e6})
+    return rows

@@ -1,0 +1,73 @@
+"""Perf-iteration driver (§Perf of EXPERIMENTS.md).
+
+Runs one (arch x shape) dry-run variant in a fresh 512-device subprocess,
+derives the roofline terms, and appends a labelled record to
+results/perf_log.json — one call per hypothesis->change->measure cycle.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch rwkv6-3b \
+      --shape train_4k --label chunk64 --override '{"ssm_chunk": 64}'
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+from benchmarks.roofline import derive_row
+
+
+def run_variant(arch: str, shape: str, label: str, override=None,
+                cache_dtype=None, multi_pod=False, log="results/perf_log.json"):
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        out = f.name
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out]
+    if override:
+        cmd += ["--override", json.dumps(override)]
+    if cache_dtype:
+        cmd += ["--cache-dtype", cache_dtype]
+    if multi_pod:
+        cmd += ["--multi-pod"]
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=3000)
+    if r.returncode != 0:
+        rec = {"arch": arch, "shape": shape, "label": label,
+               "override": override, "ok": False,
+               "error": (r.stdout + r.stderr)[-1500:]}
+    else:
+        res = json.load(open(out))[0]
+        row = derive_row(res) or {}
+        rec = {"arch": arch, "shape": shape, "label": label,
+               "override": override, "cache_dtype": cache_dtype,
+               "ok": res.get("ok", False), **row}
+    os.unlink(out)
+    logs = json.load(open(log)) if os.path.exists(log) else []
+    logs.append(rec)
+    os.makedirs(os.path.dirname(log), exist_ok=True)
+    with open(log, "w") as f:
+        json.dump(logs, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--label", required=True)
+    ap.add_argument("--override", default=None)
+    ap.add_argument("--cache-dtype", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    rec = run_variant(args.arch, args.shape, args.label,
+                      json.loads(args.override) if args.override else None,
+                      args.cache_dtype, args.multi_pod)
+    print(json.dumps(rec, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Roofline assembly: read the dry-run JSONs (launch/dryrun.py --all) and
+derive the three-term roofline per (arch x shape x mesh).
+
+Hardware model (per instructions): TPU v5e — 197 TFLOP/s bf16/chip,
+819 GB/s HBM/chip, ~50 GB/s/link ICI with 4 links/chip.
+
+  compute_s    = HLO_FLOPs(per chip) / 197e12
+  memory_s     = HLO_bytes(per chip) / 819e9
+  collective_s = collective_bytes(per chip) / (4 * 50e9)
+
+Both the scan-true numbers and the probe-reconstructed numbers (see
+launch/dryrun.py for why reconstruction is needed) are available; the table
+uses the reconstructed ones.  ``useful_s`` = MODEL_FLOPS/(chips*peak) and
+``roofline_fraction`` = useful_s / max(term) — the score in §Perf.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+ICI_LINKS = 4
+
+
+def analytic_traffic_bytes(res: Dict) -> Optional[float]:
+    """Achievable per-chip HBM traffic (bytes) for the cell — the yardstick
+    the compiled `bytes accessed` is judged against (CPU-backend HLO byte
+    counts are fusion-pessimistic; a fused TPU program approaches this).
+
+    Model: bf16 weights are read fwd+bwd per microbatch; fp32 master/m/v
+    optimizer state read+written once; remat="full" stores one activation
+    per layer per token; logits materialize once fwd+bwd.  Decode reads all
+    weights + the KV/state cache once per token.
+    """
+    try:
+        import sys
+        sys.path.insert(0, "src")
+        from repro.configs import registry
+        from repro.configs.base import SHAPES
+        cfg = registry.get_config(res["arch"])
+    except Exception:
+        return None
+    shape = SHAPES[res["shape"]]
+    chips = res["chips"]
+    P = res["n_params"]
+    Pa = res["n_active_params"]
+    tokens = shape.global_batch * shape.seq_len
+    act = cfg.n_layers * tokens * cfg.d_model * 2 * 3  # save w + 2 reads
+    if shape.kind == "train":
+        nmb = max(1, cfg.microbatch)
+        weights = 2 * 2 * P * nmb if not cfg.n_experts else \
+            2 * 2 * (P + (nmb - 1) * Pa)  # EP shards re-read active experts
+        opt = 32 * P  # fp32 master/m/v r+w, grads r+w
+        logits = 2 * tokens * cfg.vocab_size * 2 * 2
+        total = weights + opt + act + logits
+    elif shape.kind == "prefill":
+        total = 2 * P + act + tokens * cfg.d_model * 2 * 4  # + cache write
+    else:  # decode: weights + full cache read per token
+        cache = _cache_bytes(cfg, shape)
+        total = 2 * Pa + cache + shape.global_batch * cfg.vocab_size * 2
+    return total / chips
+
+
+def _cache_bytes(cfg, shape) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    total = 0.0
+    for spec in cfg.plan:
+        if spec.kind in ("attn", "shared_attn", "dec"):
+            L = min(spec.sliding_window or cfg.decode_window or S, S)
+            total += 2 * B * L * cfg.n_kv_heads * cfg.head_dim * 2
+        elif spec.kind == "mla":
+            total += B * S * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+        elif spec.kind == "mamba2":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            total += B * d_inner * cfg.ssm_state * 4
+        elif spec.kind == "rwkv6":
+            H = cfg.d_model // cfg.rwkv_head_dim
+            total += B * H * cfg.rwkv_head_dim ** 2 * 4
+        elif spec.kind == "xattn":
+            T = cfg.n_img_tokens or cfg.enc_len
+            total += 2 * B * T * cfg.n_kv_heads * cfg.head_dim * 2
+    return total
+
+
+def derive_row(res: Dict) -> Optional[Dict]:
+    if not res.get("ok"):
+        return None
+    rec = res.get("reconstructed", res)
+    chips = res["chips"]
+    coll = rec["collectives"]
+    coll_bytes = sum(v for k, v in coll.items() if k != "count")
+    compute_s = rec["flops"] / PEAK_FLOPS
+    memory_s = rec["bytes_accessed"] / HBM_BW
+    collective_s = coll_bytes / (ICI_LINKS * ICI_BW_PER_LINK)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful_s = res["model_flops"] / chips / PEAK_FLOPS
+    bound = max(terms.values())
+    # achievable lower bound for this workload on this hardware: max of
+    # useful-compute time and analytic min HBM-traffic time
+    traffic = analytic_traffic_bytes(res)
+    achievable_s = max(useful_s, (traffic or 0.0) / HBM_BW)
+    return {
+        "arch": res["arch"], "shape": res["shape"], "mesh": res["mesh"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops": res["model_flops"],
+        "hlo_flops_chip": rec["flops"],
+        "useful_ratio": res["model_flops"] / chips / max(rec["flops"], 1e-9),
+        "useful_s": useful_s,
+        "achievable_s": achievable_s,
+        "roofline_fraction": achievable_s / bound if bound > 0 else 0.0,
+        "temp_gb": res.get("memory", {}).get("temp_bytes", 0) / 2 ** 30,
+    }
+
+
+def load_rows(paths: List[str]) -> List[Dict]:
+    rows = []
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        for res in json.load(open(p)):
+            row = derive_row(res)
+            if row:
+                rows.append(row)
+    return rows
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':<22}{'shape':<12}{'mesh':<9}{'compute_s':>10}"
+           f"{'memory_s':>10}{'coll_s':>9}{'dom':>6}{'useful':>8}"
+           f"{'achiev_s':>10}{'roof%':>7}{'temp_GB':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"{r['arch']:<22}{r['shape']:<12}{r['mesh']:<9}"
+            f"{r['compute_s']:>10.4f}{r['memory_s']:>10.4f}"
+            f"{r['collective_s']:>9.4f}{r['dominant'][:4]:>6}"
+            f"{r['useful_ratio']:>8.2f}{r['achievable_s']:>10.4f}"
+            f"{100*r['roofline_fraction']:>6.1f}%"
+            f"{r['temp_gb']:>8.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    import glob
+    paths = (sorted(glob.glob("results/dryrun_single_pod_final.json")) or
+             ["results/dryrun_single_pod.json"])
+    paths += ["results/dryrun_multi_pod.json"]
+    rows = load_rows(paths)
+    if not rows:
+        print("no dry-run results found; run "
+              "`python -m repro.launch.dryrun --all --out "
+              "results/dryrun_single_pod.json` first")
+        return
+    print(format_table(rows))
+    with open("results/roofline.csv", "w") as f:
+        keys = list(rows[0].keys())
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[k]) for k in keys) + "\n")
+    print("\nwrote results/roofline.csv")
+
+
+if __name__ == "__main__":
+    main()

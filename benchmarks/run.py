@@ -1,0 +1,72 @@
+"""Benchmark driver: one harness per paper figure (Sec. 2.3) plus the
+device-fusion benchmark from the TPU adaptation.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = the per-unit
+latency each figure is about), then a human-readable block.  Paper-claim
+comparisons live in EXPERIMENTS.md.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import figures as F
+
+    rows = []
+
+    # Fig. 3: enqueue/expansion throughput
+    sizes = (100, 1000, 10_000, 100_000) if args.quick else \
+        (100, 1000, 10_000, 100_000, 1_000_000)
+    enq = F.bench_enqueue(sizes=sizes)
+    for r in enq:
+        rows.append((f"fig3_enqueue_n{r['n_samples']}",
+                     1e6 / max(r["samples_per_s"], 1e-9),
+                     f"{r['samples_per_s']:.0f} samples/s; merlin_run="
+                     f"{r['merlin_run_s']*1e6:.0f}us"))
+
+    # Fig. 4: startup latency vs workers
+    for r in F.bench_startup(n_samples=200 if args.quick else 1000):
+        rows.append((f"fig4_startup_w{r['workers']}",
+                     r["startup_s"] * 1e6,
+                     f"first sim after {r['startup_s']*1e3:.1f} ms"))
+
+    # Fig. 5: per-task overhead
+    o = F.bench_overhead(n_samples=500 if args.quick else 2000)
+    rows.append(("fig5_overhead_per_task", o["overhead_per_task_s"] * 1e6,
+                 f"median_work={o['median_task_s']*1e3:.2f}ms "
+                 f"wall={o['wall_s']:.2f}s"))
+
+    # Fig. 6: worker scaling
+    for r in F.bench_scaling(n_samples=64 if args.quick else 256):
+        rows.append((f"fig6_scaling_w{r['workers']}",
+                     r["wall_s"] * 1e6 / 256,
+                     f"efficiency={r['efficiency']:.2f} vs ideal"))
+
+    # TPU adaptation: fused-bundle per-sample overhead
+    for r in F.bench_fused(bundle_sizes=(1, 16, 256) if args.quick
+                           else (1, 16, 256, 1024)):
+        rows.append((f"fused_bundle_{r['bundle']}",
+                     r["us_per_sample"],
+                     f"{r['samples_per_s']:.0f} sims/s"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+    # roofline table if dry-run results exist
+    try:
+        from benchmarks import roofline
+        print()
+        roofline.main()
+    except Exception as e:  # pragma: no cover
+        print(f"(roofline table skipped: {e})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

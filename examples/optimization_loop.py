@@ -1,0 +1,45 @@
+"""ML-augmented optimization of a fusion design (paper Sec. 3.2).
+
+Re-optimizes JAG capsule inputs for maximum *robust* yield (expected yield
+under manufacturing perturbations) subject to an implosion-velocity
+constraint, via the self-re-enqueueing Merlin workflow: simulate ->
+post-process -> train surrogate -> constrained acquisition -> next batch,
+with iterations launched from inside worker tasks.
+
+Run: PYTHONPATH=src python examples/optimization_loop.py
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import MerlinRuntime, WorkerPool
+from repro.core.active import OptimizationLoop
+from repro.core.hierarchy import HierarchyCfg
+from repro.sim import jag_simulate
+
+
+def main():
+    with tempfile.TemporaryDirectory() as ws:
+        rt = MerlinRuntime(workspace=ws,
+                           hierarchy=HierarchyCfg(max_fanout=8, bundle=16))
+        loop = OptimizationLoop(rt, jag_simulate, batch_per_iter=96,
+                                max_iters=4, constraint_max=360.0, seed=0)
+        with WorkerPool(rt, n_workers=3) as pool:
+            loop.start()
+            t0 = time.time()
+            while len(loop.history) < loop.max_iters and time.time() - t0 < 600:
+                time.sleep(0.25)
+            pool.drain(timeout=120)
+
+        print("iter |    n | best yield")
+        for h in loop.history:
+            print(f"{h['iter']:>4} | {h['n']:>4} | {h['best']:.3e}")
+        gain = loop.history[-1]["best"] / loop.history[0]["best"]
+        print(f"robust-yield improvement over random init: {gain:.2f}x "
+              f"in {len(loop.history)} iterations "
+              f"({loop.history[-1]['n']} total simulations)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.ckpt.checkpoint import CheckpointManager, save_pytree, restore_pytree  # noqa

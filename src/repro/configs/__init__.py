@@ -1,0 +1,2 @@
+from repro.configs.base import LayerSpec, ModelConfig, ShapeConfig, SHAPES  # noqa
+from repro.configs.registry import ARCHS, get_config, reduced_config, input_specs  # noqa

@@ -1,0 +1,134 @@
+"""Architecture registry: ``--arch <id>`` resolution, reduced smoke configs,
+per-arch sharding-rule overrides, and input specs for every workload shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+
+ARCHS = {
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "jag-surrogate": "repro.configs.jag_surrogate",
+}
+
+# per-arch logical->physical rule overrides (see parallel/sharding.py)
+ARCH_RULES: Dict[str, Dict] = {
+    # whisper-tiny is far too small for tensor parallelism on 256 chips:
+    # run it pure-DP with batch over every mesh axis.
+    "whisper-tiny": {"batch": ("pod", "data", "model"), "fsdp": (),
+                     "tensor": (), "vocab": (), "heads": ()},
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(ARCHS[arch_id])
+    cfg = mod.get_config()
+    cfg.validate()
+    return cfg
+
+
+def arch_rules(arch_id: str) -> Optional[Dict]:
+    return ARCH_RULES.get(arch_id)
+
+
+# ---------------------------------------------------------------------------
+# reduced configs for CPU smoke tests
+# ---------------------------------------------------------------------------
+
+def reduced_config(arch_id: str) -> ModelConfig:
+    """Same family/topology, tiny dims: one fwd/train step must run on CPU."""
+    cfg = get_config(arch_id)
+    import math
+    heads = max(2, cfg.n_heads // 8)
+    kv = math.gcd(heads, max(1, min(cfg.n_kv_heads, heads)))
+    over: Dict[str, Any] = dict(
+        d_model=128, n_heads=heads, n_kv_heads=kv, head_dim=32,
+        d_ff=256, vocab_size=512, n_repeat=2, microbatch=1,
+        ssm_state=16, ssm_head_dim=32, ssm_chunk=32,
+        rwkv_head_dim=32, rwkv_lora_decay=16, rwkv_lora_mix=8,
+        kv_lora_rank=32, qk_rope_dim=16, qk_nope_dim=32, v_head_dim=32,
+        n_experts=min(cfg.n_experts, 8) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        d_ff_expert=64 if cfg.d_ff_expert else 0,
+        n_enc_layers=2 if cfg.n_enc_layers else 0,
+        enc_len=16 if cfg.n_enc_layers else cfg.enc_len,
+        n_img_tokens=16 if cfg.n_img_tokens else 0,
+        d_vision=64 if cfg.n_img_tokens else 0,
+        decode_window=32 if cfg.decode_window else None,
+        attn_scale=None,
+    )
+    n_layers = len(cfg.prologue) + len(cfg.superblock) * over["n_repeat"]
+    over["n_layers"] = n_layers
+    r = cfg.replace(**over)
+    r.validate()
+    return r
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def _extras(cfg: ModelConfig, B: int):
+    ex = {}
+    if cfg.n_enc_layers:
+        ex["enc_embed"] = ((B, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+    if cfg.n_img_tokens:
+        ex["img_embed"] = ((B, cfg.n_img_tokens, cfg.d_vision), jnp.bfloat16)
+    return ex
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, abstract: bool = True,
+                rng: Optional[jax.Array] = None):
+    """Model inputs for a workload shape.
+
+    ``abstract=True`` -> jax.ShapeDtypeStruct stand-ins (dry-run lowering,
+    no allocation).  ``abstract=False`` -> concrete random arrays (tests).
+
+    train/prefill: {"tokens", ("labels")} (+ stub-frontend embeddings).
+    decode: {"token": (B,1)} — the KV caches are a separate argument built
+    by models.lm.init_caches (see launch/dryrun.py).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = ((B, S), jnp.int32)
+        specs["labels"] = ((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = ((B, S), jnp.int32)
+    else:  # decode
+        specs["token"] = ((B, 1), jnp.int32)
+    if shape.kind != "decode":
+        specs.update(_extras(cfg, B))
+
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in specs.items()}
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    out = {}
+    for k, (s, d) in specs.items():
+        rng, sub = jax.random.split(rng)
+        if d == jnp.int32:
+            out[k] = jax.random.randint(sub, s, 0, cfg.vocab_size, dtype=d)
+        else:
+            out[k] = (jax.random.normal(sub, s) * 0.02).astype(d)
+    return out
+
+
+def applicable_shapes(arch_id: str):
+    cfg = get_config(arch_id)
+    return [s for s in SHAPES.values()
+            if shape_applicable(arch_id, s.name, cfg.family)]

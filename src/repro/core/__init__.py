@@ -1,0 +1,11 @@
+# Merlin's contribution in JAX-native form: hierarchical task generation,
+# producer-consumer brokers, parameter x sample DAG layering, device-fused
+# ensemble execution, bundling/aggregation, and crawl-resubmit resilience.
+from repro.core.queue import (InMemoryBroker, FileBroker, Task, new_task,  # noqa
+                              PRIORITY_REAL, PRIORITY_GEN)
+from repro.core.hierarchy import HierarchyCfg, root_task, expand  # noqa
+from repro.core.spec import StudySpec, Step  # noqa
+from repro.core.runtime import MerlinRuntime  # noqa
+from repro.core.worker import Worker, WorkerPool  # noqa
+from repro.core.bundler import Bundler, missing_samples  # noqa
+from repro.core.ensemble import EnsembleExecutor  # noqa

@@ -1,0 +1,201 @@
+"""The iterative surrogate-optimization archetype (paper Sec. 3.2).
+
+Loop per iteration, exactly the HYDRA capsule-robustness workflow:
+  simulate batch -> post-process -> collect features -> train ML surrogate
+  -> constrained acquisition (maximize expected objective under constraints,
+  with robustness samples around candidates) -> choose next batch
+  (1/3 around best observed, 1/3 at predicted optimum, 1/3 on the line
+  between them — the paper's 128/128/128 split) -> re-enqueue via a worker
+  call back into ``merlin run`` (dynamic workflow).
+
+The surrogate is a small JAX MLP ensemble (deep ensembles for cheap
+uncertainty); the simulator is any vmappable f(u, rng)->dict (JAG here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bundler import Bundler
+from repro.core.ensemble import EnsembleExecutor
+from repro.core.runtime import MerlinRuntime
+from repro.core.spec import Step, StudySpec
+
+
+# ---------------------------------------------------------------------------
+# MLP surrogate (deep ensemble)
+# ---------------------------------------------------------------------------
+
+def _mlp_init(rng, dims):
+    params = []
+    for i in range(len(dims) - 1):
+        rng, k = jax.random.split(rng)
+        w = jax.random.normal(k, (dims[i], dims[i + 1])) * (2.0 / dims[i]) ** 0.5
+        params.append({"w": w, "b": jnp.zeros(dims[i + 1])})
+    return params
+
+
+def _mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.gelu(x)
+    return x[..., 0]
+
+
+@dataclasses.dataclass
+class Surrogate:
+    params_list: List
+
+    def predict(self, X) -> Tuple[np.ndarray, np.ndarray]:
+        preds = jnp.stack([_mlp_apply(p, jnp.asarray(X))
+                           for p in self.params_list])
+        return np.asarray(preds.mean(0)), np.asarray(preds.std(0))
+
+
+def train_surrogate(X: np.ndarray, y: np.ndarray, n_members: int = 3,
+                    hidden: int = 64, steps: int = 300, lr: float = 3e-3,
+                    seed: int = 0) -> Surrogate:
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+
+    def loss_fn(p):
+        return jnp.mean((_mlp_apply(p, X) - y) ** 2)
+
+    members = []
+    for m in range(n_members):
+        rng = jax.random.PRNGKey(seed * 131 + m)
+        p = _mlp_init(rng, [X.shape[1], hidden, hidden, 1])
+        # simple Adam
+        mom = jax.tree.map(jnp.zeros_like, p)
+        vel = jax.tree.map(jnp.zeros_like, p)
+
+        @jax.jit
+        def step(p, mom, vel, i):
+            g = jax.grad(loss_fn)(p)
+            mom = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, mom, g)
+            vel = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ ** 2, vel, g)
+            p = jax.tree.map(
+                lambda p_, m_, v_: p_ - lr * m_ / (jnp.sqrt(v_) + 1e-8),
+                p, mom, vel)
+            return p, mom, vel
+
+        for i in range(steps):
+            p, mom, vel = step(p, mom, vel, i)
+        members.append(p)
+    return Surrogate(members)
+
+
+# ---------------------------------------------------------------------------
+# acquisition
+# ---------------------------------------------------------------------------
+
+def robust_objective(sur: Surrogate, X: np.ndarray, n_perturb: int = 16,
+                     radius: float = 0.02, seed: int = 0) -> np.ndarray:
+    """Expected objective under manufacturing-tolerance perturbations
+    (the paper's 'expected yield under random draws about a design')."""
+    rng = np.random.default_rng(seed)
+    Xp = X[:, None, :] + rng.normal(0, radius, (len(X), n_perturb, X.shape[1]))
+    mu, _ = sur.predict(np.clip(Xp, 0, 1).reshape(-1, X.shape[1]))
+    return mu.reshape(len(X), n_perturb).mean(1)
+
+
+def propose_batch(sur_obj: Surrogate, sur_con: Optional[Surrogate],
+                  X_seen: np.ndarray, y_seen: np.ndarray, n: int,
+                  dims: int, con_max: float = np.inf, seed: int = 0
+                  ) -> np.ndarray:
+    """The paper's 3-way split: around best / at predicted opt / connecting."""
+    rng = np.random.default_rng(seed)
+    best = X_seen[int(np.argmax(y_seen))]
+    # predicted constrained optimum via random search on the surrogate
+    cand = rng.uniform(0, 1, (4096, dims)).astype(np.float32)
+    obj = robust_objective(sur_obj, cand, seed=seed)
+    if sur_con is not None:
+        cmu, _ = sur_con.predict(cand)
+        obj = np.where(cmu <= con_max, obj, -np.inf)
+    pred_opt = cand[int(np.argmax(obj))]
+    k = n // 3
+    around_best = np.clip(best + rng.normal(0, 0.04, (k, dims)), 0, 1)
+    around_opt = np.clip(pred_opt + rng.normal(0, 0.04, (k, dims)), 0, 1)
+    t = rng.uniform(0, 1, (n - 2 * k, 1))
+    line = np.clip(best * (1 - t) + pred_opt * t
+                   + rng.normal(0, 0.02, (n - 2 * k, dims)), 0, 1)
+    return np.concatenate([around_best, around_opt, line]).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# the full loop as a dynamic Merlin study
+# ---------------------------------------------------------------------------
+
+class OptimizationLoop:
+    """Self-re-enqueueing optimization chain (Fig. 8)."""
+
+    def __init__(self, runtime: MerlinRuntime, simulator: Callable,
+                 objective_key: str = "yield", constraint_key: str = "velocity",
+                 constraint_max: float = 360.0, dims: int = 5,
+                 batch_per_iter: int = 48, max_iters: int = 3, seed: int = 0):
+        self.rt = runtime
+        self.dims = dims
+        self.batch = batch_per_iter
+        self.max_iters = max_iters
+        self.obj_key = objective_key
+        self.con_key = constraint_key
+        self.con_max = constraint_max
+        self.seed = seed
+        self.history: List[Dict] = []
+        self.simulator = simulator
+        self.root = os.path.join(runtime.workspace, "opt_results")
+        # all-iteration view (load_all/crawl walk recursively)
+        self.bundler = Bundler(self.root)
+        runtime.register("opt_simulate", self._sim_step)
+        runtime.register("opt_analyze", self._analyze_step)
+
+    def _sim_step(self, ctx) -> None:
+        # one bundler sub-tree per iteration: sample ids restart at 0 each
+        # iteration, so results must not collide across iterations
+        it = int(ctx.variables["ITER"])
+        b = Bundler(os.path.join(self.root, f"iter{it:03d}"))
+        EnsembleExecutor(self.simulator, b).run_bundle(
+            ctx.lo, ctx.hi, ctx.sample_block)
+
+    def _spec(self, iteration: int) -> StudySpec:
+        return StudySpec(
+            name=f"opt-iter{iteration}",
+            steps=[
+                Step(name="simulate", fn="opt_simulate"),
+                Step(name="analyze", fn="opt_analyze",
+                     depends=("simulate_*",), over_samples=False),
+            ],
+            variables={"ITER": iteration})
+
+    def start(self, rng: Optional[np.random.Generator] = None) -> str:
+        rng = rng or np.random.default_rng(self.seed)
+        X0 = rng.uniform(0, 1, (self.batch, self.dims)).astype(np.float32)
+        return self.rt.run(self._spec(0), X0)
+
+    def _analyze_step(self, ctx) -> None:
+        """Funnel: train surrogates, log progress, launch the next iteration
+        from inside a worker task (the dynamic re-enqueue of Sec. 3.2)."""
+        it = int(ctx.variables["ITER"])
+        data = self.bundler.load_all()
+        ok = np.isfinite(data[self.obj_key])
+        X = data["inputs"][ok]
+        y = np.log10(np.maximum(data[self.obj_key][ok], 1e10))
+        y = (y - y.min()) / max(y.max() - y.min(), 1e-9)
+        c = data[self.con_key][ok]
+        sur = train_surrogate(X, y, seed=self.seed + it)
+        sur_c = train_surrogate(X, c / max(abs(c).max(), 1e-9),
+                                seed=self.seed + 71 + it)
+        self.history.append({
+            "iter": it, "n": int(ok.sum()),
+            "best": float(np.nanmax(data[self.obj_key]))})
+        if it + 1 < self.max_iters:
+            Xn = propose_batch(sur, sur_c, X, y, self.batch, self.dims,
+                               con_max=self.con_max / max(abs(c).max(), 1e-9),
+                               seed=self.seed + it)
+            ctx.runtime.run(self._spec(it + 1), Xn)

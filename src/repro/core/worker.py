@@ -1,0 +1,130 @@
+"""Workers (``merlin run-workers``): the consumer side of the model.
+
+Workers are deliberately decoupled from the work (paper Sec. 2.2 / Fig. 6):
+they attach to a broker, lease whatever is queued — generation tasks get
+expanded, real tasks get executed — and can join or leave at any time
+("surge computing": ``WorkerPool.scale()`` mid-study adds capacity exactly
+like a new batch allocation attaching to the Rabbit server).
+
+Fault injection (``failure_rate``) and the broker's visibility timeout
+together reproduce the paper's resilience story: a worker that "dies"
+mid-task simply never acks; the task is redelivered and, because real-task
+execution is idempotent (journal/once markers), re-running is safe.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import List, Optional
+
+from repro.core import hierarchy as H
+from repro.core.queue import Lease, Task
+from repro.core.runtime import MerlinRuntime
+
+
+class WorkerError(RuntimeError):
+    pass
+
+
+class Worker(threading.Thread):
+    def __init__(self, runtime: MerlinRuntime, worker_id: str,
+                 stop_event: threading.Event, failure_rate: float = 0.0,
+                 seed: int = 0, poll_timeout: float = 0.05):
+        super().__init__(daemon=True, name=f"merlin-worker-{worker_id}")
+        self.runtime = runtime
+        self.worker_id = worker_id
+        self.stop_event = stop_event
+        self.failure_rate = failure_rate
+        self.rng = random.Random(seed)
+        self.poll_timeout = poll_timeout
+        self.stats = {"gen": 0, "real": 0, "failed": 0}
+        self.first_real_at: Optional[float] = None
+
+    def run(self) -> None:
+        broker = self.runtime.broker
+        while not self.stop_event.is_set():
+            lease = broker.get(timeout=self.poll_timeout)
+            if lease is None:
+                continue
+            try:
+                self._dispatch(lease.task)
+            except Exception:
+                self.stats["failed"] += 1
+                self.runtime.journal.append(
+                    {"ev": "task_failed", "task": lease.task.id,
+                     "kind": lease.task.kind,
+                     "payload": {k: v for k, v in lease.task.payload.items()
+                                 if k != "spec"}})
+                if lease.task.retries < 3:
+                    broker.nack(lease.tag)
+                else:
+                    broker.ack(lease.tag)  # poison: give up, leave to crawler
+                continue
+            broker.ack(lease.tag)
+
+    def _dispatch(self, task: Task) -> None:
+        # injected failure: worker "dies" on this task (no ack, no effect)
+        if self.failure_rate and self.rng.random() < self.failure_rate:
+            raise WorkerError("injected failure")
+        if task.kind == "gen":
+            children = H.expand(task)
+            self.runtime.broker.put_many(children)
+            self.stats["gen"] += 1
+        elif task.kind == "real":
+            if self.first_real_at is None:
+                self.first_real_at = time.monotonic()
+            self.runtime.execute_real(task)
+            self.stats["real"] += 1
+        else:
+            raise WorkerError(f"unknown task kind {task.kind}")
+
+
+class WorkerPool:
+    """An elastic pool of worker threads sharing one broker."""
+
+    def __init__(self, runtime: MerlinRuntime, n_workers: int = 2,
+                 failure_rate: float = 0.0, seed: int = 0):
+        self.runtime = runtime
+        self.stop_event = threading.Event()
+        self.failure_rate = failure_rate
+        self.seed = seed
+        self.workers: List[Worker] = []
+        self.scale(n_workers)
+
+    def scale(self, n_more: int) -> None:
+        """Surge: attach n_more workers to the running study."""
+        base = len(self.workers)
+        for i in range(n_more):
+            w = Worker(self.runtime, f"w{base + i}", self.stop_event,
+                       failure_rate=self.failure_rate,
+                       seed=self.seed + base + i)
+            w.start()
+            self.workers.append(w)
+
+    def drain(self, timeout: float = 120.0, poll: float = 0.02) -> bool:
+        """Wait until the broker is idle (queue empty, nothing in flight)."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.runtime.broker.idle():
+                return True
+            time.sleep(poll)
+        return False
+
+    def shutdown(self) -> None:
+        self.stop_event.set()
+        for w in self.workers:
+            w.join(timeout=5.0)
+
+    def stats(self) -> dict:
+        agg = {"gen": 0, "real": 0, "failed": 0}
+        for w in self.workers:
+            for k in agg:
+                agg[k] += w.stats[k]
+        return agg
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticTokens, ensemble_token_stream, regression_dataset  # noqa

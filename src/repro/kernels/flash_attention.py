@@ -1,0 +1,118 @@
+"""Pallas TPU flash attention.
+
+Block-tiled online-softmax attention with causal masking, sliding windows
+(gemma2 local layers), logit soft-capping (gemma2) and GQA (kv head =
+q head // group).  The grid is (batch, q_head, q_blocks, kv_blocks) with the
+KV dimension innermost (sequential on TPU), carrying the running max /
+normalizer / accumulator in VMEM scratch — the classic flash schedule, with
+MXU-aligned (block_q x head_dim) @ (head_dim x block_k) tiles.
+
+Validated in interpret mode against kernels/ref.py (tests/test_kernels_*).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, softcap_val, window, q_pos0, kv_len, block_q,
+            block_k):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+    logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+    if softcap_val is not None:
+        logits = softcap_val * jnp.tanh(logits / softcap_val)
+
+    qpos = q_pos0 + iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = kpos < kv_len
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())))
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "softcap_val", "window", "q_pos0",
+                     "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, scale=None, softcap_val=None,
+                    window=None, q_pos0=0, block_q=128, block_k=128,
+                    interpret=False):
+    """q: (B,S,H,D); k,v: (B,T,KV,D) -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bk) * bk
+    qt = jnp.moveaxis(q, 2, 1)  # (B,H,S,D)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if Sp != S:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+
+    grid = (B, H, Sp // bq, Tp // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          softcap_val=softcap_val, window=window,
+                          q_pos0=q_pos0, kv_len=T, block_q=bq, block_k=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :S]
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,117 @@
+"""jit'd dispatching wrappers around the Pallas kernels.
+
+Dispatch policy (``use_pallas``):
+  * ``"auto"``      — Pallas kernel on TPU, chunked-jnp reference elsewhere
+                      (CPU dry-run / tests / CI).
+  * ``"never"``     — always the reference path.
+  * ``"interpret"`` — Pallas kernel in interpret mode (kernel-correctness
+                      tests on CPU).
+
+The reference paths are flash/chunked implementations with the same
+block-streaming memory behaviour as the kernels, so the dry-run HLO is
+representative of the target algorithm, not of a naive O(S^2) fallback.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _mode(use_pallas: str) -> str:
+    if use_pallas == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    if use_pallas == "interpret":
+        return "interpret"
+    return "ref"
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, softcap_val=None,
+                    window=None, q_pos0=0, use_pallas="auto", block_q=128,
+                    block_k=128):
+    mode = _mode(use_pallas)
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import flash_attention as fak
+        return fak.flash_attention(
+            q, k, v, causal=causal, scale=scale, softcap_val=softcap_val,
+            window=window, q_pos0=q_pos0, block_q=block_q, block_k=block_k,
+            interpret=(mode == "interpret"))
+    return ref.flash_attention_ref(
+        q, k, v, causal=causal, scale=scale, softcap_val=softcap_val,
+        window=window, q_pos0=q_pos0)
+
+
+def decode_attention(q, ck, cv, *, kv_len, scale=None, softcap_val=None,
+                     window=None):
+    return ref.decode_attention_ref(
+        q, ck, cv, kv_len=kv_len, scale=scale, softcap_val=softcap_val,
+        window=window)
+
+
+def _pad_seq(arrs, seq_axis, chunk):
+    """Pad each array along seq_axis to a multiple of chunk with zeros."""
+    import jax.numpy as jnp
+    S = arrs[0].shape[seq_axis]
+    Sp = -(-S // chunk) * chunk
+    if Sp == S:
+        return arrs, S
+    out = []
+    for a in arrs:
+        pad = [(0, 0)] * a.ndim
+        pad[seq_axis] = (0, Sp - S)
+        out.append(jnp.pad(a, pad))
+    return out, S
+
+
+def ssd_scan(x, dt, A, B_, C, *, chunk=128, use_pallas="auto"):
+    mode = _mode(use_pallas)
+    chunk = min(chunk, x.shape[1])
+    # zero-pad ragged sequences: x=0, dt=0 contribute nothing to the state
+    (x, dt, B_, C), S = _pad_seq((x, dt, B_, C), 1, chunk)
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import ssd_scan as ssdk
+        y = ssdk.ssd_scan(x, dt, A, B_, C, chunk=chunk,
+                          interpret=(mode == "interpret"))
+    else:
+        y = ref.ssd_chunked_ref(x, dt, A, B_, C, chunk=chunk)
+    return y[:, :S]
+
+
+def ssd_decode(h, x, dt, A, B_, C):
+    return ref.ssd_decode_ref(h, x, dt, A, B_, C)
+
+
+def wkv6_scan(r, k, v, w, u, *, chunk=128, use_pallas="auto", impl="chunked",
+              subchunk=16):
+    import jax.numpy as jnp
+    mode = _mode(use_pallas)
+    chunk = min(chunk, r.shape[1])
+    # pad ragged sequences: r/k/v = 0 and w = 1 (log-decay 0) are inert
+    (r, k, v), S = _pad_seq((r, k, v), 1, chunk)
+    if w.shape[1] != r.shape[1]:
+        pad = [(0, 0)] * w.ndim
+        pad[1] = (0, r.shape[1] - w.shape[1])
+        w = jnp.pad(w, pad, constant_values=1.0)
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import wkv6_scan as wkvk
+        y = wkvk.wkv6_scan(r, k, v, w, u, chunk=chunk,
+                           interpret=(mode == "interpret"))
+    elif impl == "blocked":
+        sub = min(subchunk, chunk)
+        while chunk % sub:  # snap to a divisor of the chunk
+            sub -= 1
+        y = ref.wkv6_blocked_ref(r, k, v, w, u, chunk=chunk, subchunk=sub)
+    else:
+        y = ref.wkv6_chunked_ref(r, k, v, w, u, chunk=chunk)
+    return y[:, :S]
+
+
+def wkv6_decode(state, r, k, v, w, u):
+    return ref.wkv6_decode_ref(state, r, k, v, w, u)

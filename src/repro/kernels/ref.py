@@ -1,0 +1,420 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+``flash_attention_ref`` is also the production fallback path on non-TPU
+backends (and the dry-run lowering path): it is chunked over KV blocks with
+an online softmax, so its memory behaviour is flash-like (O(S·block) rather
+than O(S^2)) — important for the 32k/500k assigned shapes.
+
+``naive_attention`` is the tiny-scale golden oracle used by kernel tests.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _apply_softcap(logits, cap):
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def naive_attention(q, k, v, *, causal=True, scale=None, softcap_val=None,
+                    window=None, q_pos0=0):
+    """O(S^2)-memory oracle. q: (B,S,H,D), k/v: (B,T,KV,D)."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qf = q.reshape(B, S, KV, g, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qf, kf) * scale
+    logits = _apply_softcap(logits, softcap_val)
+    qpos = (jnp.arange(S) + q_pos0)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "softcap_val", "window", "q_pos0", "block_k"))
+def flash_attention_ref(q, k, v, *, causal=True, scale=None, softcap_val=None,
+                        window=None, q_pos0=0, block_k=1024):
+    """Flash-style chunked attention (online softmax over KV blocks)."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bk = min(block_k, T)
+    n_blocks = (T + bk - 1) // bk
+    Tp = n_blocks * bk
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_blocks, bk, KV, D)
+    vb = v.reshape(B, n_blocks, bk, KV, D)
+    qf = (q.reshape(B, S, KV, g, D) * scale).astype(jnp.float32)
+    qpos = (jnp.arange(S) + q_pos0)[:, None]
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kc, vc, start = blk
+        logits = jnp.einsum("bskgd,btkd->bkgst", qf, kc.astype(jnp.float32))
+        logits = _apply_softcap(logits, softcap_val)
+        kpos = start + jnp.arange(bk)[None, :]
+        mask = kpos < T
+        if causal:
+            mask = mask & (qpos >= kpos)
+        if window is not None:
+            mask = mask & ((qpos - kpos) < window)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, g, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, g, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, g, S, D), jnp.float32)
+    starts = jnp.arange(n_blocks) * bk
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out.reshape(B, KV * g, S, D), 1, 2)  # (B,S,H,D) w/ H=KV*g
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, ck, cv, *, kv_len, scale=None, softcap_val=None,
+                         window=None):
+    """Single-token decode attention over a (B, T, KV, D) cache.
+
+    kv_len is the number of valid cache entries (the new token is at
+    kv_len-1).  Memory is O(T) per head — fine up to 500k.
+    """
+    B, S, H, D = q.shape
+    assert S == 1
+    T, KV = ck.shape[1], ck.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qf = q.reshape(B, KV, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qf, ck.astype(jnp.float32)) * scale
+    logits = _apply_softcap(logits, softcap_val)
+    t = jnp.arange(T)[None, None, None, :]
+    mask = t < kv_len
+    if window is not None:
+        mask = mask & (t >= kv_len - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, cv.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD oracle
+# ---------------------------------------------------------------------------
+
+def ssd_scan_ref(x, dt, A, B_, C, *, chunk=None):
+    """Mamba2 state-space dual, sequential-over-time oracle.
+
+    x:  (B, S, H, P)   inputs per head        (P = head dim)
+    dt: (B, S, H)      softplus-ed step sizes (>0)
+    A:  (H,)           negative decay rates   (A < 0)
+    B_: (B, S, N)      input->state projection (shared across heads)
+    C:  (B, S, N)      state->output projection
+    returns y: (B, S, H, P)
+    state h: (B, H, P, N);  h_t = exp(A*dt) h_{t-1} + dt * x_t B_t^T
+             y_t = h_t C_t
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(Af[None, :, None, None] * dtt[:, :, None, None])
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], Bt)
+        h = h * decay + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+                                    jnp.moveaxis(B_.astype(jnp.float32), 1, 0),
+                                    jnp.moveaxis(C.astype(jnp.float32), 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def ssd_chunked_ref(x, dt, A, B_, C, *, chunk=64):
+    """Chunked SSD (the algorithm the Pallas kernel implements): intra-chunk
+    quadratic attention-like term + inter-chunk state recurrence."""
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    xf = x.astype(jnp.float32).reshape(Bb, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bb, nc, chunk, H)
+    Bf = B_.astype(jnp.float32).reshape(Bb, nc, chunk, N)
+    Cf = C.astype(jnp.float32).reshape(Bb, nc, chunk, N)
+    Af = A.astype(jnp.float32)
+
+    # per-position decay exponent within chunk: a_t = A*dt_t ; cumsum
+    a = Af[None, None, None, :] * dtf  # (B,nc,L,H)
+    acs = jnp.cumsum(a, axis=2)
+
+    # intra-chunk: y_intra[t] = C_t . sum_{s<=t} exp(acs_t - acs_s) dt_s x_s B_s^T
+    Lmask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    acs_h = acs.transpose(0, 1, 3, 2)  # (B,nc,H,L)
+    diff = acs_h[..., :, None] - acs_h[..., None, :]  # (B,nc,H,t,s)
+    decay_ts = jnp.exp(jnp.where(Lmask[None, None, None], diff, -jnp.inf))
+    cb = jnp.einsum("bctn,bcsn->bcts", Cf, Bf)  # (B,nc,t,s)
+    w = cb[:, :, None] * decay_ts
+    y_intra = jnp.einsum("bchts,bcsh,bcshp->bcthp", w, dtf, xf)
+
+    # chunk summary state: G_c = sum_s exp(acs_L - acs_s) dt_s x_s B_s^T
+    tail = jnp.exp(acs[:, :, -1:, :] - acs)  # (B,nc,L,H)
+    G = jnp.einsum("bcsh,bcshp,bcsn->bchpn", tail * dtf, xf, Bf)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(acs[:, :, -1, :])  # (B,nc,H) total decay of a chunk
+
+    def step(h, inp):
+        Gc, dc = inp
+        h_out = h  # state entering this chunk
+        h = h * dc[..., None, None] + Gc
+        return h, h_out
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    _, h_in = jax.lax.scan(step, h0, (jnp.moveaxis(G, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,P,N) state entering each chunk
+
+    # inter-chunk contribution: y_inter[t] = C_t exp(acs_t) h_in
+    y_inter = jnp.einsum("bcth,bctn,bchpn->bcthp", jnp.exp(acs), Cf, h_in)
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y.astype(x.dtype)
+
+
+def ssd_decode_ref(h, x, dt, A, B_, C):
+    """One decode step. h: (B,H,P,N); x: (B,H,P); dt: (B,H); B_,C: (B,N)."""
+    decay = jnp.exp(A.astype(jnp.float32)[None, :, None, None] * dt[:, :, None, None])
+    h = h * decay + jnp.einsum("bhp,bn->bhpn", x * dt[..., None], B_)
+    y = jnp.einsum("bhpn,bn->bhp", h, C)
+    return h, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) WKV oracle
+# ---------------------------------------------------------------------------
+
+def wkv6_scan_ref(r, k, v, w, u):
+    """RWKV6 time-mix core.
+
+    r,k,v: (B, S, H, D);  w: (B, S, H, D) per-step decay in (0,1);
+    u: (H, D) bonus for the current token.
+    state S: (B, H, D, D);  out_t = r_t . (S + u * k_t v_t^T)
+             S <- diag(w_t) S + k_t v_t^T
+    """
+    Bb, S, H, D = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf, uf = w.astype(jnp.float32), u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        out = jnp.einsum("bhd,bhde->bhe", rt, state + uf[None, :, :, None] * kv)
+        state = state * wt[..., None] + kv
+        return state, out
+
+    s0 = jnp.zeros((Bb, H, D, D), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, tuple(
+        jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf)))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)
+
+
+def wkv6_chunked_ref(r, k, v, w, u, *, chunk=64):
+    """Chunked WKV6 (the algorithm the Pallas kernel implements).
+
+    Within a chunk the (t,s) interaction matrix is computed with per-channel
+    log-decay differences; across chunks a (D,D) state is carried.
+    decay(t,s) = prod_{j=s+1..t-1} w_j applied to k_s v_s^T for s < t;
+    the current token contributes via the bonus u instead.
+    """
+    Bb, S, H, D = r.shape
+    assert S % chunk == 0
+    nc = S // chunk
+    rf = r.astype(jnp.float32).reshape(Bb, nc, chunk, H, D)
+    kf = k.astype(jnp.float32).reshape(Bb, nc, chunk, H, D)
+    vf = v.astype(jnp.float32).reshape(Bb, nc, chunk, H, D)
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-12, 1.0)).reshape(Bb, nc, chunk, H, D)
+    uf = u.astype(jnp.float32)
+
+    ecl = jnp.cumsum(lw, axis=2) - lw  # exclusive cumsum over time-in-chunk
+    # intra-chunk strictly-lower-triangular interactions
+    smask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # s < t
+    # exponent(t,s,d) = ecl_t - ecl_s - lw_s
+    e_t = ecl[:, :, :, None]          # (B,nc,t,1,H,D)
+    e_s = (ecl + lw)[:, :, None]      # (B,nc,1,s,H,D)
+    expo = jnp.where(smask[None, None, :, :, None, None], e_t - e_s, -jnp.inf)
+    att = jnp.einsum("bcthd,bctshd,bcshd->bctsh", rf, jnp.exp(expo), kf)
+    y_intra = jnp.einsum("bctsh,bcshe->bcthe", att, vf)
+    # current-token bonus: out[t,e] = (sum_d r_t[d] u[d] k_t[d]) v_t[e]
+    bonus = jnp.einsum("bcthd,hd,bcthd->bcth", rf, uf, kf)
+    y_bonus = bonus[..., None] * vf
+
+    # inter-chunk: carry (D,D) state; entering-state contribution decays by ecl_t
+    # chunk summary: G = sum_s exp(cl_L - cl_s) k_s v_s^T  where cl = ecl + lw
+    cl = ecl + lw
+    tailw = jnp.exp(cl[:, :, -1:, :, :] - cl)  # (B,nc,L,H,D)
+    G = jnp.einsum("bcshd,bcshe->bchde", tailw * kf, vf)
+    chunk_decay = jnp.exp(cl[:, :, -1])  # (B,nc,H,D)
+
+    def step(hst, inp):
+        Gc, dc = inp
+        h_out = hst
+        hst = hst * dc[..., None] + Gc
+        return hst, h_out
+
+    h0 = jnp.zeros((Bb, H, D, D), jnp.float32)
+    _, h_in = jax.lax.scan(step, h0, (jnp.moveaxis(G, 1, 0),
+                                      jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,D,D)
+    y_inter = jnp.einsum("bcthd,bchde->bcthe", rf * jnp.exp(ecl), h_in)
+
+    y = (y_intra + y_bonus + y_inter).reshape(Bb, S, H, D)
+    return y.astype(r.dtype)
+
+
+def wkv6_blocked_ref(r, k, v, w, u, *, chunk=64, subchunk=16):
+    """Blocked WKV6 (§Perf optimization; see EXPERIMENTS.md).
+
+    The straightforward chunked form materializes a (t, s, D) decay tensor
+    per chunk — O(S·L·D) bytes, the dominant memory-roofline term for rwkv6.
+    Here the chunk is split into sub-blocks: *off-diagonal* (t-block,
+    s-block) interactions factor per channel as
+
+        exp(ecl_t - cl_s) = exp(ecl_t - c_j) * exp(c_j - cl_s),
+
+    with c_j = cl at the *end* of s-block j, so both exponents are <= 0 for
+    t-blocks after j (safe in fp32; exponents clamped at +-60 as a belt) and
+    the D-contraction becomes an MXU matmul with no (t,s,D) intermediate.
+    Only the small diagonal (subchunk x subchunk x D) blocks keep the exact
+    pairwise form.  Math is identical to wkv6_scan_ref; tests compare both.
+    """
+    Bb, S, H, D = r.shape
+    assert S % chunk == 0 and chunk % subchunk == 0
+    nc, nb = S // chunk, chunk // subchunk
+    L, Ls = chunk, subchunk
+    # mixed precision (§Perf A4): the per-channel log-decay cumsum and the
+    # recurrent state stay fp32 (accumulation accuracy); every (S x D)-sized
+    # elementwise factor and matmul operand is bf16 — these tensors dominate
+    # the memory roofline of the layer.
+    cdt = r.dtype if jnp.issubdtype(r.dtype, jnp.floating) else jnp.bfloat16
+    rf = r.astype(cdt).reshape(Bb, nc, nb, Ls, H, D)
+    kf = k.astype(cdt).reshape(Bb, nc, nb, Ls, H, D)
+    vf = v.astype(cdt).reshape(Bb, nc, nb, Ls, H, D)
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-12, 1.0)) \
+        .reshape(Bb, nc, nb, Ls, H, D)
+    uf = u.astype(cdt)
+    f32 = jnp.float32
+
+    # per-chunk cumulative log decays (over the flattened chunk time axis)
+    lw_c = lw.reshape(Bb, nc, L, H, D)
+    cl = jnp.cumsum(lw_c, axis=2)               # inclusive, fp32
+    ecl = cl - lw_c                              # exclusive
+    cl_b = cl.reshape(Bb, nc, nb, Ls, H, D)
+    ecl_b = ecl.reshape(Bb, nc, nb, Ls, H, D)
+    cj = cl_b[:, :, :, -1]                       # (B,nc,nb,H,D): block-end
+
+    # --- diagonal sub-blocks: exact pairwise form on (Ls, Ls, D) ----------
+    smask = jnp.tril(jnp.ones((Ls, Ls), bool), k=-1)
+    e_t = ecl_b[:, :, :, :, None]
+    e_s = (cl_b)[:, :, :, None, :]
+    expo = jnp.where(smask[None, None, None, :, :, None, None],
+                     e_t - e_s, -jnp.inf)
+    att_d = jnp.einsum("bcnthd,bcntshd,bcnshd->bcntsh", rf,
+                       jnp.exp(expo).astype(cdt), kf).astype(cdt)
+    y = jnp.einsum("bcntsh,bcnshe->bcnthe", att_d, vf).astype(f32)
+
+    # --- off-diagonal: factored through block-end reference c_j -----------
+    # q~[t] = r_t * exp(ecl_t - c_j)  ;  k~[s] = k_s * exp(c_j - cl_s)
+    # both exponents <= 0 for t-block > s-block; clamp as safety
+    ke = kf * jnp.exp(jnp.clip(cj[:, :, :, None] - cl_b, -60.0, 60.0)).astype(cdt)
+    kv = jnp.einsum("bcnshd,bcnshe->bcnhde", ke, vf
+                    ).astype(f32)  # per-block (D,E) states (sum over Ls=16)
+    # prefix-accumulate block states, decayed to each later block's
+    # reference: state entering block i (ref c_{i-1}) = sum_{j<i}
+    # decay(c_{i-1}, c_j) kv_j.  nb is small (e.g. 4): unrolled python loop.
+    state = jnp.zeros((Bb, nc, H, D, D), f32)
+    ref = None
+    for i in range(nb):
+        if i > 0:
+            # y_inter for block i from accumulated state (ref c_{i-1})
+            qi = rf[:, :, i] * jnp.exp(
+                jnp.clip(ecl_b[:, :, i] - ref[:, :, None], -120.0, 0.0)
+            ).astype(cdt)
+            y = y.at[:, :, i].add(
+                jnp.einsum("bcthd,bchde->bcthe", qi,
+                           state.astype(cdt)).astype(f32))
+        # fold block i into the state, re-referenced to c_i
+        if i == 0:
+            state = kv[:, :, 0]
+        else:
+            decay = jnp.exp(jnp.clip(cj[:, :, i] - ref, -120.0, 0.0))
+            state = state * decay[..., None] + kv[:, :, i]
+        ref = cj[:, :, i]
+
+    # --- current-token bonus ----------------------------------------------
+    bonus = jnp.einsum("bcnthd,hd,bcnthd->bcnth", rf, uf, kf).astype(f32)
+    y = y + bonus[..., None] * vf.astype(f32)
+
+    # --- inter-chunk: carry full (D,D) state across chunks ------------------
+    kf_c = kf.reshape(Bb, nc, L, H, D)
+    vf_c = vf.reshape(Bb, nc, L, H, D)
+    tailw = jnp.exp(jnp.clip(cl[:, :, -1:, :, :] - cl, -120.0, 0.0)).astype(cdt)
+    G = jnp.einsum("bcshd,bcshe->bchde", tailw * kf_c, vf_c).astype(f32)
+    chunk_decay = jnp.exp(cl[:, :, -1])
+
+    def step(hst, inp):
+        Gc, dc = inp
+        h_out = hst
+        hst = hst * dc[..., None] + Gc
+        return hst, h_out
+
+    h0 = jnp.zeros((Bb, H, D, D), f32)
+    _, h_in = jax.lax.scan(step, h0, (jnp.moveaxis(G, 1, 0),
+                                      jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)
+    y_inter = jnp.einsum("bcthd,bchde->bcthe",
+                         rf.reshape(Bb, nc, L, H, D)
+                         * jnp.exp(ecl).astype(cdt),
+                         h_in.astype(cdt)).astype(f32)
+    y = y.reshape(Bb, nc, L, H, D) + y_inter
+    return y.reshape(Bb, S, H, D).astype(r.dtype)
+
+
+def wkv6_decode_ref(state, r, k, v, w, u):
+    """One decode step. state: (B,H,D,D); r,k,v,w: (B,H,D); u: (H,D)."""
+    kv = jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    out = jnp.einsum("bhd,bhde->bhe", r.astype(jnp.float32),
+                     state + u.astype(jnp.float32)[None, :, :, None] * kv)
+    state = state * w.astype(jnp.float32)[..., None] + kv
+    return state, out.astype(r.dtype)

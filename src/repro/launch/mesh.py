@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never
+touches jax device state (device count is locked at first jax init, and
+only launch/dryrun.py is allowed to set the 512-device host-platform flag).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (TPU v5e pod); 2 pods when multi_pod.
+
+    Uses the first prod(shape) devices, so a 512-device dry-run environment
+    can build both the single-pod (256) and multi-pod (512) meshes.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    assert len(devs) >= n, f"need {n} devices, have {len(devs)}"
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (real or forced) host devices exist."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))

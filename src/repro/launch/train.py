@@ -1,0 +1,69 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch jag-surrogate --steps 200
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-27b --reduced --steps 20
+
+Full configs train on the production mesh (real TPUs); on this CPU host use
+--reduced (the smoke-scale config of the same family).  Checkpoint/restart
+is automatic: re-running with the same --workdir resumes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="jag-surrogate")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", default="synthetic",
+                    help="synthetic | path to a bundler root of JAG results")
+    args = ap.parse_args(argv)
+
+    from repro.configs import registry
+    from repro.data.pipeline import SyntheticTokens, ensemble_token_stream
+    from repro.train.trainer import Trainer
+
+    cfg = (registry.reduced_config(args.arch) if args.reduced
+           else registry.get_config(args.arch))
+    extras = {}
+    if cfg.n_enc_layers:
+        extras["enc_embed"] = ((args.batch, cfg.enc_len, cfg.d_model), "bfloat16")
+    if cfg.n_img_tokens:
+        extras["img_embed"] = ((args.batch, cfg.n_img_tokens, cfg.d_vision),
+                               "bfloat16")
+    if args.data == "synthetic":
+        data = iter(SyntheticTokens(args.batch, args.seq, cfg.vocab_size,
+                                    extras=extras))
+    else:
+        from repro.core.bundler import Bundler
+        archive = Bundler(args.data).load_all()
+        data = ensemble_token_stream(
+            archive, ["yield", "tion", "velocity", "bang_time"],
+            batch=args.batch, vocab=cfg.vocab_size)
+
+    tr = Trainer(cfg, args.workdir, data, lr=args.lr,
+                 ckpt_every=args.ckpt_every)
+    t0 = time.time()
+    state = tr.train(args.steps)
+    dt = time.time() - t0
+    done = len(tr.history)
+    print(json.dumps({
+        "arch": cfg.arch_id, "steps": int(state.step),
+        "ran_steps": done, "final_loss": tr.history[-1]["loss"] if done else None,
+        "first_loss": tr.history[0]["loss"] if done else None,
+        "wall_s": round(dt, 1), "stragglers": tr.stragglers,
+        "tokens_per_s": round(done * args.batch * args.seq / max(dt, 1e-9)),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,303 @@
+"""Core neural layers: norms, RoPE, MLPs, GQA attention (sliding window /
+softcap / cache), and MLA (DeepSeek multi-head latent attention).
+
+Everything is a pure function over nested-dict params.  Attention's inner
+softmax(QK^T)V runs through :mod:`repro.kernels.ops`, which dispatches to the
+Pallas TPU kernel on TPU and to a flash-style chunked jnp implementation
+elsewhere (identical math; memory-bounded for 32k+ sequences).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.kernels import ops as kops
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(p, x, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta, dim=None):
+    """Apply rotary embeddings.  x: (..., S, H, D); positions: (..., S)."""
+    d = dim if dim is not None else x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:d]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+    if d == x.shape[-1]:
+        return out
+    return jnp.concatenate([out, x[..., d:]], axis=-1)
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_glu_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "wg": dense_init(k2, (d_model, d_ff), d_model, dtype),
+        "wo": dense_init(k3, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def glu_mlp(p, x, cdtype, act=jax.nn.silu):
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(cdtype))
+    g = jnp.einsum("...d,df->...f", x, p["wg"].astype(cdtype))
+    return jnp.einsum("...f,fd->...d", act(g) * h, p["wo"].astype(cdtype))
+
+
+def init_gelu_mlp(key, d_model, d_ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "wo": dense_init(k2, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def gelu_mlp(p, x, cdtype):
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(cdtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(h), p["wo"].astype(cdtype))
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(k1, (d, H * Dh), d, dt),
+        "wk": dense_init(k2, (d, KV * Dh), d, dt),
+        "wv": dense_init(k3, (d, KV * Dh), d, dt),
+        "wo": dense_init(k4, (H * Dh, cfg.d_model), H * Dh, dt),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = init_rmsnorm(Dh, dt)
+        p["knorm"] = init_rmsnorm(Dh, dt)
+    return p
+
+
+def attention(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    *,
+    positions: jnp.ndarray,
+    kv_x: Optional[jnp.ndarray] = None,
+    rope_on: bool = True,
+    return_kv: bool = False,
+):
+    """GQA attention over a full sequence (train / prefill).
+
+    x: (B, S, D).  Cross-attention: kv_x provides the encoder states.
+    Cache handling (decode / rolling windows) lives in models/lm.py.
+    """
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    q = jnp.einsum("bsd,dh->bsh", xc, p["wq"].astype(cdt)).reshape(B, S, H, Dh)
+    src = xc if kv_x is None else kv_x.astype(cdt)
+    Skv = src.shape[1]
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"].astype(cdt)).reshape(B, Skv, KV, Dh)
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"].astype(cdt)).reshape(B, Skv, KV, Dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(p["knorm"], k, cfg.norm_eps)
+    if rope_on and kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    scale = cfg.attn_scale if cfg.attn_scale is not None else 1.0 / math.sqrt(Dh)
+    causal = spec.causal and kv_x is None
+    out = kops.flash_attention(
+        q, k, v, causal=causal, scale=scale, softcap_val=cfg.attn_softcap,
+        window=spec.sliding_window, q_pos0=0, use_pallas=cfg.use_pallas)
+    out = out.reshape(B, S, H * Dh)
+    o = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cdt))
+    if return_kv:
+        return o.astype(x.dtype), k, v
+    return o.astype(x.dtype), None
+
+
+def init_attn_cache(cfg: ModelConfig, batch, max_len, dtype):
+    Dh, KV = cfg.head_dim, cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((batch, max_len, KV, Dh), dtype),
+        "v": jnp.zeros((batch, max_len, KV, Dh), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# quantized-cache helpers (int8 serving caches; §Perf hillclimb C)
+# ---------------------------------------------------------------------------
+
+CACHE_QSCALE = 40.0  # static scale: post-RMSNorm latents / roped keys ~ O(1)
+
+
+def cache_store(x, dtype):
+    if jnp.dtype(dtype) == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) * CACHE_QSCALE),
+                        -127, 127).astype(jnp.int8)
+    return x.astype(dtype)
+
+
+def cache_load(x, cdt):
+    if x.dtype == jnp.int8:
+        return (x.astype(cdt) * (1.0 / CACHE_QSCALE)).astype(cdt)
+    return x.astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    r, dr, dn, dv = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wq": dense_init(ks[0], (d, H * (dn + dr)), d, dt),
+        "wkv_a": dense_init(ks[1], (d, r), d, dt),           # latent down-proj
+        "wk_rope": dense_init(ks[2], (d, dr), d, dt),        # shared rope key
+        "kv_norm": init_rmsnorm(r, dt),
+        "wk_b": dense_init(ks[3], (r, H * dn), r, dt),       # latent -> k_nope
+        "wv_b": dense_init(ks[4], (r, H * dv), r, dt),       # latent -> v
+        "wo": dense_init(ks[5], (H * dv, d), H * dv, dt),
+    }
+
+
+def mla_attention(p, x, cfg: ModelConfig, spec: LayerSpec, *, positions,
+                  cache=None, cache_pos=None):
+    """MLA: queries per-head (nope+rope); K/V reconstructed from a shared
+    latent of rank ``kv_lora_rank``; the cache stores only latent + rope key.
+
+    With ``cfg.mla_absorb`` (decode), the k up-projection is absorbed into the
+    query and attention runs directly in the latent space — the published
+    serving optimization, which we use as a §Perf lever.
+    """
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    r, dr, dn, dv = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    q = jnp.einsum("bsd,dh->bsh", xc, p["wq"].astype(cdt)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    latent = jnp.einsum("bsd,dr->bsr", xc, p["wkv_a"].astype(cdt))
+    latent = rmsnorm(p["kv_norm"], latent, cfg.norm_eps)
+    k_rope = rope(
+        jnp.einsum("bsd,dr->bsr", xc, p["wk_rope"].astype(cdt))[:, :, None, :],
+        positions, cfg.rope_theta)[:, :, 0, :]  # (B,S,dr) shared across heads
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    new_cache = None
+    if cache is not None:
+        cl = jax.lax.dynamic_update_slice(
+            cache["latent"], cache_store(latent, cache["latent"].dtype),
+            (0, cache_pos, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], cache_store(k_rope, cache["k_rope"].dtype),
+            (0, cache_pos, 0))
+        new_cache = {"latent": cl, "k_rope": cr}
+        if S == 1:
+            T = cl.shape[1]
+            mask = (jnp.arange(T) <= cache_pos)[None, None, :]
+            if cfg.mla_absorb:
+                # absorb wk_b into q: q_lat (B,1,H,r) = q_nope @ wk_b^T per head
+                wkb = p["wk_b"].astype(cdt).reshape(r, H, dn)
+                q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wkb)
+                logits = jnp.einsum("bshr,btr->bhst", q_lat, cache_load(cl, cdt))
+                logits += jnp.einsum("bshr,btr->bhst", q_rope, cache_load(cr, cdt))
+                logits = (logits * scale)[:, :, 0, :]  # (B,H,T)
+                logits = jnp.where(mask, logits, -1e30)
+                w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(cdt)
+                ctx_lat = jnp.einsum("bht,btr->bhr", w, cache_load(cl, cdt))
+                wvb = p["wv_b"].astype(cdt).reshape(r, H, dv)
+                out = jnp.einsum("bhr,rhv->bhv", ctx_lat, wvb)[:, None]  # (B,1,H,dv)
+            else:
+                k_nope = jnp.einsum("btr,rh->bth", cache_load(cl, cdt),
+                                    p["wk_b"].astype(cdt)).reshape(B, T, H, dn)
+                vv = jnp.einsum("btr,rh->bth", cache_load(cl, cdt),
+                                p["wv_b"].astype(cdt)).reshape(B, T, H, dv)
+                logits = jnp.einsum("bshn,bthn->bhst", q_nope, k_nope)
+                logits += jnp.einsum("bshr,btr->bhst", q_rope, cache_load(cr, cdt))
+                logits = (logits * scale)[:, :, 0, :]
+                logits = jnp.where(mask, logits, -1e30)
+                w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(cdt)
+                out = jnp.einsum("bht,bthv->bhv", w, vv)[:, None]
+            out = out.reshape(B, 1, H * dv)
+            o = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cdt))
+            return o.astype(x.dtype), new_cache
+
+    # train / prefill: reconstruct full K,V and run flash attention
+    k_nope = jnp.einsum("bsr,rh->bsh", latent, p["wk_b"].astype(cdt)).reshape(B, S, H, dn)
+    vv = jnp.einsum("bsr,rh->bsh", latent, p["wv_b"].astype(cdt)).reshape(B, S, H, dv)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    # pad v to qk dim for the shared kernel, then slice (dv <= dn+dr)
+    v_pad = jnp.pad(vv, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    out = kops.flash_attention(q_full, k_full, v_pad, causal=spec.causal, scale=scale,
+                               use_pallas=cfg.use_pallas)[..., :dv]
+    out = out.reshape(B, S, H * dv)
+    o = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cdt))
+    return o.astype(x.dtype), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch, max_len, dtype):
+    return {
+        "latent": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }

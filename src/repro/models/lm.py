@@ -1,0 +1,513 @@
+"""Unified language-model substrate.
+
+A model is a stack of ``LayerSpec`` entries: an optional unscanned
+``prologue`` (e.g. deepseek's first dense layer) followed by a
+``superblock`` scanned ``n_repeat`` times (keeps HLO/compile time small and
+gives remat a natural boundary).  Layer kinds:
+
+  attn   — GQA self-attention (sliding window / softcap options)
+  mla    — DeepSeek multi-head latent attention
+  mamba2 — Mamba2 SSD block (zamba2)
+  rwkv6  — RWKV6 time-mix + channel-mix
+  xattn  — gated cross-attention to precomputed embeddings (llama-vision)
+  dec    — self-attn + cross-attn + MLP (whisper decoder layer)
+  shared_attn — attention whose *weights live outside the scan* and are
+           shared across all applications (zamba2's shared block); its
+           input is concat(hidden, initial embeddings), as in zamba2.
+
+Decode caches roll: a cache buffer of length L < max_len is written at
+``pos % L`` — this is how hybrid archs (zamba2) keep O(window) attention
+state at 500k context.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rwkv as RW
+from repro.models import ssm as SSM
+from repro.parallel.sharding import constrain
+
+ZERO_AUX = {"moe_lb_loss": 0.0, "moe_z_loss": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, spec: LayerSpec, cfg: ModelConfig):
+    if spec.mlp == "glu":
+        return L.init_glu_mlp(key, cfg.d_model, cfg.d_ff, jnp.dtype(cfg.param_dtype))
+    if spec.mlp == "gelu_mlp":
+        return L.init_gelu_mlp(key, cfg.d_model, cfg.d_ff, jnp.dtype(cfg.param_dtype))
+    if spec.mlp == "moe":
+        return MOE.init_moe(key, cfg)
+    return None
+
+
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": L.init_rmsnorm(cfg.d_model, dt)}
+    if spec.kind == "attn":
+        p["attn"] = L.init_attention(k1, cfg)
+    elif spec.kind == "mla":
+        p["attn"] = L.init_mla(k1, cfg)
+    elif spec.kind == "mamba2":
+        p["mamba"] = SSM.init_mamba2(k1, cfg)
+    elif spec.kind == "rwkv6":
+        p["rwkv"] = RW.init_rwkv6(k1, cfg)
+    elif spec.kind == "xattn":
+        p["attn"] = L.init_attention(k1, cfg)
+        p["xgate"] = jnp.zeros((), dt)
+    elif spec.kind == "dec":
+        p["attn"] = L.init_attention(k1, cfg)
+        p["xnorm"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["xattn"] = L.init_attention(k3, cfg)
+    elif spec.kind == "shared_attn":
+        pass  # weights live at top level (shared)
+    else:
+        raise ValueError(spec.kind)
+    if spec.mlp != "none" and spec.kind != "rwkv6":
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["mlp"] = _init_mlp(k2, spec, cfg)
+        if spec.mlp == "moe" and cfg.moe_dense_residual:
+            p["res_mlp"] = L.init_glu_mlp(jax.random.fold_in(k2, 7),
+                                          cfg.d_model, cfg.d_ff, dt)
+    if spec.kind == "rwkv6":
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, dt)
+    if cfg.sandwich_norm:
+        p["norm1_post"] = L.init_rmsnorm(cfg.d_model, dt)
+        if "norm2" in p:
+            p["norm2_post"] = L.init_rmsnorm(cfg.d_model, dt)
+    return p
+
+
+def _padded_vocab(cfg: ModelConfig) -> int:
+    """Embedding/lm-head rows padded to a multiple of 256 so odd vocabs
+    (granite 49155, whisper 51865) stay shardable over the `model` axis —
+    replicating the table replicates its optimizer state too (+4 GB/chip
+    measured on granite).  Logits are sliced back to the true vocab."""
+    return -(-cfg.vocab_size // 256) * 256
+
+
+def init_params(key, cfg: ModelConfig):
+    cfg.validate()
+    dt = jnp.dtype(cfg.param_dtype)
+    vpad = _padded_vocab(cfg)
+    ks = jax.random.split(key, 8 + len(cfg.prologue))
+    p: Dict[str, Any] = {
+        "embed": L.embed_init(ks[0], (vpad, cfg.d_model), dt),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[1], (cfg.d_model, vpad),
+                                    cfg.d_model, dt)
+    p["prologue"] = [init_layer(ks[8 + i], s, cfg)
+                     for i, s in enumerate(cfg.prologue)]
+    # stacked superblock params: one stacked tree per spec position
+    blocks = []
+    for i, spec in enumerate(cfg.superblock):
+        keys = jax.random.split(jax.random.fold_in(ks[2], i), cfg.n_repeat)
+        blocks.append(jax.vmap(lambda k: init_layer(k, spec, cfg))(keys))
+    p["blocks"] = blocks
+    if any(s.kind == "shared_attn" for s in cfg.plan):
+        sp = {"attn": L.init_attention(ks[3], cfg, d_in=2 * cfg.d_model),
+              "norm1": L.init_rmsnorm(2 * cfg.d_model, dt),
+              "norm2": L.init_rmsnorm(cfg.d_model, dt),
+              "mlp": L.init_glu_mlp(ks[4], cfg.d_model, cfg.d_ff, dt)}
+        p["shared_attn"] = sp
+    if cfg.n_enc_layers:
+        enc_spec = LayerSpec(kind="attn", mlp="gelu_mlp", causal=False)
+        keys = jax.random.split(ks[5], cfg.n_enc_layers)
+        p["encoder"] = {
+            "blocks": jax.vmap(lambda k: init_layer(k, enc_spec, cfg))(keys),
+            "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+        }
+    if cfg.n_img_tokens:
+        p["w_img"] = L.dense_init(ks[6], (cfg.d_vision, cfg.d_model),
+                                  cfg.d_vision, dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# single layer application
+# ---------------------------------------------------------------------------
+
+def _post(p, name, y, cfg):
+    if cfg.sandwich_norm and name in p:
+        return L.rmsnorm(p[name], y, cfg.norm_eps)
+    return y
+
+
+def apply_layer(p, spec: LayerSpec, cfg: ModelConfig, x, *, positions,
+                x0=None, enc=None, cache=None, cache_pos=None,
+                shared_params=None):
+    """Returns (x, new_cache, aux)."""
+    aux = dict(ZERO_AUX)
+    new_cache = cache
+
+    if spec.kind == "shared_attn":
+        sp = shared_params
+        h = jnp.concatenate([x, x0], axis=-1)
+        h = L.rmsnorm(sp["norm1"], h, cfg.norm_eps)
+        y, nc = _self_attn(sp["attn"], h, cfg, spec, positions, cache, cache_pos)
+        x = x + y
+        h2 = L.rmsnorm(sp["norm2"], x, cfg.norm_eps)
+        x = x + L.glu_mlp(sp["mlp"], h2.astype(jnp.dtype(cfg.compute_dtype)),
+                          jnp.dtype(cfg.compute_dtype)).astype(x.dtype)
+        return x, nc, aux
+
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.kind == "attn":
+        y, nc = _self_attn(p["attn"], h, cfg, spec, positions, cache, cache_pos)
+        x = x + _post(p, "norm1_post", y, cfg)
+        new_cache = nc
+    elif spec.kind == "mla":
+        y, nc = L.mla_attention(p["attn"], h, cfg, spec, positions=positions,
+                                cache=cache, cache_pos=cache_pos)
+        x = x + _post(p, "norm1_post", y, cfg)
+        new_cache = nc
+    elif spec.kind == "mamba2":
+        y, nc = SSM.mamba2_block(p["mamba"], h, cfg, cache=cache)
+        x = x + y
+        new_cache = nc if cache is not None else None
+    elif spec.kind == "rwkv6":
+        tm_cache = None if cache is None else cache
+        y, nc = RW.rwkv6_time_mix(p["rwkv"], h, cfg, cache=tm_cache)
+        x = x + y
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        cm_cache = None if cache is None else {"shift_c": cache["shift_c"]}
+        y2, new_shift = RW.rwkv6_channel_mix(p["rwkv"], h2, cfg, cache=cm_cache)
+        x = x + y2
+        if cache is not None:
+            nc = dict(nc)
+            nc["shift_c"] = new_shift.astype(cache["shift_c"].dtype)
+            new_cache = nc
+        return x, new_cache, aux
+    elif spec.kind == "xattn":
+        y, nc = _cross_attn(p["attn"], h, cfg, spec, enc, cache)
+        x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * y
+        new_cache = nc
+    elif spec.kind == "dec":
+        y, nc_self = _self_attn(p["attn"], h, cfg, spec, positions, cache, cache_pos)
+        x = x + y
+        hx = L.rmsnorm(p["xnorm"], x, cfg.norm_eps)
+        y2, nc_x = _cross_attn(p["xattn"], hx, cfg, spec, enc, cache)
+        x = x + y2
+        if cache is not None:
+            new_cache = {**(nc_self or {}), **(nc_x or {})}
+
+    if spec.mlp != "none":
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        cdt = jnp.dtype(cfg.compute_dtype)
+        if spec.mlp == "moe":
+            y, aux = MOE.moe_layer(p["mlp"], h2, cfg)
+            if cfg.moe_dense_residual:  # arctic: dense MLP parallel to MoE
+                y = y + L.glu_mlp(p["res_mlp"], h2.astype(cdt), cdt).astype(y.dtype)
+        elif spec.mlp == "glu":
+            y = L.glu_mlp(p["mlp"], h2.astype(cdt), cdt).astype(x.dtype)
+        else:
+            y = L.gelu_mlp(p["mlp"], h2.astype(cdt), cdt).astype(x.dtype)
+        x = x + _post(p, "norm2_post", y, cfg)
+    return x, new_cache, aux
+
+
+def _self_attn(pa, h, cfg, spec, positions, cache, cache_pos):
+    if cache is None:
+        y, _ = L.attention(pa, h, cfg, spec, positions=positions)
+        return y, None
+    Lbuf = cache["k"].shape[1]
+    S = h.shape[1]
+    if S == 1:  # decode: rolling write
+        write_pos = cache_pos % Lbuf
+        kv_len = jnp.minimum(cache_pos + 1, Lbuf)
+        y, nc = _attn_decode_rolling(pa, h, cfg, spec, positions, cache,
+                                     write_pos, kv_len)
+        return y, nc
+    # prefill
+    y, nc = _attn_prefill(pa, h, cfg, spec, positions, cache)
+    return y, nc
+
+
+def _attn_prefill(pa, h, cfg, spec, positions, cache):
+    """Run full-sequence attention, then lay the (possibly rolled) tail of
+    the roped K/V into the cache buffers (slot = position % Lbuf)."""
+    y, k, v = L.attention(pa, h, cfg, spec, positions=positions, return_kv=True)
+    S, Lbuf = h.shape[1], cache["k"].shape[1]
+    if S <= Lbuf:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        return y, {"k": ck, "v": cv}
+    # S > Lbuf (windowed cache smaller than prefill): token s -> slot s % Lbuf
+    ck = jnp.roll(k[:, -Lbuf:], S % Lbuf, axis=1).astype(cache["k"].dtype)
+    cv = jnp.roll(v[:, -Lbuf:], S % Lbuf, axis=1).astype(cache["v"].dtype)
+    return y, {"k": ck, "v": cv}
+
+
+def _attn_decode_rolling(pa, h, cfg, spec, positions, cache, write_pos, kv_len):
+    import math as _m
+    B = h.shape[0]
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    hc = h.astype(cdt)
+    q = jnp.einsum("bsd,dh->bsh", hc, pa["wq"].astype(cdt)).reshape(B, 1, H, Dh)
+    k = jnp.einsum("bsd,dh->bsh", hc, pa["wk"].astype(cdt)).reshape(B, 1, KV, Dh)
+    v = jnp.einsum("bsd,dh->bsh", hc, pa["wv"].astype(cdt)).reshape(B, 1, KV, Dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(pa["qnorm"], q, cfg.norm_eps)
+        k = L.rmsnorm(pa["knorm"], k, cfg.norm_eps)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, write_pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, write_pos, 0, 0))
+    scale = cfg.attn_scale if cfg.attn_scale is not None else 1.0 / _m.sqrt(Dh)
+    from repro.kernels import ops as kops
+    out = kops.decode_attention(q, ck, cv, kv_len=kv_len, scale=scale,
+                                softcap_val=cfg.attn_softcap, window=None)
+    out = out.reshape(B, 1, H * Dh)
+    o = jnp.einsum("bsh,hd->bsd", out, pa["wo"].astype(cdt))
+    return o.astype(h.dtype), {"k": ck, "v": cv}
+
+
+def _cross_attn(pa, h, cfg, spec, enc, cache):
+    """Cross-attention; K/V over enc states are cached at prefill."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, _ = h.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cache is not None and enc is None:
+        xk, xv = cache["xk"].astype(cdt), cache["xv"].astype(cdt)
+    else:
+        src = enc.astype(cdt)
+        T = src.shape[1]
+        xk = jnp.einsum("btd,dh->bth", src, pa["wk"].astype(cdt)).reshape(B, T, KV, Dh)
+        xv = jnp.einsum("btd,dh->bth", src, pa["wv"].astype(cdt)).reshape(B, T, KV, Dh)
+    q = jnp.einsum("bsd,dh->bsh", h.astype(cdt), pa["wq"].astype(cdt)).reshape(B, S, H, Dh)
+    import math as _m
+    scale = 1.0 / _m.sqrt(Dh)
+    from repro.kernels import ops as kops
+    out = kops.flash_attention(q, xk, xv, causal=False, scale=scale,
+                               use_pallas=cfg.use_pallas)
+    out = out.reshape(B, S, H * Dh)
+    o = jnp.einsum("bsh,hd->bsd", out, pa["wo"].astype(cdt)).astype(h.dtype)
+    nc = None
+    if cache is not None:
+        nc = {"xk": xk.astype(cache["xk"].dtype), "xv": xv.astype(cache["xv"].dtype)}
+    return o, nc
+
+
+# ---------------------------------------------------------------------------
+# full stacks
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+    return constrain(x, "batch", None, None)
+
+
+def _encode(params, cfg, enc_embed):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    enc_spec = LayerSpec(kind="attn", mlp="gelu_mlp", causal=False)
+    x = enc_embed.astype(jnp.dtype(cfg.compute_dtype))
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, pblk):
+        y, _, _ = apply_layer(pblk, enc_spec, cfg, carry, positions=positions)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"],
+                        unroll=cfg.scan_unroll)
+    return L.rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _logits(params, x, cfg):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(cdt)
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(cdt), w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(cdt),
+                            params["lm_head"].astype(cdt))
+    if cfg.final_softcap:
+        logits = L.softcap(logits, cfg.final_softcap)
+    logits = constrain(logits, "batch", None, "vocab")
+    if logits.shape[-1] != cfg.vocab_size:  # drop the padded vocab rows
+        logits = logits[..., :cfg.vocab_size]
+    return logits
+
+
+def _prep_enc(params, cfg, extra):
+    if cfg.n_enc_layers:
+        return _encode(params, cfg, extra["enc_embed"])
+    if cfg.n_img_tokens:
+        img = extra["img_embed"].astype(jnp.dtype(cfg.compute_dtype))
+        return jnp.einsum("bnd,de->bne", img, params["w_img"].astype(
+            jnp.dtype(cfg.compute_dtype)))
+    return None
+
+
+def forward_train(params, tokens, cfg: ModelConfig, extra=None):
+    """Teacher-forced forward over full sequences -> logits, aux."""
+    extra = extra or {}
+    x = _embed(params, tokens, cfg)
+    x0 = x
+    enc = _prep_enc(params, cfg, extra)
+    positions = jnp.arange(tokens.shape[1])
+    aux_tot = dict(ZERO_AUX)
+    for p, spec in zip(params["prologue"], cfg.prologue):
+        x, _, aux = apply_layer(p, spec, cfg, x, positions=positions, x0=x0, enc=enc)
+        aux_tot = {k: aux_tot[k] + aux[k] for k in aux_tot}
+
+    shared = params.get("shared_attn")
+
+    def body(carry, pblks):
+        x, aux_c = carry
+        aux_n = aux_c
+        for i, spec in enumerate(cfg.superblock):
+            x, _, aux = apply_layer(pblks[i], spec, cfg, x, positions=positions,
+                                    x0=x0, enc=enc, shared_params=shared)
+            aux_n = {k: aux_n[k] + aux[k] for k in aux_n}
+        x = constrain(x, "batch", None, None)
+        return (x, aux_n), None
+
+    if cfg.remat == "dots":
+        # save matmul outputs, recompute elementwise: trades temp memory for
+        # backward-pass recompute traffic (§Perf lever)
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif cfg.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux_tot), _ = jax.lax.scan(body, (x, aux_tot), tuple(params["blocks"]),
+                                   unroll=cfg.scan_unroll)
+    return _logits(params, x, cfg), aux_tot
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux = forward_train(params, batch["tokens"], cfg,
+                                extra={k: v for k, v in batch.items()
+                                       if k not in ("tokens", "labels")})
+    labels = batch["labels"]
+    # CE via gather + logsumexp: never materializes the (B,S,V) fp32
+    # log-softmax (a §Perf memory-roofline win measured on rwkv6/train_4k;
+    # fp32 accumulation over the bf16 logits preserves accuracy)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)  # (B,S)
+    picked = jnp.take_along_axis(logits, labels[..., None].clip(0),
+                                 axis=-1)[..., 0].astype(jnp.float32)
+    ll = picked - lse
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    loss = loss + 1e-2 * aux["moe_lb_loss"] + 1e-3 * aux["moe_z_loss"]
+    metrics = {"loss": loss, "ntokens": mask.sum(), **aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# caches / serving
+# ---------------------------------------------------------------------------
+
+def _cache_len(cfg: ModelConfig, spec: LayerSpec, max_len: int) -> int:
+    w = spec.sliding_window or cfg.decode_window
+    if spec.kind == "shared_attn" and cfg.decode_window:
+        w = cfg.decode_window
+    if w:
+        return min(w, max_len)
+    return max_len
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch, max_len, dtype):
+    if spec.kind in ("attn", "shared_attn"):
+        return L.init_attn_cache(cfg, batch, _cache_len(cfg, spec, max_len), dtype)
+    if spec.kind == "mla":
+        return L.init_mla_cache(cfg, batch, max_len, dtype)
+    if spec.kind == "mamba2":
+        return SSM.init_mamba2_cache(cfg, batch, dtype)
+    if spec.kind == "rwkv6":
+        return RW.init_rwkv6_cache(cfg, batch, dtype)
+    if spec.kind == "xattn":
+        T = cfg.n_img_tokens or cfg.enc_len
+        KV, Dh = cfg.n_kv_heads, cfg.head_dim
+        return {"xk": jnp.zeros((batch, T, KV, Dh), dtype),
+                "xv": jnp.zeros((batch, T, KV, Dh), dtype)}
+    if spec.kind == "dec":
+        c = L.init_attn_cache(cfg, batch, _cache_len(cfg, spec, max_len), dtype)
+        T = cfg.enc_len
+        KV, Dh = cfg.n_kv_heads, cfg.head_dim
+        c.update({"xk": jnp.zeros((batch, T, KV, Dh), dtype),
+                  "xv": jnp.zeros((batch, T, KV, Dh), dtype)})
+        return c
+    raise ValueError(spec.kind)
+
+
+def init_caches(cfg: ModelConfig, batch, max_len, dtype=jnp.bfloat16):
+    pro = [init_layer_cache(cfg, s, batch, max_len, dtype) for s in cfg.prologue]
+    blocks = []
+    for spec in cfg.superblock:
+        one = init_layer_cache(cfg, spec, batch, max_len, dtype)
+        blocks.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_repeat,) + a.shape), one))
+    return {"prologue": pro, "blocks": blocks, "pos": jnp.zeros((), jnp.int32)}
+
+
+def forward_cached(params, tokens, caches, cfg: ModelConfig, extra=None):
+    """Prefill (S>1) or decode (S=1) through the cache stack."""
+    extra = extra or {}
+    S = tokens.shape[1]
+    pos0 = caches["pos"]
+    x = _embed(params, tokens, cfg)
+    x0 = x
+    enc = _prep_enc(params, cfg, extra) if (cfg.n_enc_layers or cfg.n_img_tokens) \
+        and S > 1 else None
+    positions = pos0 + jnp.arange(S)
+    aux = dict(ZERO_AUX)
+    new_pro = []
+    for p, spec, c in zip(params["prologue"], cfg.prologue, caches["prologue"]):
+        x, nc, _ = apply_layer(p, spec, cfg, x, positions=positions, x0=x0,
+                               enc=enc, cache=c, cache_pos=pos0)
+        new_pro.append(nc)
+
+    shared = params.get("shared_attn")
+
+    def body(x, blk):
+        pblks, cblks = blk
+        ncs = []
+        for i, spec in enumerate(cfg.superblock):
+            x, nc, _ = apply_layer(pblks[i], spec, cfg, x, positions=positions,
+                                   x0=x0, enc=enc, cache=cblks[i],
+                                   cache_pos=pos0, shared_params=shared)
+            ncs.append(nc)
+        return x, tuple(ncs)
+
+    x, new_blocks = jax.lax.scan(
+        body, x, (tuple(params["blocks"]), tuple(caches["blocks"])),
+        unroll=cfg.scan_unroll)
+    logits = _logits(params, x[:, -1:] if S > 1 else x, cfg)
+    new_caches = {"prologue": new_pro, "blocks": list(new_blocks),
+                  "pos": pos0 + S}
+    return logits, new_caches
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len=None, extra=None,
+            cache_dtype=jnp.bfloat16):
+    caches = init_caches(cfg, tokens.shape[0], max_len or tokens.shape[1],
+                         cache_dtype)
+    return forward_cached(params, tokens, caches, cfg, extra=extra)
+
+
+def decode_step(params, token, caches, cfg: ModelConfig):
+    """token: (B, 1) int32. One autoregressive step."""
+    logits, caches = forward_cached(params, token, caches, cfg)
+    return logits[:, 0], caches

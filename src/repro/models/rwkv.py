@@ -1,0 +1,141 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Simplifications vs. the full Finch recipe (documented in DESIGN.md):
+the five-way data-dependent token-shift interpolation (ddlerp) is reduced to
+learned static per-channel mixes, while the *data-dependent decay* — the
+architectural hallmark of RWKV6 — is kept (w = exp(-exp(w0 + lora(x)))).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+def _heads(cfg: ModelConfig):
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init_rwkv6(key, cfg: ModelConfig):
+    d, D = cfg.d_model, cfg.rwkv_head_dim
+    H = _heads(cfg)
+    r_dec, r_mix = cfg.rwkv_lora_decay, cfg.rwkv_lora_mix
+    ks = jax.random.split(key, 12)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "mix_r": jnp.full((d,), 0.5, dt),
+        "mix_k": jnp.full((d,), 0.5, dt),
+        "mix_v": jnp.full((d,), 0.5, dt),
+        "mix_w": jnp.full((d,), 0.5, dt),
+        "mix_g": jnp.full((d,), 0.5, dt),
+        "wr": dense_init(ks[0], (d, d), d, dt),
+        "wk": dense_init(ks[1], (d, d), d, dt),
+        "wv": dense_init(ks[2], (d, d), d, dt),
+        "wg": dense_init(ks[3], (d, d), d, dt),
+        "w0": jnp.full((d,), -0.6, dt),  # base decay: w ~ exp(-exp(-0.6)) ~ 0.58
+        "w_lora_a": dense_init(ks[4], (d, r_dec), d, dt),
+        "w_lora_b": (jax.random.normal(ks[5], (r_dec, d)) * 0.01).astype(dt),
+        "u": (jax.random.normal(ks[6], (H, D)) * 0.1).astype(dt),
+        "ln_x": init_rmsnorm(d, dt),
+        "wo": dense_init(ks[7], (d, d), d, dt),
+        # channel mix
+        "cmix_k": jnp.full((d,), 0.5, dt),
+        "cmix_r": jnp.full((d,), 0.5, dt),
+        "ck": dense_init(ks[8], (d, cfg.d_ff), d, dt),
+        "cv": dense_init(ks[9], (cfg.d_ff, d), cfg.d_ff, dt),
+        "cr": dense_init(ks[10], (d, d), d, dt),
+    }
+
+
+def _token_shift(x, prev):
+    """Shift sequence right by one; position 0 gets `prev` (B,1,D) or zeros."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(p, x, cfg: ModelConfig, *, cache=None):
+    """x: (B,S,D). cache: {"shift_t": (B,1,D), "state": (B,H,Dh,Dh)}."""
+    B, S, d = x.shape
+    D = cfg.rwkv_head_dim
+    H = _heads(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    prev = cache["shift_t"].astype(cdt) if cache is not None else None
+    xx = _token_shift(xc, prev)
+
+    def mix(m):
+        return xc + (xx - xc) * p[m].astype(cdt)
+
+    r = jnp.einsum("bsd,de->bse", mix("mix_r"), p["wr"].astype(cdt))
+    k = jnp.einsum("bsd,de->bse", mix("mix_k"), p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,de->bse", mix("mix_v"), p["wv"].astype(cdt))
+    g = jnp.einsum("bsd,de->bse", mix("mix_g"), p["wg"].astype(cdt))
+    # data-dependent decay (the Finch mechanism)
+    wx = mix("mix_w")
+    dd = jnp.einsum("bsd,dr->bsr", wx, p["w_lora_a"].astype(cdt))
+    dd = jnp.einsum("bsr,rd->bsd", jnp.tanh(dd), p["w_lora_b"].astype(cdt))
+    logdecay = -jnp.exp(p["w0"].astype(jnp.float32) + dd.astype(jnp.float32))
+    w = jnp.exp(logdecay)  # in (0,1), per (B,S,d)
+
+    rh = r.reshape(B, S, H, D)
+    kh = k.reshape(B, S, H, D)
+    vh = v.reshape(B, S, H, D)
+    wh = w.reshape(B, S, H, D)
+    new_cache = None
+    if cache is not None and S == 1:
+        st, y = kops.wkv6_decode(cache["state"], rh[:, 0], kh[:, 0], vh[:, 0],
+                                 wh[:, 0], p["u"].astype(jnp.float32))
+        y = y[:, None]
+        new_cache = {"shift_t": xc[:, -1:].astype(cache["shift_t"].dtype), "state": st}
+    else:
+        y = kops.wkv6_scan(rh, kh, vh, wh, p["u"].astype(jnp.float32),
+                           chunk=min(cfg.ssm_chunk, S),
+                           use_pallas=cfg.use_pallas, impl=cfg.wkv_impl,
+                           subchunk=cfg.wkv_subchunk)
+        if cache is not None:  # prefill
+            st = _wkv_final_state(kh, vh, wh)
+            new_cache = {"shift_t": xc[:, -1:].astype(cache["shift_t"].dtype),
+                         "state": st}
+    y = y.reshape(B, S, d)
+    y = rmsnorm(p["ln_x"], y.astype(cdt), cfg.norm_eps) * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(cdt))
+    return out.astype(x.dtype), new_cache
+
+
+def _wkv_final_state(k, v, w):
+    """State after the full sequence: sum_s (prod_{j>s} w_j) k_s v_s^T."""
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-12, 1.0))
+    cl = jnp.cumsum(lw, axis=1)
+    tail = jnp.exp(cl[:, -1:] - cl)  # (B,S,H,D)
+    return jnp.einsum("bshd,bshe->bhde", tail * k.astype(jnp.float32),
+                      v.astype(jnp.float32))
+
+
+def rwkv6_channel_mix(p, x, cfg: ModelConfig, *, cache=None):
+    B, S, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    prev = cache["shift_c"].astype(cdt) if cache is not None else None
+    xx = _token_shift(xc, prev)
+    xk = xc + (xx - xc) * p["cmix_k"].astype(cdt)
+    xr = xc + (xx - xc) * p["cmix_r"].astype(cdt)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["ck"].astype(cdt))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cv"].astype(cdt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cr"].astype(cdt)))
+    out = rr * vv
+    new_shift = xc[:, -1:] if cache is not None else None
+    return out.astype(x.dtype), new_shift
+
+
+def init_rwkv6_cache(cfg: ModelConfig, batch, dtype):
+    H, D = _heads(cfg), cfg.rwkv_head_dim
+    return {
+        "shift_t": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "shift_c": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "state": jnp.zeros((batch, H, D, D), jnp.float32),
+    }

@@ -1,0 +1,111 @@
+"""Mamba2 (state-space dual) block — the SSM component of zamba2.
+
+Dims: d_inner = expand * d_model; n_ssm_heads = d_inner / ssm_head_dim;
+B/C projections are shared across heads (n_groups=1, as in zamba2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d, N, W = cfg.d_model, cfg.ssm_state, cfg.ssm_conv_width
+    d_inner, H = _dims(cfg)
+    conv_ch = d_inner + 2 * N  # conv over (x, B, C)
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        # fused in-projection: [z, x, B, C, dt]
+        "w_in": dense_init(ks[0], (d, 2 * d_inner + 2 * N + H), d, dt),
+        "conv_w": (jax.random.normal(ks[1], (W, conv_ch)) * 0.1).astype(dt),
+        "A_log": jnp.zeros((H,), dt),  # A = -exp(A_log) = -1 at init
+        "dt_bias": jnp.zeros((H,), dt),
+        "D": jnp.ones((H,), dt),
+        "ssm_norm": init_rmsnorm(d_inner, dt),
+        "w_out": dense_init(ks[2], (d_inner, d), d_inner, dt),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,C); w: (W,C); state: (B,W-1,C)|None."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return out, new_state
+
+
+def mamba2_block(p, x, cfg: ModelConfig, *, cache=None):
+    """x: (B,S,D). cache: {"conv": (B,W-1,C), "ssm": (B,H,P,N)} for decode."""
+    B, S, _ = x.shape
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    d_inner, H = _dims(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    zxbcdt = jnp.einsum("bsd,de->bse", xc, p["w_in"].astype(cdt))
+    z, xi, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"].astype(cdt), conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(B, S, H, P)
+
+    if cache is not None and S == 1:
+        h, y = kops.ssd_decode(cache["ssm"], xh[:, 0].astype(jnp.float32),
+                               dtv[:, 0], A, Bc[:, 0].astype(jnp.float32),
+                               Cc[:, 0].astype(jnp.float32))
+        y = y[:, None]  # (B,1,H,P)
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h}
+    else:
+        y = kops.ssd_scan(xh, dtv, A, Bc, Cc, chunk=min(cfg.ssm_chunk, S),
+                          use_pallas=cfg.use_pallas)
+        new_cache = None
+        if cache is not None:  # prefill: recompute final state sequentially-free
+            # final state = full scan state; compute via chunked tail (cheap)
+            hfin = _final_state(xh, dtv, A, Bc, Cc)
+            new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": hfin}
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(cdt)
+    y = rmsnorm(p["ssm_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cdt))
+    return out.astype(x.dtype), new_cache
+
+
+def _final_state(x, dt, A, B_, C):
+    """Final SSM state after the whole sequence (for prefill->decode handoff)."""
+    a = A[None, None, :] * dt  # (B,S,H)
+    acs = jnp.cumsum(a, axis=1)
+    tail = jnp.exp(acs[:, -1:, :] - acs)  # (B,S,H)
+    xf = x.astype(jnp.float32)
+    h = jnp.einsum("bsh,bshp,bsn->bhpn", tail * dt, xf, B_.astype(jnp.float32))
+    return h
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch, dtype):
+    N, W = cfg.ssm_state, cfg.ssm_conv_width
+    d_inner, H = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, W - 1, d_inner + 2 * N), dtype),
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+    }

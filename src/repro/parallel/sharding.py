@@ -1,0 +1,172 @@
+"""Logical-axis sharding rules.
+
+Arrays are annotated with *logical* axis names; a rule table maps those to
+physical mesh axes.  Mapping is divisibility-aware: a logical axis whose
+dimension does not divide by the physical axis size falls back to
+replication (this is what lets phi4's 24 heads / whisper's 6 heads /
+granite's 49155-vocab compile on a 16-way `model` axis without special
+cases — the projections stay sharded on their flat dims and GSPMD inserts
+the resharding).
+
+Use :func:`activation_rules` as a context (thread-local) inside jitted
+functions; :func:`constrain` is a no-op outside of it, so single-device
+smoke tests run the same code path.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_TLS = threading.local()
+
+# default logical -> physical axis mapping (production mesh)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tensor": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "kv_seq": ("model",),
+    "seq": (),
+    "dp_only": ("pod", "data", "model"),  # whisper-style pure-DP batch
+}
+
+
+class ShardCtx:
+    def __init__(self, mesh: Mesh, rules: Dict[str, Tuple[str, ...]]):
+        self.mesh = mesh
+        self.rules = rules
+
+
+def current() -> Optional[ShardCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Optional[Mesh], rules: Optional[Dict] = None):
+    prev = getattr(_TLS, "ctx", None)
+    if mesh is None:
+        _TLS.ctx = None
+    else:
+        r = dict(DEFAULT_RULES)
+        if rules:
+            r.update(rules)
+        # drop mesh axes that don't exist (single-pod mesh has no "pod")
+        r = {k: tuple(a for a in v if a in mesh.shape) for k, v in r.items()}
+        _TLS.ctx = ShardCtx(mesh, r)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def _fit_axes(dim: int, phys: Tuple[str, ...], mesh: Mesh) -> Tuple[str, ...]:
+    """Largest prefix of `phys` whose product divides `dim`."""
+    out = []
+    size = 1
+    for a in phys:
+        s = mesh.shape[a]
+        if dim % (size * s) == 0:
+            out.append(a)
+            size *= s
+        else:
+            break
+    return tuple(out)
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Mesh, rules: Dict[str, Tuple[str, ...]]) -> P:
+    assert len(shape) == len(logical), (shape, logical)
+    parts = []
+    used = set()
+    for dim, name in zip(shape, logical):
+        if name is None:
+            parts.append(None)
+            continue
+        phys = tuple(a for a in rules.get(name, ()) if a in mesh.shape and a not in used)
+        phys = _fit_axes(dim, phys, mesh)
+        used.update(phys)
+        parts.append(phys if len(phys) != 1 else phys[0])
+        if not phys:
+            parts[-1] = None
+    return P(*parts)
+
+
+def constrain(x, *logical: Optional[str]):
+    """Apply a logical sharding constraint if a mesh context is active."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = spec_for(x.shape, logical, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding by leaf path
+# ---------------------------------------------------------------------------
+
+# last-path-component -> logical axes by rank (applied right-aligned)
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # vocab-sharded only: fsdp-sharding the d_model dim makes GSPMD fully
+    # rematerialize the token gather (measured: +18 GB temp on multi-pod);
+    # worst case replicated-dim cost is 295 MB/chip (gemma2)
+    "embed": ("vocab", None),
+    "lm_head": ("fsdp", "vocab"),
+    "pos_embed": (None, "fsdp"),
+    # (in, out)-shaped projections
+    "wq": ("fsdp", "tensor"), "wk": ("fsdp", "tensor"), "wv": ("fsdp", "tensor"),
+    "wi": ("fsdp", "tensor"), "wg": ("fsdp", "tensor"), "wr": ("fsdp", "tensor"),
+    "wkv_a": ("fsdp", "tensor"), "wk_rope": ("fsdp", None),
+    "wk_b": ("fsdp", "tensor"), "wv_b": ("fsdp", "tensor"),
+    "w_in": ("fsdp", "tensor"), "ck": ("fsdp", "tensor"),
+    "cr": ("fsdp", "tensor"), "w_router": ("fsdp", None),
+    "w_lora_a": ("fsdp", None), "wg_gate": ("fsdp", "tensor"),
+    "w_img": ("fsdp", "tensor"),
+    # (out, in)-shaped projections
+    "wo": ("tensor", "fsdp"), "cv": ("tensor", "fsdp"),
+    "w_out": ("tensor", "fsdp"), "w_lora_b": (None, "fsdp"),
+    # experts
+    "experts_wi": ("experts", "fsdp", None),
+    "experts_wg": ("experts", "fsdp", None),
+    "experts_wo": ("experts", None, "fsdp"),
+    # conv / small
+    "conv_w": (None, "tensor"),
+    "u": (None, None),
+}
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
+               rules: Dict[str, Tuple[str, ...]]) -> P:
+    name = path[-1]
+    logical = _PARAM_RULES.get(name)
+    if logical is None:
+        logical = (None,) * len(shape)  # norms, scalars, biases: replicate
+    # scanned stacks have a leading layer dim
+    extra = len(shape) - len(logical)
+    if extra > 0:
+        logical = (None,) * extra + tuple(logical)
+    elif extra < 0:
+        logical = logical[-len(shape):] if len(shape) else ()
+    return spec_for(shape, logical, mesh, rules)
+
+
+def param_spec_tree(params, mesh: Mesh, rules: Optional[Dict] = None):
+    r = dict(DEFAULT_RULES)
+    if rules:
+        r.update(rules)
+    r = {k: tuple(a for a in v if a in mesh.shape) for k, v in r.items()}
+
+    def f(path, leaf):
+        keys = tuple(getattr(k, "key", getattr(k, "idx", str(k))) for k in path)
+        keys = tuple(str(k) for k in keys)
+        return NamedSharding(mesh, param_spec(keys, leaf.shape, mesh, r))
+
+    return jax.tree_util.tree_map_with_path(f, params)

@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeEngine, make_prefill_fn, make_decode_fn  # noqa

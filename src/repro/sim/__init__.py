@@ -1,0 +1,3 @@
+from repro.sim.jag import jag_simulate, JAG_BOUNDS, jag_sample_inputs  # noqa
+from repro.sim.epidemic import seir_simulate, EPI_BOUNDS  # noqa
+from repro.sim.nullsim import null_simulate, sleep_step  # noqa

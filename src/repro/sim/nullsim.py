@@ -1,0 +1,23 @@
+"""Null simulators for overhead measurement (paper Sec. 2.3).
+
+The paper benchmarks Merlin with `sleep 1` shell tasks.  ``sleep_step``
+reproduces that exactly (host-side sleep, configurable); ``null_simulate``
+is the device-side null (a trivially small jitted computation) used to
+measure the fused-bundle overhead floor.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def sleep_step(duration: float = 1.0):
+    def step(ctx):
+        time.sleep(duration)
+    return step
+
+
+def null_simulate(u, rng):
+    return {"y": jnp.sum(u) * 0.0 + 1.0}

@@ -1,0 +1,3 @@
+from repro.train.optimizer import adamw, adafactor, make_optimizer  # noqa
+from repro.train.trainstep import TrainState, make_train_step, init_state  # noqa
+from repro.train.trainer import Trainer  # noqa

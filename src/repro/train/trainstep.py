@@ -1,0 +1,79 @@
+"""The jitted training step: microbatched gradient accumulation, remat,
+sharding-aware — the function the multi-pod dry-run lowers.
+
+``global_batch`` is split into ``cfg.microbatch`` accumulation slices and
+scanned; each slice's forward/backward runs under the activation sharding
+rules, XLA overlapping the per-layer reduce-scatters/all-gathers of the
+FSDP parameters with the scan's compute (latency hiding across microbatch
+iterations).  Parameters stay fp32 (master); compute casts to bf16 inside
+the model.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.parallel.sharding import activation_rules
+from repro.train.optimizer import Optimizer, make_optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+def init_state(rng, cfg: ModelConfig, optimizer: Optional[Optimizer] = None
+               ) -> TrainState:
+    optimizer = optimizer or make_optimizer(cfg.optimizer)
+    params = lm.init_params(rng, cfg)
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optional[Optimizer] = None,
+                    mesh=None, rules=None, donate: bool = True):
+    optimizer = optimizer or make_optimizer(cfg.optimizer)
+    n_mb = max(1, cfg.microbatch)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        with activation_rules(mesh, rules):
+            def split(x):  # (B, ...) -> (n_mb, B/n_mb, ...)
+                return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            acc_dt = jnp.dtype(cfg.accum_dtype)
+
+            def mb_grad(carry, mb):
+                gsum, lsum = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    lm.loss_fn, has_aux=True)(state.params, mb, cfg)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), gsum, g)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt),
+                              state.params)
+            (gsum, lsum), _ = jax.lax.scan(mb_grad, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, gsum)
+            new_params, new_opt = optimizer.update(grads, state.opt,
+                                                   state.params)
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                                 for g in jax.tree.leaves(grads)))
+            metrics = {"loss": lsum / n_mb, "grad_norm": gnorm,
+                       "step": state.step + 1}
+            return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, mesh=None, rules=None):
+    def eval_step(params, batch):
+        with activation_rules(mesh, rules):
+            loss, metrics = lm.loss_fn(params, batch, cfg)
+        return metrics
+    return eval_step

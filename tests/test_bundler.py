@@ -1,0 +1,71 @@
+"""Bundling/aggregation + crawl invariants (paper Fig. 7)."""
+import os
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bundler import Bundler, missing_samples
+
+
+def test_write_aggregate_load_roundtrip(tmp_path):
+    b = Bundler(str(tmp_path), files_per_leaf=3)
+    rng = np.random.default_rng(0)
+    truth = rng.random((30, 4)).astype(np.float32)
+    for lo in range(0, 30, 5):
+        b.write_bundle(lo, lo + 5, {"x": truth[lo:lo + 5]})
+    present, corrupt = b.crawl()
+    assert present == set(range(30)) and not corrupt
+    b.aggregate_all()
+    # bundles subsumed: only aggregates remain
+    files = [f for _, _, fs in os.walk(str(tmp_path)) for f in fs]
+    assert all(f == "aggregate.npz" for f in files)
+    data = b.load_all()
+    assert np.allclose(data["x"], truth)
+
+
+def test_crawl_detects_corruption(tmp_path):
+    b = Bundler(str(tmp_path))
+    b.write_bundle(0, 5, {"x": np.ones(5)})
+    b.write_bundle(5, 10, {"x": np.ones(5)})
+    # corrupt one file in place
+    victim = None
+    for root, _, files in os.walk(str(tmp_path)):
+        for f in files:
+            if f.startswith("bundle_000000005"):
+                victim = os.path.join(root, f)
+    assert victim is not None
+    with open(victim, "wb") as f:
+        f.write(b"garbage")
+    present, corrupt = b.crawl()
+    assert present == set(range(5))
+    assert len(corrupt) == 1
+
+
+@given(st.sets(st.integers(0, 199)))
+@settings(max_examples=50, deadline=None)
+def test_missing_samples_ranges(present):
+    ranges = missing_samples(200, present)
+    rebuilt = set()
+    for lo, hi in ranges:
+        assert lo < hi
+        rebuilt.update(range(lo, hi))
+    assert rebuilt == set(range(200)) - present
+    # ranges are maximal (no two adjacent)
+    for (a, b), (c, d) in zip(ranges, ranges[1:]):
+        assert c > b
+
+
+def test_concurrent_writers_no_interference(tmp_path):
+    import threading
+    b = Bundler(str(tmp_path), files_per_leaf=10)
+
+    def write(lo):
+        Bundler(str(tmp_path), files_per_leaf=10).write_bundle(
+            lo, lo + 2, {"x": np.full(2, lo)})
+
+    ts = [threading.Thread(target=write, args=(lo,)) for lo in range(0, 40, 2)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    present, corrupt = b.crawl()
+    assert present == set(range(40)) and not corrupt

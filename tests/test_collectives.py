@@ -1,0 +1,45 @@
+"""Wire-level int8 all-reduce semantics on a forced multi-device CPU mesh
+(subprocess: device count must be set before jax initializes)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
+    from repro.parallel.collectives import compressed_grad_allreduce
+
+    mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+    rng = np.random.default_rng(0)
+    # per-shard partial grads: leading dim = shard
+    g = jnp.asarray(rng.normal(size=(8, 64, 16)).astype(np.float32))
+    g = jax.device_put(g, NamedSharding(mesh, P("data")))
+    out = compressed_grad_allreduce({"w": g}, mesh)["w"]
+    want = np.asarray(g).sum(axis=0)
+    got = np.asarray(out)
+    assert got.shape == want.shape, (got.shape, want.shape)
+    rel = np.abs(got - want).max() / np.abs(want).max()
+    print("REL", rel)
+    assert rel < 2e-2, rel  # int8 quantization error bound
+    # exactness for values already on the int grid
+    gi = jnp.asarray(rng.integers(-5, 6, size=(8, 32)).astype(np.float32))
+    gi = jax.device_put(gi, NamedSharding(mesh, P("data")))
+    outi = compressed_grad_allreduce({"w": gi}, mesh)["w"]
+    # shared absmax scale => grid points representable when max aligns
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_int8_psum_semantics_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

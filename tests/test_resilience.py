@@ -1,0 +1,78 @@
+"""Resilience primitives: retries, speculative reissue, journal."""
+import time
+
+import numpy as np
+
+from repro.core import Bundler, MerlinRuntime, Step, StudySpec, WorkerPool
+from repro.core.hierarchy import HierarchyCfg
+from repro.core.queue import InMemoryBroker, new_task
+from repro.core.resilience import RetryPolicy, SpeculativeReissuer
+
+
+def test_retry_policy():
+    t = new_task("real", {})
+    p = RetryPolicy(max_retries=2)
+    assert p.should_retry(t)
+    t.retries = 2
+    assert not p.should_retry(t)
+
+
+def test_failed_attempt_retries_and_succeeds(tmp_path):
+    """A step that fails once must re-execute (completion-marker idempotency,
+    not attempt-marker)."""
+    rt = MerlinRuntime(workspace=str(tmp_path / "ws"),
+                       hierarchy=HierarchyCfg(max_fanout=4, bundle=2))
+    b = Bundler(str(tmp_path / "res"))
+    attempts = {}
+
+    def flaky(ctx):
+        n = attempts.setdefault(ctx.lo, 0)
+        attempts[ctx.lo] = n + 1
+        if n == 0 and (ctx.lo // 2) % 2 == 0:
+            raise RuntimeError("first attempt dies")
+        b.write_bundle(ctx.lo, ctx.hi, {"y": np.ones(ctx.hi - ctx.lo)})
+
+    rt.register("flaky", flaky)
+    spec = StudySpec(name="f", steps=[Step(name="flaky", fn="flaky")])
+    with WorkerPool(rt, n_workers=3) as pool:
+        sid = rt.run(spec, np.zeros((24, 1), np.float32))
+        assert rt.wait(sid, timeout=60)
+    assert len(b.crawl()[0]) == 24
+    assert max(attempts.values()) == 2  # failures were retried exactly once
+
+
+def test_speculative_reissue_first_finisher_wins(tmp_path):
+    """Straggler mitigation: duplicate a stuck task; execution happens once."""
+    broker = InMemoryBroker(visibility_timeout=30.0)
+    rt = MerlinRuntime(broker=broker, workspace=str(tmp_path / "ws"),
+                       hierarchy=HierarchyCfg(max_fanout=4, bundle=4))
+    runs = []
+    rt.register("sim", lambda ctx: runs.append(ctx.lo))
+    spec = StudySpec(name="s", steps=[Step(name="sim", fn="sim")])
+    sid = rt.run(spec, np.zeros((4, 1), np.float32))
+    # take the single real task but DON'T ack (stuck straggler)
+    gen_lease = broker.get(timeout=1)
+    from repro.core import hierarchy as H
+    # root covers one bundle -> already a real task
+    assert gen_lease.task.kind == "real"
+    reissuer = SpeculativeReissuer(broker, dup_after=0.05)
+    time.sleep(0.1)
+    assert reissuer.scan_once() == 1  # duplicate issued
+    dup = broker.get(timeout=1)
+    rt.execute_real(dup.task)
+    broker.ack(dup.tag)
+    # original straggler finally "finishes": no double execution
+    rt.execute_real(gen_lease.task)
+    broker.ack(gen_lease.tag)
+    assert runs == [0]
+    assert rt.study_done(sid)
+
+
+def test_journal_survives_torn_writes(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path / "ws"))
+    rt.journal.append({"ev": "a"})
+    with open(rt.journal.path, "a") as f:
+        f.write('{"ev": "torn')  # crashed writer
+    rt.journal.append({"ev": "b"})
+    evs = [e["ev"] for e in rt.journal.replay()]
+    assert "a" in evs and "b" in evs

@@ -1,0 +1,70 @@
+"""Simulator invariants (JAG-like ICF + SEIR epicast stand-in)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.sim import jag_simulate, jag_sample_inputs, seir_simulate
+from repro.sim.jag import IMG, N_T, N_VIEWS
+
+
+def test_jag_shapes_and_finiteness():
+    out = jax.jit(jag_simulate)(jnp.full((5,), 0.5), jax.random.PRNGKey(0))
+    assert out["burn_rate"].shape == (N_T,)
+    assert out["images"].shape == (N_VIEWS, IMG, IMG)
+    assert float(out["failed"]) == 0.0
+    for k, v in out.items():
+        assert bool(jnp.isfinite(v).all()), k
+
+
+def test_jag_failure_region():
+    # over-driven thin shell: scale ~ max, thickness ~ min
+    u = jnp.array([0.999, 0.001, 0.5, 0.5, 0.5])
+    out = jag_simulate(u, jax.random.PRNGKey(0))
+    assert float(out["failed"]) == 1.0
+    assert not bool(jnp.isfinite(out["yield"]))
+
+
+@given(st.lists(st.floats(0, 1), min_size=5, max_size=5))
+@settings(max_examples=30, deadline=None)
+def test_jag_physics_monotonicities(u):
+    u = jnp.array(u, jnp.float32)
+    out = jag_simulate(u, jax.random.PRNGKey(0))
+    # symmetric capsules outperform asymmetric ones at same drive
+    u_sym = u.at[2].set(0.5).at[3].set(0.5)
+    out_sym = jag_simulate(u_sym, jax.random.PRNGKey(0))
+    if bool(jnp.isfinite(out["yield"])) and bool(jnp.isfinite(out_sym["yield"])):
+        assert float(out_sym["yield"]) >= float(out["yield"]) - 1e-6 * float(
+            out_sym["yield"])
+
+
+def test_jag_vmap_consistency():
+    u = jag_sample_inputs(jax.random.PRNGKey(1), 8)
+    rngs = jax.vmap(jax.random.PRNGKey)(jnp.arange(8, dtype=jnp.uint32))
+    batched = jax.vmap(jag_simulate)(u, rngs)
+    single = jag_simulate(u[3], jax.random.PRNGKey(3))
+    np.testing.assert_allclose(np.asarray(batched["yield"])[3],
+                               np.asarray(single["yield"]), rtol=1e-6)
+
+
+def test_seir_epidemic_properties():
+    u = jnp.full((6,), 0.5)
+    out = jax.jit(seir_simulate)(u, jax.random.PRNGKey(0))
+    assert out["daily_cases"].shape == (60,)
+    assert float(out["attack_rate"]) >= 0
+    assert bool((out["daily_cases"] >= -1e-6).all())
+    # stronger NPI compliance -> fewer total cases
+    u_strong = u.at[4].set(1.0).at[5].set(0.0)  # max compliance, early start
+    u_none = u.at[4].set(0.0)
+    a_strong = float(seir_simulate(u_strong, jax.random.PRNGKey(0))["attack_rate"])
+    a_none = float(seir_simulate(u_none, jax.random.PRNGKey(0))["attack_rate"])
+    assert a_strong <= a_none
+
+
+def test_seir_deterministic_given_key():
+    u = jnp.full((6,), 0.4)
+    a = seir_simulate(u, jax.random.PRNGKey(5))["daily_cases"]
+    b = seir_simulate(u, jax.random.PRNGKey(5))["daily_cases"]
+    assert np.array_equal(np.asarray(a), np.asarray(b))

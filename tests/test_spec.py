@@ -1,0 +1,88 @@
+"""Study spec: YAML parsing, DAG validation, parameter expansion."""
+import pytest
+
+from repro.core.runtime import plan_stages
+from repro.core.spec import (Step, StudySpec, expand_parameters, substitute,
+                             topo_order)
+
+YAML = """
+description:
+  name: icf_demo
+env:
+  variables:
+    OUTPUT_ROOT: /tmp/out
+study:
+  - name: sim
+    run:
+      cmd: "echo sim $(SCALE) $(SAMPLE_LO)"
+      shell: /bin/bash
+  - name: post
+    run:
+      cmd: "echo post"
+      depends: [sim]
+  - name: collect
+    run:
+      cmd: "echo collect"
+      depends: [post_*]
+      samples: false
+global.parameters:
+  SCALE:
+    values: [0.9, 1.0, 1.1]
+"""
+
+
+def test_yaml_roundtrip():
+    spec = StudySpec.from_yaml(YAML)
+    spec.validate()
+    assert [s.name for s in spec.steps] == ["sim", "post", "collect"]
+    assert spec.step("collect").over_samples is False
+    assert spec.parameters["SCALE"] == [0.9, 1.0, 1.1]
+    assert spec.variables["OUTPUT_ROOT"] == "/tmp/out"
+
+
+def test_parameter_expansion_cartesian():
+    spec = StudySpec(name="x", steps=[Step(name="a")],
+                     parameters={"A": [1, 2], "B": ["x", "y", "z"]})
+    combos = expand_parameters(spec)
+    assert len(combos) == 6
+    assert {"A": 1, "B": "x"} in combos
+
+
+def test_topo_order_and_cycle_detection():
+    spec = StudySpec(name="x", steps=[
+        Step(name="c", depends=("b",)),
+        Step(name="a"),
+        Step(name="b", depends=("a",))])
+    assert [s.name for s in topo_order(spec)] == ["a", "b", "c"]
+    bad = StudySpec(name="x", steps=[
+        Step(name="a", depends=("b",)), Step(name="b", depends=("a",))])
+    with pytest.raises(AssertionError):
+        bad.validate()
+
+
+def test_unknown_dependency_rejected():
+    spec = StudySpec(name="x", steps=[Step(name="a", depends=("nope",))])
+    with pytest.raises(AssertionError):
+        spec.validate()
+
+
+def test_substitution():
+    out = substitute("run $(X) on $(WORKSPACE)", {"X": 3, "WORKSPACE": "/w"})
+    assert out == "run 3 on /w"
+
+
+def test_stage_planning_chains_and_funnels():
+    spec = StudySpec.from_yaml(YAML)
+    stages = plan_stages(spec)
+    assert [st["kind"] for st in stages] == ["parallel", "single"]
+    assert [s.name for s in stages[0]["steps"]] == ["sim", "post"]
+
+
+def test_stage_planning_interleaved():
+    spec = StudySpec(name="x", steps=[
+        Step(name="a"),
+        Step(name="barrier", depends=("a_*",), over_samples=False),
+        Step(name="b", depends=("barrier",)),
+    ])
+    stages = plan_stages(spec)
+    assert [st["kind"] for st in stages] == ["parallel", "single", "parallel"]

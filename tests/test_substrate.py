@@ -1,0 +1,175 @@
+"""Optimizer / checkpoint / data / sharding substrate tests."""
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.ckpt.checkpoint import CheckpointManager, restore_pytree, save_pytree
+from repro.data.pipeline import SyntheticTokens, quantize_record
+from repro.parallel import sharding as shd
+from repro.train.optimizer import adafactor, adamw, ef_compress, make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def quad_target():
+    return {"w": jnp.zeros(4), "m": jnp.zeros((3, 5))}
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_converges_on_quadratic(name):
+    t1 = jnp.array([1.0, -2.0, 3.0, 0.5])
+    t2 = jnp.arange(15.0).reshape(3, 5) / 10
+    p = quad_target()
+    opt = make_optimizer(name, lr=0.05, wd=0.0) if name == "adamw" else \
+        make_optimizer(name, lr=0.05)
+    st = opt.init(p)
+
+    def loss(pp):
+        return jnp.sum((pp["w"] - t1) ** 2) + jnp.sum((pp["m"] - t2) ** 2)
+
+    for _ in range(400):
+        g = jax.grad(loss)(p)
+        p, st = opt.update(g, st, p)
+    assert float(loss(p)) < 1e-2
+
+
+def test_adafactor_state_is_factored():
+    p = {"big": jnp.zeros((64, 128)), "vec": jnp.zeros(10)}
+    st = adafactor().init(p)
+    assert st["f"]["big"]["vr"].shape == (64,)
+    assert st["f"]["big"]["vc"].shape == (128,)
+    assert st["f"]["vec"]["v"].shape == (10,)
+
+
+def test_ef_compression_converges_and_carries_residual():
+    t = jnp.array([1.0, -2.0, 3.0])
+    p = {"w": jnp.zeros(3)}
+    opt = ef_compress(adamw(lr=0.05, wd=0.0), bits=8)
+    st = opt.init(p)
+    for _ in range(300):
+        g = jax.grad(lambda pp: jnp.sum((pp["w"] - t) ** 2))(p)
+        p, st = opt.update(g, st, p)
+    assert float(jnp.abs(p["w"] - t).max()) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": [jnp.ones(4),
+                                                      {"c": jnp.zeros(2)}]}
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for step in [5, 10, 15]:
+        mgr.save(step, tree)
+    assert mgr.steps() == [10, 15]  # gc kept last 2
+    like = jax.eval_shape(lambda: tree)
+    got = mgr.restore(15, like=like)
+    assert np.allclose(got["a"], tree["a"])
+    assert np.allclose(got["b"][1]["c"], 0)
+
+
+def test_checkpoint_atomic_no_partial_reads(tmp_path):
+    tree = {"a": jnp.ones(3)}
+    save_pytree(str(tmp_path / "ck"), tree)
+    # a leftover tmp dir from a crashed writer must be ignored
+    os.makedirs(str(tmp_path / "ck2.tmp"))
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    assert mgr.steps() == []  # tmp/non-manifest dirs invisible
+
+
+def test_trainer_restart_resumes(tmp_path):
+    from repro.configs import registry
+    from repro.train.trainer import Trainer
+    cfg = registry.get_config("jag-surrogate").replace(
+        n_repeat=1, n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+        head_dim=16, d_ff=64, vocab_size=128)
+    tr = Trainer(cfg, str(tmp_path), iter(SyntheticTokens(2, 16, 128)),
+                 ckpt_every=3)
+    tr.train(5)
+    tr2 = Trainer(cfg, str(tmp_path), iter(SyntheticTokens(2, 16, 128)),
+                  ckpt_every=3)
+    st = tr2.restore_or_init()
+    assert int(st.step) == 5
+    st = tr2.train(7, state=st)
+    assert int(st.step) == 7
+    assert tr2.history[0]["step"] == 6  # resumed, not restarted
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synthetic_tokens_deterministic_and_step_addressable():
+    a = SyntheticTokens(4, 16, 1000, seed=3)
+    b = SyntheticTokens(4, 16, 1000, seed=3)
+    x, y = next(a), next(b)
+    assert np.array_equal(x["tokens"], y["tokens"])
+    assert np.array_equal(a.batch_at(7)["tokens"], b.batch_at(7)["tokens"])
+    assert not np.array_equal(a.batch_at(7)["tokens"],
+                              a.batch_at(8)["tokens"])
+    assert x["tokens"].max() < 1000 and x["tokens"].min() >= 0
+    # next-token alignment
+    assert np.array_equal(x["tokens"][:, 1:], x["labels"][:, :-1])
+
+
+def test_quantize_record_disjoint_fields():
+    toks = quantize_record(np.array([0.1, 0.9]), np.array([0.5]), vocab=1024,
+                           bins_per_field=256)
+    assert toks.shape == (3,)
+    assert 0 <= toks[0] < 256 and 256 <= toks[1] < 512 and 512 <= toks[2] < 768
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+FAKE_MESH = types.SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16})
+RULES = {k: v for k, v in shd.DEFAULT_RULES.items()}
+
+
+def test_spec_divisibility_fallback():
+    # 24 heads don't divide 16 -> replicated; 32 do -> sharded
+    s = shd.spec_for((2, 24, 128), (None, "heads", None), FAKE_MESH, RULES)
+    assert s == P(None, None, None)
+    s = shd.spec_for((2, 32, 128), (None, "heads", None), FAKE_MESH, RULES)
+    assert s == P(None, "model", None)
+
+
+def test_spec_multi_axis_batch():
+    s = shd.spec_for((256, 4096), ("batch", None), FAKE_MESH, RULES)
+    assert s == P(("pod", "data"), None)
+    # batch=1 falls back to replicated
+    s = shd.spec_for((1, 4096), ("batch", None), FAKE_MESH, RULES)
+    assert s == P(None, None)
+
+
+def test_spec_no_double_axis_use():
+    # two logical dims mapping to "model": only the first gets it
+    s = shd.spec_for((64, 32), ("vocab", "heads"), FAKE_MESH, RULES)
+    assert s == P("model", None)
+
+
+def test_param_spec_scan_stacked():
+    s = shd.param_spec(("blocks", "0", "attn", "wq"), (12, 4096, 4096),
+                       FAKE_MESH, RULES)
+    assert s == P(None, "data", "model")
+    # embed: vocab-sharded only (fsdp on d_model broke the token gather
+    # under GSPMD — see DESIGN.md §5b)
+    s = shd.param_spec(("embed",), (256000, 4608), FAKE_MESH, RULES)
+    assert s == P("model", None)
+    # granite's 49155 vocab is not divisible by 16 -> replicated vocab dim
+    s = shd.param_spec(("embed",), (49155, 4096), FAKE_MESH, RULES)
+    assert s == P(None, None)
+
+
+def test_constrain_is_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert shd.constrain(x, "batch", None) is x

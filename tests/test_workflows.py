@@ -1,0 +1,110 @@
+"""Workflow archetypes end-to-end: ensemble executor, active-learning
+optimization loop (Sec. 3.2), calibrate->forecast cascade (Sec. 3.3)."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (Bundler, EnsembleExecutor, MerlinRuntime, Step,
+                        StudySpec, WorkerPool)
+from repro.core.active import (OptimizationLoop, propose_batch,
+                               train_surrogate)
+from repro.core.cascade import CalibrationCascade
+from repro.core.hierarchy import HierarchyCfg
+from repro.sim import jag_simulate, seir_simulate
+
+
+def test_ensemble_executor_fused_bundles(tmp_path):
+    b = Bundler(str(tmp_path))
+    ex = EnsembleExecutor(jag_simulate, b)
+    samples = np.random.default_rng(0).random((24, 5)).astype(np.float32)
+    ex.run_bundle(0, 12, samples[:12])
+    ex.run_bundle(12, 24, samples[12:])
+    data = b.load_all()
+    assert data["yield"].shape == (24,)
+    assert data["images"].shape == (24, 4, 16, 16)
+    assert ex.stats["samples"] == 24
+
+
+def test_surrogate_learns_smooth_function():
+    rng = np.random.default_rng(0)
+    X = rng.random((256, 3)).astype(np.float32)
+    y = np.sin(3 * X[:, 0]) + X[:, 1] ** 2
+    y = (y - y.min()) / (y.max() - y.min())
+    sur = train_surrogate(X, y, steps=400)
+    mu, sd = sur.predict(X)
+    assert float(np.mean((mu - y) ** 2)) < 0.02
+    assert sd.shape == mu.shape
+
+
+def test_propose_batch_three_way_split():
+    rng = np.random.default_rng(0)
+    X = rng.random((64, 5)).astype(np.float32)
+    y = -np.sum((X - 0.6) ** 2, axis=1)
+    sur = train_surrogate(X, (y - y.min()) / (y.max() - y.min()), steps=200)
+    Xn = propose_batch(sur, None, X, y, n=30, dims=5)
+    assert Xn.shape == (30, 5)
+    assert Xn.min() >= 0 and Xn.max() <= 1
+    best = X[np.argmax(y)]
+    # a third of points cluster near the best observed design
+    d = np.linalg.norm(Xn[:10] - best, axis=1)
+    assert np.median(d) < 0.25
+
+
+def test_optimization_loop_improves(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path),
+                       hierarchy=HierarchyCfg(max_fanout=4, bundle=12))
+    loop = OptimizationLoop(rt, jag_simulate, batch_per_iter=36, max_iters=3,
+                            seed=1)
+    with WorkerPool(rt, n_workers=2) as pool:
+        loop.start()
+        t0 = time.time()
+        while len(loop.history) < 3 and time.time() - t0 < 240:
+            time.sleep(0.2)
+        pool.drain(timeout=60)
+    assert len(loop.history) == 3
+    assert loop.history[-1]["best"] >= loop.history[0]["best"]
+    assert loop.history[-1]["n"] > loop.history[0]["n"]  # data accumulates
+
+
+def test_cascade_calibrates_then_forecasts(tmp_path):
+    rng = np.random.default_rng(0)
+    truth = {}
+    for m in ["NYC", "SEA"]:
+        u = rng.uniform(0.3, 0.7, 6).astype(np.float32)
+        truth[m] = np.asarray(jax.jit(seir_simulate)(
+            u, jax.random.PRNGKey(1))["daily_cases"])
+    rt = MerlinRuntime(workspace=str(tmp_path),
+                       hierarchy=HierarchyCfg(max_fanout=4, bundle=16))
+    casc = CalibrationCascade(rt, seir_simulate, truth, n_calib=32,
+                              n_posterior=8)
+    with WorkerPool(rt, n_workers=2) as pool:
+        casc.start()
+        t0 = time.time()
+        while time.time() - t0 < 240:
+            if all(len(casc.results.get(m, {})) >= 4 for m in truth):
+                break
+            time.sleep(0.2)
+        pool.drain(timeout=60)
+    for m in truth:
+        r = casc.results[m]
+        assert "posterior_rmse" in r
+        # NPIs reduce the peak monotonically
+        assert r["strong_npi"]["peak_median"] <= \
+            r["baseline"]["peak_median"] + 1e-6
+
+
+def test_serving_engine_generates(tmp_path):
+    from repro.configs import registry
+    from repro.models import lm
+    from repro.serve.engine import ServeEngine
+    cfg = registry.reduced_config("granite-3-8b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_len=64)
+    import jax.numpy as jnp
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    out = eng.generate(toks, n_new=6)
+    assert out.shape == (2, 6)
+    assert eng.stats["decode_tokens"] == 10
