@@ -1,0 +1,165 @@
+"""Broker claim-throughput benchmark: the perf baseline for the task-queue
+hot path (paper Sec. 2.3 "server stability" / Figs. 3-6 analogues).
+
+Measures end-to-end drain throughput (claim + ack) in tasks/s for both
+broker backends at 1, 4, and 16 concurrent workers, with batch sizes 1 and
+8, plus a reference re-implementation of the *seed* FileBroker claim loop
+(full listdir + sort per claim, O(n log n) per task) so the speedup of the
+indexed hot path is measured, not asserted.
+
+Usage: PYTHONPATH=src python -m benchmarks.broker_throughput [--tasks N]
+Prints ``name,tasks_per_s,detail`` CSV rows then a human-readable block.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Callable, List
+
+from repro.core.queue import FileBroker, InMemoryBroker, Task, new_task
+
+
+# ---------------------------------------------------------------------------
+# seed-era FileBroker claim loop (reference baseline)
+# ---------------------------------------------------------------------------
+
+class SeedFileBroker:
+    """The pre-index FileBroker hot path: re-list + re-sort the queue
+    directory on every single claim.  Kept here (benchmark-only) as the
+    baseline the cached-index implementation is compared against."""
+
+    def __init__(self, root: str):
+        self.qdir = os.path.join(root, "queue")
+        self.cdir = os.path.join(root, "claimed")
+        os.makedirs(self.qdir, exist_ok=True)
+        os.makedirs(self.cdir, exist_ok=True)
+        self._seq = 0
+
+    def put(self, task: Task) -> None:
+        self._seq += 1
+        name = f"{task.priority}-{self._seq:012d}-{task.id}.json"
+        tmp = os.path.join(self.qdir, f".tmp-{name}")
+        with open(tmp, "w") as f:
+            f.write(task.to_json())
+        os.rename(tmp, os.path.join(self.qdir, name))
+
+    def put_many(self, tasks: List[Task]) -> None:
+        for t in tasks:
+            self.put(t)
+
+    def get_many(self, n: int, timeout: float = 0.0, queues=None) -> list:
+        out = []
+        names = sorted(x for x in os.listdir(self.qdir)
+                       if not x.startswith("."))  # O(n log n) EVERY claim
+        for name in names[:n]:
+            src = os.path.join(self.qdir, name)
+            dst = os.path.join(self.cdir, f"{time.time():.3f}__{name}")
+            try:
+                os.rename(src, dst)
+            except OSError:
+                continue
+            with open(dst) as f:
+                out.append((Task.from_json(f.read()), dst))
+        return [type("L", (), {"task": t, "tag": g})() for t, g in out]
+
+    def ack_many(self, tags) -> None:
+        for tag in tags:
+            try:
+                os.unlink(tag)
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+def drain(broker, n_tasks: int, n_workers: int, batch: int) -> float:
+    """Drain ``n_tasks`` pre-queued tasks with ``n_workers`` threads;
+    returns wall seconds from start to the LAST ack (tail-end empty polls
+    don't pollute the measurement)."""
+    lock = threading.Lock()
+    state = {"done": 0, "t_last": 0.0}
+    stop = threading.Event()
+    t0 = time.perf_counter()
+
+    def work():
+        while not stop.is_set():
+            leases = broker.get_many(batch, timeout=0.05)
+            if not leases:
+                continue  # others may still be in flight; stop flag decides
+            broker.ack_many([l.tag for l in leases])
+            with lock:
+                state["done"] += len(leases)
+                state["t_last"] = time.perf_counter()
+                if state["done"] >= n_tasks:
+                    stop.set()
+
+    threads = [threading.Thread(target=work) for _ in range(n_workers)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    return state["t_last"] - t0
+
+
+def bench(make_broker: Callable[[], object], n_tasks: int, n_workers: int,
+          batch: int) -> dict:
+    broker = make_broker()
+    broker.put_many([new_task("real", {"i": i}, queue="bench")
+                     for i in range(n_tasks)])
+    wall = drain(broker, n_tasks, n_workers, batch)
+    return {"tasks_per_s": n_tasks / wall, "wall_s": wall}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=1000,
+                    help="queued tasks per configuration")
+    args = ap.parse_args()
+    if args.tasks <= 0:
+        ap.error("--tasks must be positive")
+    n = args.tasks
+
+    tmp = tempfile.mkdtemp(prefix="broker-bench-")
+    rows = []
+    try:
+        for workers in (1, 4, 16):
+            for batch in (1, 8):
+                r = bench(InMemoryBroker, n, workers, batch)
+                rows.append((f"mem_w{workers}_b{batch}", r["tasks_per_s"],
+                             f"wall={r['wall_s']*1e3:.1f}ms"))
+        i = 0
+        for workers in (1, 4, 16):
+            for batch in (1, 8):
+                i += 1
+                root = os.path.join(tmp, f"file{i}")
+                r = bench(lambda: FileBroker(root), n, workers, batch)
+                rows.append((f"file_w{workers}_b{batch}", r["tasks_per_s"],
+                             f"wall={r['wall_s']*1e3:.1f}ms"))
+        # seed-era baseline: single worker, batch 1 — its claim is O(n log n)
+        seed = bench(lambda: SeedFileBroker(os.path.join(tmp, "seed")),
+                     n, 1, 1)
+        rows.append(("file_seed_listdir_w1_b1", seed["tasks_per_s"],
+                     f"wall={seed['wall_s']*1e3:.1f}ms"))
+        new_w1 = next(r for r in rows if r[0] == "file_w1_b1")
+        speedup = new_w1[1] / seed["tasks_per_s"]
+        rows.append(("file_index_speedup_vs_seed", speedup,
+                     f"{speedup:.1f}x at {n} queued tasks"))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    print("name,tasks_per_s,detail")
+    for name, tps, detail in rows:
+        print(f"{name},{tps:.0f},{detail}")
+    print()
+    print(f"broker throughput @ {n} queued tasks "
+          f"(claim+ack, tasks/s; higher is better)")
+    for name, tps, detail in rows:
+        print(f"  {name:<28} {tps:>12.0f}  {detail}")
+
+
+if __name__ == "__main__":
+    main()

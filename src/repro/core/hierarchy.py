@@ -46,17 +46,29 @@ def n_gen_tasks(n_samples: int, cfg: HierarchyCfg) -> int:
     return max(total, 1 if leaves > 1 else 0)
 
 
+def _queues(payload: dict) -> Tuple[str, str]:
+    """Named-queue routing carried in the payload (set by the runtime).
+
+    ``real_queue``/``gen_queue`` keys propagate through every level of the
+    hierarchy so leaves land on the simulation queue and interior generator
+    tasks on the generation queue (paper Sec. 2.2 routing-key semantics).
+    """
+    return (payload.get("real_queue", "default"),
+            payload.get("gen_queue", "default"))
+
+
 def root_task(study: str, step: str, n_samples: int, cfg: HierarchyCfg,
               extra: dict | None = None) -> Task:
     """The single message `merlin run` sends (metadata only)."""
     payload = {"study": study, "step": step, "lo": 0, "hi": n_samples,
                "fanout": cfg.max_fanout, "bundle": cfg.bundle,
                **(extra or {})}
+    real_q, gen_q = _queues(payload)
     n_leaves = math.ceil(n_samples / cfg.bundle)
     if n_leaves <= 1:
         return new_task("real", {**payload, "samples": [0, n_samples]},
-                        priority=PRIORITY_REAL)
-    return new_task("gen", payload, priority=PRIORITY_GEN)
+                        priority=PRIORITY_REAL, queue=real_q)
+    return new_task("gen", payload, priority=PRIORITY_GEN, queue=gen_q)
 
 
 def expand(task: Task) -> List[Task]:
@@ -67,6 +79,7 @@ def expand(task: Task) -> List[Task]:
     """
     p = task.payload
     lo, hi, fanout, bundle = p["lo"], p["hi"], p["fanout"], p["bundle"]
+    real_q, gen_q = _queues(p)
     n_leaves = math.ceil((hi - lo) / bundle)
     extra = {k: v for k, v in p.items()
              if k not in ("lo", "hi", "fanout", "bundle", "samples")}
@@ -79,7 +92,7 @@ def expand(task: Task) -> List[Task]:
             children.append(new_task(
                 "real", {**extra, "fanout": fanout, "bundle": bundle,
                          "samples": [s_lo, s_hi]},
-                priority=PRIORITY_REAL))
+                priority=PRIORITY_REAL, queue=real_q))
         return children
     # split into <= fanout contiguous child ranges, each spanning a whole
     # power-of-fanout number of leaves: children at every level then carry
@@ -98,7 +111,7 @@ def expand(task: Task) -> List[Task]:
         children.append(new_task(
             "gen", {**extra, "lo": start, "hi": stop, "fanout": fanout,
                     "bundle": bundle},
-            priority=PRIORITY_GEN))
+            priority=PRIORITY_GEN, queue=gen_q))
         start = stop
     return children
 

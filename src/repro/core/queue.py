@@ -1,18 +1,37 @@
 """Task brokers: the Celery/RabbitMQ stand-in (DESIGN.md mapping C1).
 
-Semantics preserved from the paper's stack: priority queues (real simulation
-tasks drain before task-generation tasks, Sec. 2.2), leases with visibility
-timeouts (a worker that dies mid-task gets its task redelivered — the
-resilience substrate of Sec. 3.1), acks, and multiple named queues.
+Routing semantics (paper Sec. 2.2-3.1):
+
+* **Named queues.** Every :class:`Task` carries a ``queue`` name and is
+  delivered *only* to consumers subscribed to that queue — the analogue of
+  RabbitMQ routing keys, which is how the paper pins simulation workers and
+  ML workers to disjoint work streams.  ``get(queues=None)`` subscribes to
+  every queue; ``get(queues=("sims",))`` sees only ``sims`` tasks.
+* **Priorities across queues.** Within a consumer's subscription, tasks are
+  delivered in global ``(priority, enqueue-sequence)`` order: real
+  simulation tasks (PRIORITY_REAL) drain before task-generation tasks
+  (PRIORITY_GEN) even when they live in different queues — the paper's
+  server-stability property (drain the queue before filling it).
+* **Leases.** A claim is a lease with a visibility timeout: a worker that
+  dies mid-task never acks, the lease expires, and the task is redelivered
+  with ``task.retries`` incremented — identically in both backends, so
+  retry caps (core/resilience.py) behave the same everywhere.  Delivery is
+  at-least-once; execution idempotency is the runtime's job (once-markers).
+* **Batched operations.** ``get_many``/``ack_many``/``put_many`` amortize
+  lock/filesystem round-trips for high-throughput draining
+  (benchmarks/broker_throughput.py).
 
 Two implementations behind one interface:
 
-* :class:`InMemoryBroker` — thread-safe, for in-process worker pools and the
-  performance benchmarks (Figs. 3-6 analogues).
+* :class:`InMemoryBroker` — thread-safe, condition-variable based (no
+  polling slices), per-queue binary heaps; for in-process worker pools and
+  the performance benchmarks (Figs. 3-6 analogues).
 * :class:`FileBroker` — directory-backed, multiprocess-safe via atomic
-  renames (claim = rename into ``claimed/``), so independent worker
-  *processes* ("batch allocations") can attach to a shared queue — the
-  surge-computing model of Sec. 3.
+  renames (claim = rename into ``claimed/``), one subdirectory per named
+  queue, and a cached in-memory index keyed by ``(priority, seq)`` so the
+  claim hot path does NOT re-list + re-sort the directory per task.
+  Independent worker *processes* ("batch allocations") can attach to a
+  shared queue directory — the surge-computing model of Sec. 3.
 """
 from __future__ import annotations
 
@@ -24,7 +43,7 @@ import os
 import threading
 import time
 import uuid
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 # priorities: lower = served first.  Real work drains before generation work.
 PRIORITY_REAL = 0
@@ -69,52 +88,113 @@ class Lease:
     tag: str
 
 
+def _normalize_queues(queues) -> Optional[Tuple[str, ...]]:
+    """None = all queues; a string is a single-queue subscription."""
+    if queues is None:
+        return None
+    if isinstance(queues, str):
+        return (queues,)
+    return tuple(queues)
+
+
 class InMemoryBroker:
-    """Thread-safe priority broker with visibility timeouts."""
+    """Thread-safe multi-queue priority broker with visibility timeouts."""
 
     def __init__(self, visibility_timeout: float = 60.0):
         self._lock = threading.Condition()
-        self._heap: List[Tuple[int, int, Task]] = []
+        self._heaps: Dict[str, List[Tuple[int, int, Task]]] = {}
         self._seq = itertools.count()
         self._leased: Dict[str, Tuple[Task, float]] = {}
         self._vt = visibility_timeout
         self.stats = {"enqueued": 0, "acked": 0, "redelivered": 0}
 
     # -- producer side -----------------------------------------------------
+    def _push_locked(self, task: Task) -> None:
+        heap = self._heaps.setdefault(task.queue, [])
+        heapq.heappush(heap, (task.priority, next(self._seq), task))
+
     def put(self, task: Task) -> None:
         task.enqueued_at = time.monotonic()
         with self._lock:
-            heapq.heappush(self._heap, (task.priority, next(self._seq), task))
+            self._push_locked(task)
             self.stats["enqueued"] += 1
-            self._lock.notify()
+            self._lock.notify_all()
 
     def put_many(self, tasks: List[Task]) -> None:
         now = time.monotonic()
         with self._lock:
             for t in tasks:
                 t.enqueued_at = now
-                heapq.heappush(self._heap, (t.priority, next(self._seq), t))
+                self._push_locked(t)
             self.stats["enqueued"] += len(tasks)
             self._lock.notify_all()
 
     # -- consumer side ------------------------------------------------------
-    def get(self, timeout: Optional[float] = 0.0) -> Optional[Lease]:
+    def _pop_best_locked(self, queues: Optional[Tuple[str, ...]]) -> Optional[Task]:
+        names = self._heaps.keys() if queues is None else queues
+        best_q = None
+        best_key: Optional[Tuple[int, int]] = None
+        for q in names:
+            heap = self._heaps.get(q)
+            if not heap:
+                continue
+            key = heap[0][:2]
+            if best_key is None or key < best_key:
+                best_key, best_q = key, q
+        if best_q is None:
+            return None
+        return heapq.heappop(self._heaps[best_q])[2]
+
+    def _lease_locked(self, task: Task) -> Lease:
+        tag = uuid.uuid4().hex
+        self._leased[tag] = (task, time.monotonic() + self._vt)
+        return Lease(task, tag)
+
+    def _wait_locked(self, deadline: Optional[float]) -> bool:
+        """Block until notified, the next lease expiry, or the deadline.
+
+        Returns False when the deadline has passed.  No fixed polling
+        slices: producers notify the condition, so idle consumers wake
+        immediately on put/nack and otherwise only for expiry sweeps.
+        """
+        now = time.monotonic()
+        if deadline is not None and now >= deadline:
+            return False
+        wake_at = deadline
+        if self._leased:
+            next_expiry = min(dl for _, dl in self._leased.values())
+            wake_at = next_expiry if wake_at is None else min(wake_at, next_expiry)
+        self._lock.wait(None if wake_at is None else max(0.0, wake_at - now))
+        return True
+
+    def get(self, timeout: Optional[float] = 0.0,
+            queues: Optional[Sequence[str]] = None) -> Optional[Lease]:
+        """Claim one task from the subscribed queues (None = all)."""
+        leases = self.get_many(1, timeout=timeout, queues=queues)
+        return leases[0] if leases else None
+
+    def get_many(self, n: int, timeout: Optional[float] = 0.0,
+                 queues: Optional[Sequence[str]] = None) -> List[Lease]:
+        """Claim up to ``n`` tasks in one lock round-trip.
+
+        Blocks (up to ``timeout``) only for the *first* task; once anything
+        is available the batch is whatever can be claimed right now.
+        """
+        qsel = _normalize_queues(queues)
         deadline = None if timeout is None else time.monotonic() + timeout
+        out: List[Lease] = []
         with self._lock:
             while True:
                 self._requeue_expired_locked()
-                if self._heap:
-                    _, _, task = heapq.heappop(self._heap)
-                    tag = uuid.uuid4().hex
-                    self._leased[tag] = (task, time.monotonic() + self._vt)
-                    return Lease(task, tag)
-                if deadline is None:
-                    self._lock.wait(0.05)
-                else:
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0:
-                        return None
-                    self._lock.wait(min(remaining, 0.05))
+                while len(out) < n:
+                    task = self._pop_best_locked(qsel)
+                    if task is None:
+                        break
+                    out.append(self._lease_locked(task))
+                if out:
+                    return out
+                if not self._wait_locked(deadline):
+                    return out
 
     def ack(self, tag: str) -> None:
         with self._lock:
@@ -122,15 +202,22 @@ class InMemoryBroker:
                 del self._leased[tag]
                 self.stats["acked"] += 1
 
+    def ack_many(self, tags: Iterable[str]) -> None:
+        with self._lock:
+            for tag in tags:
+                if tag in self._leased:
+                    del self._leased[tag]
+                    self.stats["acked"] += 1
+
     def nack(self, tag: str) -> None:
-        """Return a leased task to the queue immediately (worker failure)."""
+        """Return a leased task to its queue immediately (worker failure)."""
         with self._lock:
             if tag in self._leased:
                 task, _ = self._leased.pop(tag)
                 task.retries += 1
-                heapq.heappush(self._heap, (task.priority, next(self._seq), task))
+                self._push_locked(task)
                 self.stats["redelivered"] += 1
-                self._lock.notify()
+                self._lock.notify_all()
 
     def _requeue_expired_locked(self) -> None:
         now = time.monotonic()
@@ -138,12 +225,20 @@ class InMemoryBroker:
         for tag in expired:
             task, _ = self._leased.pop(tag)
             task.retries += 1
-            heapq.heappush(self._heap, (task.priority, next(self._seq), task))
+            self._push_locked(task)
             self.stats["redelivered"] += 1
+        if expired:
+            self._lock.notify_all()
 
-    def qsize(self) -> int:
+    def qsize(self, queues: Optional[Sequence[str]] = None) -> int:
+        qsel = _normalize_queues(queues)
         with self._lock:
-            return len(self._heap)
+            names = self._heaps.keys() if qsel is None else qsel
+            return sum(len(self._heaps.get(q, ())) for q in names)
+
+    def queue_names(self) -> List[str]:
+        with self._lock:
+            return sorted(q for q, h in self._heaps.items() if h)
 
     def inflight(self) -> int:
         with self._lock:
@@ -152,73 +247,276 @@ class InMemoryBroker:
     def idle(self) -> bool:
         with self._lock:
             self._requeue_expired_locked()
-            return not self._heap and not self._leased
+            return not any(self._heaps.values()) and not self._leased
 
 
 class FileBroker:
     """Directory-backed broker; multiprocess-safe via atomic renames.
 
-    Layout: <root>/queue/<prio>-<seq>-<id>.json ; claims move the file to
-    <root>/claimed/ (os.rename is atomic within a filesystem), acks delete
-    it, expiry moves it back.  This is the stand-in for a standalone
-    RabbitMQ host: workers in different processes (different "batch jobs")
-    coordinate only through this directory.
+    Layout::
+
+        <root>/queues/<queue>/<prio:03d>-<seq:012d>-<id>.json   pending
+        <root>/queues/<queue>/.tmp-<uuid>                       in-flight write
+        <root>/claimed/<ts>__<queue>__<name>                    leased
+
+    A claim renames the pending file into ``claimed/`` (os.rename is atomic
+    within a filesystem); acks delete it; expiry rewrites it back into its
+    queue directory with ``retries`` incremented.  This is the stand-in for
+    a standalone RabbitMQ host: workers in different processes (different
+    "batch jobs") coordinate only through this directory tree.
+
+    The claim hot path is served from a cached per-queue index (a heap of
+    pending filenames, which encode ``(priority, seq)`` in fixed-width
+    fields so lexicographic order == delivery order).  The index is
+    maintained incrementally by this instance's puts/claims and re-listed
+    from disk only when it runs dry or ``rescan_interval`` elapses — O(1)
+    claims instead of the seed's O(n log n) listdir+sort per poll.  Tasks
+    enqueued by *other* processes are therefore picked up within one rescan
+    interval; strict priority order is guaranteed among tasks the index has
+    seen (global order across processes is best-effort, as with any
+    distributed queue).
     """
 
-    def __init__(self, root: str, visibility_timeout: float = 120.0):
+    _TMP_PREFIX = ".tmp-"
+
+    def __init__(self, root: str, visibility_timeout: float = 120.0,
+                 rescan_interval: float = 0.25):
         self.root = root
-        self.qdir = os.path.join(root, "queue")
+        self.qroot = os.path.join(root, "queues")
         self.cdir = os.path.join(root, "claimed")
-        os.makedirs(self.qdir, exist_ok=True)
+        os.makedirs(self.qroot, exist_ok=True)
         os.makedirs(self.cdir, exist_ok=True)
         self._vt = visibility_timeout
         self._seq = itertools.count(int(time.time() * 1e3) % 10 ** 9)
+        self._rescan_interval = rescan_interval
+        self._sweep_interval = min(1.0, max(0.05, visibility_timeout / 4.0))
+        # the cached index is in-process state shared by consumer threads
+        # (WorkerPool); filesystem ops are atomic on their own, but the
+        # peek-then-pop on the heaps needs a lock
+        self._ilock = threading.Lock()
+        self._index: Dict[str, List[str]] = {}   # queue -> heap of pending names
+        self._last_rescan: Dict[str, float] = {}  # per queue, not global: a
+        # rescan for one subscription must not suppress another's
+        self._last_discover = 0.0
+        self._last_sweep = 0.0
+        self._last_tmp_reap = 0.0
+        self.stats = {"enqueued": 0, "acked": 0, "redelivered": 0}
 
+    # -- paths ---------------------------------------------------------------
+    def _qdir(self, queue: str) -> str:
+        return os.path.join(self.qroot, queue)
+
+    def _ensure_queue(self, queue: str) -> str:
+        if "__" in queue or "/" in queue or queue.startswith("."):
+            raise ValueError(f"invalid queue name {queue!r}")
+        qdir = self._qdir(queue)
+        with self._ilock:
+            if queue not in self._index:
+                os.makedirs(qdir, exist_ok=True)
+                self._index[queue] = []
+        return qdir
+
+    # -- producer side -------------------------------------------------------
     def put(self, task: Task) -> None:
         task.enqueued_at = time.time()
-        name = f"{task.priority}-{next(self._seq):012d}-{task.id}.json"
-        tmp = os.path.join(self.root, f".tmp-{name}")
+        if not 0 <= task.priority <= 999:
+            # the filename encodes priority as %03d so lexicographic order
+            # == delivery order; out-of-range values would silently
+            # mis-sort on disk while ordering fine in-memory
+            raise ValueError(f"FileBroker priority must be in [0, 999], "
+                             f"got {task.priority}")
+        qdir = self._ensure_queue(task.queue)
+        name = f"{task.priority:03d}-{next(self._seq):012d}-{task.id}.json"
+        # temp lives INSIDE the queue dir (same fs, skipped by the index and
+        # reaped by the expiry sweep if a crashed producer leaks it)
+        tmp = os.path.join(qdir, f"{self._TMP_PREFIX}{uuid.uuid4().hex}")
         with open(tmp, "w") as f:
             f.write(task.to_json())
-        os.rename(tmp, os.path.join(self.qdir, name))
+        os.rename(tmp, os.path.join(qdir, name))
+        with self._ilock:
+            heapq.heappush(self._index[task.queue], name)
+            self.stats["enqueued"] += 1
 
     def put_many(self, tasks: List[Task]) -> None:
         for t in tasks:
             self.put(t)
 
-    def get(self, timeout: Optional[float] = 0.0) -> Optional[Lease]:
-        deadline = None if timeout is None else time.monotonic() + timeout
-        while True:
-            self._requeue_expired()
-            names = sorted(os.listdir(self.qdir))
-            for name in names:
-                src = os.path.join(self.qdir, name)
-                dst = os.path.join(self.cdir, f"{time.time():.3f}__{name}")
+    # -- index maintenance ---------------------------------------------------
+    def _rescan(self, queues: Optional[Tuple[str, ...]]) -> None:
+        """Re-list pending files from disk (picks up other processes' puts).
+
+        Self-throttled per queue on ``rescan_interval`` — a never-scanned
+        queue is always stale, so a fresh instance or subscription sees
+        disk immediately.
+        """
+        now = time.monotonic()
+        if queues is None:
+            if self._last_discover == 0.0 or \
+                    now - self._last_discover > self._rescan_interval:
+                self._last_discover = now
                 try:
-                    os.rename(src, dst)  # atomic claim
+                    queues = tuple(q for q in os.listdir(self.qroot)
+                                   if os.path.isdir(self._qdir(q)))
                 except OSError:
-                    continue  # another worker won
+                    queues = ()
+            else:
+                with self._ilock:
+                    queues = tuple(self._index)
+        for q in queues:
+            if now - self._last_rescan.get(q, 0.0) <= self._rescan_interval:
+                continue
+            try:
+                names = [n for n in os.listdir(self._qdir(q))
+                         if not n.startswith(".")]
+            except OSError:
+                continue
+            with self._ilock:
+                # union-merge, never replace: a concurrent same-process
+                # put()/nack() may have pushed a name after our listdir
+                # snapshot; replacing would silently drop it.  Stale
+                # entries (claimed since the snapshot) just fail their
+                # rename and are skipped.
+                merged = list(set(names) | set(self._index.get(q, ())))
+                heapq.heapify(merged)
+                self._index[q] = merged
+            self._last_rescan[q] = now
+
+    def _pop_best(self, queues: Optional[Tuple[str, ...]]) -> Optional[Tuple[str, str]]:
+        with self._ilock:
+            names = list(self._index) if queues is None else queues
+            best_q = None
+            for q in names:
+                heap = self._index.get(q)
+                if heap and (best_q is None or heap[0] < self._index[best_q][0]):
+                    best_q = q
+            if best_q is None:
+                return None
+            return best_q, heapq.heappop(self._index[best_q])
+
+    def _dead_letter(self, path: str) -> None:
+        """Quarantine an unparseable task file so it can't cycle forever
+        between pending and claimed (it would otherwise pin idle() False)."""
+        ddir = os.path.join(self.root, "dead")
+        os.makedirs(ddir, exist_ok=True)
+        try:
+            os.rename(path, os.path.join(ddir, os.path.basename(path)))
+        except OSError:
+            pass
+
+    def _try_claim(self, queues: Optional[Tuple[str, ...]]) -> Optional[Lease]:
+        while True:
+            picked = self._pop_best(queues)
+            if picked is None:
+                return None
+            best_q, name = picked
+            src = os.path.join(self._qdir(best_q), name)
+            dst = os.path.join(self.cdir, f"{time.time():.6f}__{best_q}__{name}")
+            try:
+                os.rename(src, dst)  # atomic claim
+            except OSError:
+                continue  # another worker won; index entry was stale
+            try:
                 with open(dst) as f:
                     task = Task.from_json(f.read())
-                return Lease(task, dst)
+            except (OSError, json.JSONDecodeError, TypeError):
+                self._dead_letter(dst)  # poison file: quarantine, move on
+                continue
+            return Lease(task, dst)
+
+    # -- consumer side -------------------------------------------------------
+    def get(self, timeout: Optional[float] = 0.0,
+            queues: Optional[Sequence[str]] = None) -> Optional[Lease]:
+        leases = self.get_many(1, timeout=timeout, queues=queues)
+        return leases[0] if leases else None
+
+    def get_many(self, n: int, timeout: Optional[float] = 0.0,
+                 queues: Optional[Sequence[str]] = None) -> List[Lease]:
+        qsel = _normalize_queues(queues)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        out: List[Lease] = []
+        fresh = False  # index reflects a disk scan done this wait cycle
+        while True:
+            with self._ilock:
+                # check-and-set under the lock: exactly one consumer thread
+                # runs each sweep, so two threads can't both nack the same
+                # expired claim (double-redelivery / double-counted stats)
+                sweep_due = time.monotonic() - self._last_sweep > self._sweep_interval
+                if sweep_due:
+                    self._last_sweep = time.monotonic()
+            if sweep_due:
+                self._requeue_expired()
+            while len(out) < n:
+                lease = self._try_claim(qsel)
+                if lease is None:
+                    break
+                out.append(lease)
+            if out:
+                return out
+            if not fresh:
+                # index ran dry: consult disk for other processes' puts.
+                # _rescan self-throttles per queue, so idle consumers do
+                # NOT reintroduce the listdir-per-poll load the cached
+                # index exists to remove
+                self._rescan(qsel)
+                fresh = True
+                continue
             if deadline is not None and time.monotonic() >= deadline:
-                return None
+                return out
             time.sleep(0.02)
+            fresh = False
 
     def ack(self, tag: str) -> None:
         try:
             os.unlink(tag)
         except OSError:
-            pass
+            return
+        with self._ilock:
+            self.stats["acked"] += 1
+
+    def ack_many(self, tags: Iterable[str]) -> None:
+        for tag in tags:
+            self.ack(tag)
 
     def nack(self, tag: str) -> None:
-        name = os.path.basename(tag).split("__", 1)[1]
+        """Requeue a leased task, incrementing its retry count."""
+        base = os.path.basename(tag)
         try:
-            os.rename(tag, os.path.join(self.qdir, name))
+            _, queue, name = base.split("__", 2)
+        except ValueError:
+            return
+        qdir = self._ensure_queue(queue)
+        dst = os.path.join(qdir, name)
+        try:
+            with open(tag) as f:
+                raw = f.read()
+        except OSError:
+            return  # claim already gone: a concurrent sweep/ack won
+        try:
+            task = Task.from_json(raw)
+        except (json.JSONDecodeError, TypeError):
+            # unparseable poison: redelivering would ping-pong it between
+            # pending and claimed forever (retries can never increment)
+            self._dead_letter(tag)
+            return
+        task.retries += 1
+        tmp = os.path.join(qdir, f"{self._TMP_PREFIX}{uuid.uuid4().hex}")
+        try:
+            with open(tmp, "w") as f:
+                f.write(task.to_json())
+            os.rename(tmp, dst)
+        except OSError:
+            return
+        try:
+            os.unlink(tag)
         except OSError:
             pass
+        with self._ilock:
+            heapq.heappush(self._index.setdefault(queue, []), name)
+            self.stats["redelivered"] += 1
 
     def _requeue_expired(self) -> None:
+        """Expiry sweep: redeliver timed-out leases, reap leaked temp files."""
+        self._last_sweep = time.monotonic()
         now = time.time()
         for name in os.listdir(self.cdir):
             try:
@@ -227,9 +525,58 @@ class FileBroker:
                 continue
             if now - ts > self._vt:
                 self.nack(os.path.join(self.cdir, name))
+        # reap temps a crashed producer left behind (live producers hold a
+        # temp for microseconds; anything older than the lease window is
+        # junk).  Own, longer cadence: idle()/drain() polls call this sweep
+        # every ~20 ms and must not pay a full per-queue directory walk
+        tmp_max_age = max(30.0, self._vt)
+        if self._last_tmp_reap != 0.0 and \
+                time.monotonic() - self._last_tmp_reap < tmp_max_age / 2:
+            return
+        self._last_tmp_reap = time.monotonic()
+        try:
+            queues = os.listdir(self.qroot)
+        except OSError:
+            queues = []
+        for q in queues:
+            qdir = self._qdir(q)
+            try:
+                names = os.listdir(qdir)
+            except OSError:
+                continue
+            for n in names:
+                if not n.startswith(self._TMP_PREFIX):
+                    continue
+                path = os.path.join(qdir, n)
+                try:
+                    if now - os.path.getmtime(path) > tmp_max_age:
+                        os.unlink(path)
+                except OSError:
+                    pass
 
-    def qsize(self) -> int:
-        return len(os.listdir(self.qdir))
+    # -- introspection -------------------------------------------------------
+    def qsize(self, queues: Optional[Sequence[str]] = None) -> int:
+        qsel = _normalize_queues(queues)
+        if qsel is None:
+            try:
+                qsel = tuple(os.listdir(self.qroot))
+            except OSError:
+                return 0
+        total = 0
+        for q in qsel:
+            try:
+                total += sum(1 for n in os.listdir(self._qdir(q))
+                             if not n.startswith("."))
+            except OSError:
+                pass
+        return total
+
+    def queue_names(self) -> List[str]:
+        try:
+            return sorted(q for q in os.listdir(self.qroot)
+                          if self.qsize((q,)) > 0)
+        except OSError:
+            return []
 
     def inflight(self) -> int:
         return len(os.listdir(self.cdir))

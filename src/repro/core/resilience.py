@@ -32,9 +32,18 @@ class RetryPolicy:
 
 
 def crawl_and_resubmit(bundler: Bundler, expected_n: int, broker,
-                       task_template: dict, bundle: int) -> Tuple[int, int]:
+                       task_template: dict, bundle: int,
+                       queue: Optional[str] = None) -> Tuple[int, int]:
     """Diff disk vs expectation; enqueue missing ranges. Returns
-    (n_missing_samples, n_tasks_enqueued)."""
+    (n_missing_samples, n_tasks_enqueued).
+
+    Recovery tasks are routed onto the study's real-task queue (from the
+    template's ``real_queue`` key unless ``queue`` overrides it), so a
+    deployment whose simulation workers subscribe to a named queue actually
+    receives the resubmissions.
+    """
+    if queue is None:
+        queue = task_template.get("real_queue", "default")
     present, corrupt = bundler.crawl()
     # corrupt files count as missing: drop their ids
     for path in corrupt:
@@ -48,7 +57,7 @@ def crawl_and_resubmit(bundler: Bundler, expected_n: int, broker,
         while s < hi:
             e = min(s + bundle, hi)
             broker.put(new_task("real", {**task_template, "samples": [s, e]},
-                                priority=PRIORITY_REAL))
+                                priority=PRIORITY_REAL, queue=queue))
             n_tasks += 1
             s = e
     return n_missing, n_tasks
@@ -82,7 +91,7 @@ class SpeculativeReissuer:
             if now - leased_at > self.dup_after and \
                     self._dups.get(task.id, 0) < self.max_dups:
                 dup = new_task(task.kind, dict(task.payload),
-                               priority=task.priority)
+                               priority=task.priority, queue=task.queue)
                 self.broker.put(dup)
                 self._dups[task.id] = self._dups.get(task.id, 0) + 1
                 n += 1

@@ -173,12 +173,18 @@ class Context:
 class MerlinRuntime:
     def __init__(self, broker=None, workspace: str = "/tmp/merlin",
                  fns: Optional[Dict[str, Callable]] = None,
-                 hierarchy: H.HierarchyCfg = H.HierarchyCfg()):
+                 hierarchy: H.HierarchyCfg = H.HierarchyCfg(),
+                 real_queue: str = "real", gen_queue: str = "gen"):
         self.broker = broker if broker is not None else InMemoryBroker()
         self.workspace = workspace
         os.makedirs(workspace, exist_ok=True)
         self.fns = dict(fns or {})
         self.hcfg = hierarchy
+        # Sec. 2.2 routing: simulation (real) tasks and task-generation
+        # tasks live on separate named queues so workers can subscribe to
+        # either stream; priority still drains real before gen globally.
+        self.real_queue = real_queue
+        self.gen_queue = gen_queue
         self.counters = FileCounter(os.path.join(workspace, "_counters"))
         self.journal = Journal(os.path.join(workspace, "_journal.jsonl"))
         self._specs: Dict[str, StudySpec] = {}
@@ -203,11 +209,17 @@ class MerlinRuntime:
         meta = {"study": study, "n_samples": n,
                 "spec": _spec_to_dict(spec)}
         mpath = os.path.join(self.workspace, f"{study}.study.json")
+        # samples first, then meta, both via atomic rename: attach() treats
+        # the meta file as the commit point, so a crash mid-persist must
+        # never leave valid meta next to a missing/torn samples file
+        if samples is not None:
+            spath = os.path.join(self.workspace, f"{study}.samples.npy")
+            with open(spath + ".tmp", "wb") as f:
+                np.save(f, samples)
+            os.rename(spath + ".tmp", spath)
         with open(mpath + ".tmp", "w") as f:
             json.dump(meta, f)
         os.rename(mpath + ".tmp", mpath)
-        if samples is not None:
-            np.save(os.path.join(self.workspace, f"{study}.samples.npy"), samples)
         self.journal.append({"ev": "study_start", "study": study, "n": n})
         for ci in range(len(self._combos[study])):
             self._enqueue_stage(study, 0, ci, n)
@@ -223,17 +235,41 @@ class MerlinRuntime:
             return
         st = stages[stage_idx]
         extra = {"study": study, "stage": stage_idx, "combo": combo_idx,
-                 "n_samples": n_samples}
+                 "n_samples": n_samples,
+                 "real_queue": self.real_queue, "gen_queue": self.gen_queue}
         if st["kind"] == "single":
             self.broker.put(new_task("real", {**extra, "samples": [0, 1],
                                               "fanout": self.hcfg.max_fanout,
                                               "bundle": 1},
-                                     priority=PRIORITY_REAL))
+                                     priority=PRIORITY_REAL,
+                                     queue=self.real_queue))
         else:
             self.broker.put(H.root_task(study, str(stage_idx), n_samples,
                                         self.hcfg, extra=extra))
         self.journal.append({"ev": "stage_start", "study": study,
                              "stage": stage_idx, "combo": combo_idx})
+
+    def attach(self, study: str) -> str:
+        """Load a study persisted by another runtime instance's ``run()``.
+
+        Reconstructs the spec/stages/combos/samples from the workspace's
+        ``<study>.study.json`` + ``<study>.samples.npy`` so workers in a
+        fresh process (a new "batch allocation", or a restart after a
+        crash) can execute and advance a study they did not start.  Stage
+        counters and once-markers live on disk, so progress made before the
+        crash is preserved.
+        """
+        mpath = os.path.join(self.workspace, f"{study}.study.json")
+        with open(mpath) as f:
+            meta = json.load(f)
+        spec = _spec_from_dict(meta["spec"])
+        spec.validate()
+        self._specs[study] = spec
+        self._stages[study] = plan_stages(spec)
+        self._combos[study] = expand_parameters(spec)
+        spath = os.path.join(self.workspace, f"{study}.samples.npy")
+        self._samples[study] = np.load(spath) if os.path.exists(spath) else None
+        return study
 
     # -- stage bookkeeping (called by workers at bundle completion) ---------
     def _bundle_done(self, task: Task) -> None:
@@ -244,7 +280,10 @@ class MerlinRuntime:
         if st["kind"] == "single":
             expected = 1
         else:
-            expected = -(-n // self.hcfg.bundle)
+            # bundle size from the task payload, not this process's hcfg: a
+            # runtime that attach()ed with a different config must still
+            # agree with the producer on how many bundles complete a stage
+            expected = -(-n // p.get("bundle", self.hcfg.bundle))
         key = f"{study}/s{stage}/c{combo}"
         done = self.counters.incr(key)
         self.journal.append({"ev": "bundle_done", "study": study,
@@ -317,3 +356,11 @@ def _spec_to_dict(spec: StudySpec) -> Dict:
     return {"name": spec.name, "parameters": spec.parameters,
             "variables": spec.variables,
             "steps": [dc.asdict(s) for s in spec.steps]}
+
+
+def _spec_from_dict(d: Dict) -> StudySpec:
+    steps = [Step(**{**s, "depends": tuple(s.get("depends", ()))})
+             for s in d["steps"]]
+    return StudySpec(name=d["name"], steps=steps,
+                     parameters=d.get("parameters", {}),
+                     variables=d.get("variables", {}))

@@ -6,20 +6,30 @@ expanded, real tasks get executed — and can join or leave at any time
 ("surge computing": ``WorkerPool.scale()`` mid-study adds capacity exactly
 like a new batch allocation attaching to the Rabbit server).
 
+Named-queue routing: a worker constructed with ``queues=("sims",)`` only
+ever leases from the ``sims`` queue — the paper's routing-key mechanism for
+pinning simulation vs. ML workers to disjoint streams.  ``queues=None``
+(the default) subscribes to everything.  ``batch`` > 1 leases several tasks
+per broker round-trip (``get_many``/``ack_many``), which matters for the
+FileBroker where each claim is a filesystem rename.
+
 Fault injection (``failure_rate``) and the broker's visibility timeout
 together reproduce the paper's resilience story: a worker that "dies"
 mid-task simply never acks; the task is redelivered and, because real-task
-execution is idempotent (journal/once markers), re-running is safe.
+execution is idempotent (journal/once markers), re-running is safe.  Retry
+caps come from one shared :class:`~repro.core.resilience.RetryPolicy`, so
+both broker backends age out poison tasks identically.
 """
 from __future__ import annotations
 
 import random
 import threading
 import time
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from repro.core import hierarchy as H
 from repro.core.queue import Lease, Task
+from repro.core.resilience import RetryPolicy
 from repro.core.runtime import MerlinRuntime
 
 
@@ -30,7 +40,9 @@ class WorkerError(RuntimeError):
 class Worker(threading.Thread):
     def __init__(self, runtime: MerlinRuntime, worker_id: str,
                  stop_event: threading.Event, failure_rate: float = 0.0,
-                 seed: int = 0, poll_timeout: float = 0.05):
+                 seed: int = 0, poll_timeout: float = 0.05,
+                 queues: Optional[Sequence[str]] = None, batch: int = 1,
+                 retry_policy: Optional[RetryPolicy] = None):
         super().__init__(daemon=True, name=f"merlin-worker-{worker_id}")
         self.runtime = runtime
         self.worker_id = worker_id
@@ -38,30 +50,38 @@ class Worker(threading.Thread):
         self.failure_rate = failure_rate
         self.rng = random.Random(seed)
         self.poll_timeout = poll_timeout
+        self.queues = queues
+        self.batch = max(1, batch)
+        self.retry_policy = retry_policy or RetryPolicy()
         self.stats = {"gen": 0, "real": 0, "failed": 0}
         self.first_real_at: Optional[float] = None
 
     def run(self) -> None:
         broker = self.runtime.broker
         while not self.stop_event.is_set():
-            lease = broker.get(timeout=self.poll_timeout)
-            if lease is None:
+            leases = broker.get_many(self.batch, timeout=self.poll_timeout,
+                                     queues=self.queues)
+            if not leases:
                 continue
-            try:
-                self._dispatch(lease.task)
-            except Exception:
-                self.stats["failed"] += 1
-                self.runtime.journal.append(
-                    {"ev": "task_failed", "task": lease.task.id,
-                     "kind": lease.task.kind,
-                     "payload": {k: v for k, v in lease.task.payload.items()
-                                 if k != "spec"}})
-                if lease.task.retries < 3:
-                    broker.nack(lease.tag)
-                else:
-                    broker.ack(lease.tag)  # poison: give up, leave to crawler
-                continue
-            broker.ack(lease.tag)
+            acks: List[str] = []
+            for lease in leases:
+                try:
+                    self._dispatch(lease.task)
+                except Exception:
+                    self.stats["failed"] += 1
+                    self.runtime.journal.append(
+                        {"ev": "task_failed", "task": lease.task.id,
+                         "kind": lease.task.kind,
+                         "payload": {k: v for k, v in lease.task.payload.items()
+                                     if k != "spec"}})
+                    if self.retry_policy.should_retry(lease.task):
+                        broker.nack(lease.tag)
+                    else:
+                        broker.ack(lease.tag)  # poison: give up, leave to crawler
+                    continue
+                acks.append(lease.tag)
+            if acks:
+                broker.ack_many(acks)
 
     def _dispatch(self, task: Task) -> None:
         # injected failure: worker "dies" on this task (no ack, no effect)
@@ -81,14 +101,23 @@ class Worker(threading.Thread):
 
 
 class WorkerPool:
-    """An elastic pool of worker threads sharing one broker."""
+    """An elastic pool of worker threads sharing one broker.
+
+    ``queues`` pins every worker in the pool to the named queues (None =
+    all); ``batch`` sets the per-poll lease batch size.
+    """
 
     def __init__(self, runtime: MerlinRuntime, n_workers: int = 2,
-                 failure_rate: float = 0.0, seed: int = 0):
+                 failure_rate: float = 0.0, seed: int = 0,
+                 queues: Optional[Sequence[str]] = None, batch: int = 1,
+                 retry_policy: Optional[RetryPolicy] = None):
         self.runtime = runtime
         self.stop_event = threading.Event()
         self.failure_rate = failure_rate
         self.seed = seed
+        self.queues = queues
+        self.batch = batch
+        self.retry_policy = retry_policy
         self.workers: List[Worker] = []
         self.scale(n_workers)
 
@@ -98,7 +127,9 @@ class WorkerPool:
         for i in range(n_more):
             w = Worker(self.runtime, f"w{base + i}", self.stop_event,
                        failure_rate=self.failure_rate,
-                       seed=self.seed + base + i)
+                       seed=self.seed + base + i,
+                       queues=self.queues, batch=self.batch,
+                       retry_policy=self.retry_policy)
             w.start()
             self.workers.append(w)
 

@@ -1,0 +1,127 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The tier-1 suite property-tests the hierarchy/bundler/kernel invariants
+with hypothesis, but the runtime image does not ship it and we cannot pip
+install.  This shim implements the tiny strategy subset those tests use
+(integers / floats / lists / sets, ``@given``, ``@settings``) with a
+seeded PRNG, so the properties still execute over a few dozen random
+examples instead of being skipped.  When the real hypothesis is available
+(see requirements-dev.txt) conftest.py leaves it alone.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_MAX_EXAMPLES_CAP = 60  # keep suite runtime bounded
+
+
+class _Strategy:
+    def __init__(self, gen):
+        self._gen = gen
+
+    def example(self, rnd: random.Random):
+        return self._gen(rnd)
+
+
+def integers(min_value: int = 0, max_value: int = 100) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda r: r.choice(options))
+
+
+def _size(r: random.Random, min_size: int, max_size) -> int:
+    hi = max_size if max_size is not None else min_size + 20
+    return r.randint(min_size, max(hi, min_size))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size=None) -> _Strategy:
+    return _Strategy(lambda r: [elements.example(r)
+                                for _ in range(_size(r, min_size, max_size))])
+
+
+def sets(elements: _Strategy, min_size: int = 0, max_size=None) -> _Strategy:
+    # sets may come out smaller than the drawn size on duplicate elements —
+    # matches hypothesis' "best effort" semantics closely enough for tests
+    # that only require "some subset of the domain"
+    def gen(r):
+        out = {elements.example(r) for _ in range(_size(r, min_size, max_size))}
+        while len(out) < min_size:
+            out.add(elements.example(r))
+        return out
+    return _Strategy(gen)
+
+
+def settings(**kwargs):
+    def deco(fn):
+        fn._hyp_settings = dict(kwargs)
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test over N seeded random examples.
+
+    Like hypothesis, positional strategies fill the test's *rightmost*
+    parameters (anything to their left — pytest fixtures — passes through),
+    and keyword strategies fill by name.  The wrapper hides the filled
+    parameters from pytest via ``__signature__`` so fixture resolution
+    still works.
+    """
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        filled = set(kw_strategies)
+        pos_filled: list = []
+        if arg_strategies:
+            pos = [p.name for p in params if p.name not in filled]
+            pos_filled = pos[len(pos) - len(arg_strategies):]
+            filled.update(pos_filled)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_hyp_settings", {})
+            n = min(int(cfg.get("max_examples", 20)), _MAX_EXAMPLES_CAP)
+            rnd = random.Random(0)
+            for _ in range(n):
+                # generated values pass by NAME so fixtures pytest supplies
+                # (positionally or by keyword) can never collide with them
+                gen = {k: s.example(rnd)
+                       for k, s in zip(pos_filled, arg_strategies)}
+                gen.update((k, s.example(rnd))
+                           for k, s in kw_strategies.items())
+                fn(*args, **kwargs, **gen)
+
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in params if p.name not in filled])
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this module as `hypothesis` + `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__shim__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from",
+                 "lists", "sets"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -4,6 +4,15 @@ import sys
 # NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
 # tests and benches must see 1 device; only launch/dryrun.py forces 512.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # not installed in this image (see requirements-dev.txt): register the
+    # seeded-PRNG shim so the property tests still collect and run
+    import _hypothesis_fallback
+    _hypothesis_fallback.install()
 
 import numpy as np
 import pytest

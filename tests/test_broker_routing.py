@@ -1,0 +1,281 @@
+"""Named-queue routing, batch leasing, retry accounting parity between the
+two broker backends, and cross-process crash-resume through the FileBroker."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Bundler, MerlinRuntime, Step, StudySpec, WorkerPool
+from repro.core.hierarchy import HierarchyCfg
+from repro.core.queue import (PRIORITY_GEN, PRIORITY_REAL, FileBroker,
+                              InMemoryBroker, new_task)
+
+
+@pytest.fixture(params=["mem", "file"])
+def broker(request, tmp_path):
+    if request.param == "mem":
+        return InMemoryBroker(visibility_timeout=0.2)
+    return FileBroker(str(tmp_path / "q"), visibility_timeout=0.2)
+
+
+# ---------------------------------------------------------------------------
+# routing / isolation
+# ---------------------------------------------------------------------------
+
+def test_named_queue_isolation(broker):
+    """A task on queue 'sims' is never delivered to an 'ml' subscriber."""
+    broker.put(new_task("real", {"who": "sim"}, queue="sims"))
+    broker.put(new_task("real", {"who": "ml"}, queue="ml"))
+    assert broker.get(timeout=0.1, queues=("nosuch",)) is None
+    lease = broker.get(timeout=1, queues=("ml",))
+    assert lease.task.payload["who"] == "ml"
+    assert lease.task.queue == "ml"
+    broker.ack(lease.tag)
+    # the sims task is still there, untouched by the ml subscriber
+    assert broker.get(timeout=0.1, queues=("ml",)) is None
+    lease = broker.get(timeout=1, queues=("sims",))
+    assert lease.task.payload["who"] == "sim"
+
+
+def test_subscribe_all_sees_every_queue(broker):
+    for q in ("a", "b", "c"):
+        broker.put(new_task("real", {"q": q}, queue=q))
+    got = {broker.get(timeout=1).task.payload["q"] for _ in range(3)}
+    assert got == {"a", "b", "c"}
+
+
+def test_priority_order_across_queues(broker):
+    """Real outranks gen even when they live on different named queues."""
+    broker.put(new_task("gen", {"i": "g1"}, priority=PRIORITY_GEN, queue="gen"))
+    broker.put(new_task("real", {"i": "r1"}, priority=PRIORITY_REAL, queue="real"))
+    broker.put(new_task("gen", {"i": "g2"}, priority=PRIORITY_GEN, queue="gen"))
+    broker.put(new_task("real", {"i": "r2"}, priority=PRIORITY_REAL, queue="real"))
+    kinds = [broker.get(timeout=1).task.kind for _ in range(4)]
+    assert kinds == ["real", "real", "gen", "gen"]
+
+
+def test_string_queue_selector(broker):
+    broker.put(new_task("real", {}, queue="only"))
+    assert broker.get(timeout=1, queues="only") is not None
+
+
+def test_qsize_per_queue(broker):
+    for _ in range(3):
+        broker.put(new_task("real", {}, queue="a"))
+    broker.put(new_task("real", {}, queue="b"))
+    assert broker.qsize(("a",)) == 3
+    assert broker.qsize(("b",)) == 1
+    assert broker.qsize() == 4
+    assert set(broker.queue_names()) == {"a", "b"}
+
+
+# ---------------------------------------------------------------------------
+# batch operations
+# ---------------------------------------------------------------------------
+
+def test_get_many_ack_many(broker):
+    broker.put_many([new_task("real", {"i": i}) for i in range(10)])
+    leases = broker.get_many(4, timeout=1)
+    assert [l.task.payload["i"] for l in leases] == [0, 1, 2, 3]
+    broker.ack_many([l.tag for l in leases])
+    rest = broker.get_many(100, timeout=1)
+    assert [l.task.payload["i"] for l in rest] == [4, 5, 6, 7, 8, 9]
+    broker.ack_many([l.tag for l in rest])
+    assert broker.idle()
+    assert broker.stats["acked"] == 10
+
+
+def test_get_many_returns_partial_not_empty(broker):
+    broker.put(new_task("real", {}))
+    leases = broker.get_many(8, timeout=1)
+    assert len(leases) == 1
+    assert broker.get_many(8, timeout=0.05) == []
+
+
+# ---------------------------------------------------------------------------
+# retry accounting parity (satellite: FileBroker.nack must bump retries)
+# ---------------------------------------------------------------------------
+
+def test_nack_increments_retries(broker):
+    broker.put(new_task("real", {"x": 1}))
+    lease = broker.get(timeout=1)
+    assert lease.task.retries == 0
+    broker.nack(lease.tag)
+    lease2 = broker.get(timeout=1)
+    assert lease2.task.retries == 1
+    broker.nack(lease2.tag)
+    lease3 = broker.get(timeout=1)
+    assert lease3.task.retries == 2
+    assert broker.stats["redelivered"] == 2
+
+
+def test_lease_expiry_increments_retries(broker):
+    broker.put(new_task("real", {"x": 1}))
+    lease = broker.get(timeout=1)
+    assert broker.get(timeout=0.05) is None  # leased, invisible
+    time.sleep(0.35)  # > visibility_timeout
+    lease2 = broker.get(timeout=1)
+    assert lease2 is not None
+    assert lease2.task.retries == 1
+    assert broker.stats["redelivered"] >= 1
+
+
+def test_filebroker_stats(tmp_path):
+    b = FileBroker(str(tmp_path / "q"))
+    b.put_many([new_task("real", {"i": i}) for i in range(3)])
+    assert b.stats["enqueued"] == 3
+    lease = b.get(timeout=1)
+    b.nack(lease.tag)
+    assert b.stats["redelivered"] == 1
+    for _ in range(3):
+        b.ack(b.get(timeout=1).tag)
+    assert b.stats["acked"] == 3
+    assert b.idle()
+
+
+def test_filebroker_tmp_leak_sweep(tmp_path):
+    """A crashed producer's temp file is reaped by the expiry sweep."""
+    b = FileBroker(str(tmp_path / "q"), visibility_timeout=0.1)
+    b.put(new_task("real", {}, queue="sims"))
+    leak = os.path.join(b._qdir("sims"), ".tmp-deadbeef")
+    with open(leak, "w") as f:
+        f.write("{partial")
+    old = time.time() - 120
+    os.utime(leak, (old, old))
+    b._requeue_expired()
+    assert not os.path.exists(leak)
+    # the real pending task is unaffected
+    assert b.get(timeout=1) is not None
+
+
+def test_filebroker_shared_instance_thread_safety(tmp_path):
+    """WorkerPool threads share ONE FileBroker: the cached index must not
+    race (peek-then-pop on the heaps) under concurrent get_many."""
+    import threading
+    b = FileBroker(str(tmp_path / "q"))
+    n = 200
+    b.put_many([new_task("real", {"i": i}) for i in range(n)])
+    got, errors, lock = [], [], threading.Lock()
+
+    def worker():
+        try:
+            while True:
+                leases = b.get_many(4, timeout=0.2)
+                if not leases:
+                    return
+                b.ack_many([l.tag for l in leases])
+                with lock:
+                    got.extend(l.task.payload["i"] for l in leases)
+        except Exception as e:  # pragma: no cover - the bug under test
+            errors.append(e)
+
+    ts = [threading.Thread(target=worker) for _ in range(8)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert errors == []
+    assert sorted(got) == list(range(n))
+
+
+def test_filebroker_poison_file_dead_letters(tmp_path):
+    """An unparseable task file is quarantined, not redelivered forever."""
+    b = FileBroker(str(tmp_path / "q"), visibility_timeout=0.1)
+    b.put(new_task("real", {"ok": 1}))
+    # a corrupt file sorted FIRST in the queue dir
+    with open(os.path.join(b._qdir("default"), "000-000000000000-x.json"), "w") as f:
+        f.write("{not json")
+    lease = b.get(timeout=1)
+    assert lease.task.payload == {"ok": 1}
+    b.ack(lease.tag)
+    # the next dry poll rescans the dir, finds the poison, quarantines it
+    assert b.get(timeout=0.1) is None
+    assert b.idle()  # poison is in dead/, not pinning qsize/inflight
+    dead = os.listdir(os.path.join(str(tmp_path / "q"), "dead"))
+    assert len(dead) == 1 and dead[0].endswith("x.json")
+
+
+def test_attach_with_different_hierarchy_cfg(tmp_path):
+    """A resumed runtime must take the stage's bundle size from the task
+    payload, not its own (possibly different) HierarchyCfg."""
+    ws = str(tmp_path / "ws")
+    qdir = str(tmp_path / "q")
+    rt1 = MerlinRuntime(broker=FileBroker(qdir), workspace=ws,
+                        hierarchy=HierarchyCfg(max_fanout=4, bundle=10))
+    spec = StudySpec(name="cfg", steps=[Step(name="sim", fn="sim")])
+    sid = rt1.run(spec, np.zeros((40, 1), np.float32))
+    del rt1
+    # attaching runtime uses the DEFAULT config (bundle=1)
+    rt2 = MerlinRuntime(broker=FileBroker(qdir), workspace=ws)
+    done = []
+    rt2.register("sim", lambda ctx: done.append((ctx.lo, ctx.hi)))
+    rt2.attach(sid)
+    with WorkerPool(rt2, n_workers=2):
+        assert rt2.wait(sid, timeout=60)
+    assert sorted(done) == [(i, i + 10) for i in range(0, 40, 10)]
+
+
+def test_filebroker_cross_instance_routing(tmp_path):
+    """Two broker objects on one dir = two processes sharing named queues."""
+    b1 = FileBroker(str(tmp_path / "q"))
+    b2 = FileBroker(str(tmp_path / "q"), rescan_interval=0.0)
+    b1.put(new_task("real", {"from": "b1"}, queue="sims"))
+    assert b2.get(timeout=0.3, queues=("ml",)) is None
+    lease = b2.get(timeout=1, queues=("sims",))
+    assert lease.task.payload["from"] == "b1"
+    b2.ack(lease.tag)
+    assert b1.idle()
+
+
+# ---------------------------------------------------------------------------
+# worker routing + crash-resume through a shared FileBroker
+# ---------------------------------------------------------------------------
+
+def test_worker_pool_respects_queue_subscription(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path / "ws"),
+                       hierarchy=HierarchyCfg(max_fanout=4, bundle=4))
+    done = []
+    rt.register("sim", lambda ctx: done.append((ctx.lo, ctx.hi)))
+    spec = StudySpec(name="iso", steps=[Step(name="sim", fn="sim")])
+    # a pool pinned to an unrelated queue must never run anything
+    with WorkerPool(rt, n_workers=2, queues=("elsewhere",)) as pool:
+        sid = rt.run(spec, np.zeros((16, 1), np.float32))
+        assert not rt.wait(sid, timeout=1.0)
+        assert done == []
+    # a pool on the study's real+gen queues drains it
+    with WorkerPool(rt, n_workers=2,
+                    queues=(rt.real_queue, rt.gen_queue), batch=4) as pool:
+        assert rt.wait(sid, timeout=60)
+    assert sorted(done) == [(i, i + 4) for i in range(0, 16, 4)]
+
+
+def test_filebroker_crash_resume_two_runtimes(tmp_path):
+    """Sec. 3 surge/restart: runtime A enqueues and 'crashes' mid-study; a
+    fresh runtime B in a new 'allocation' attaches to the same workspace +
+    broker dir and finishes, including leases A abandoned."""
+    ws = str(tmp_path / "ws")
+    qdir = str(tmp_path / "q")
+    hcfg = HierarchyCfg(max_fanout=4, bundle=4)
+    results = Bundler(str(tmp_path / "res"))
+
+    rt1 = MerlinRuntime(broker=FileBroker(qdir, visibility_timeout=0.4),
+                        workspace=ws, hierarchy=hcfg)
+    spec = StudySpec(name="resume", steps=[Step(name="sim", fn="sim")])
+    samples = np.arange(32, dtype=np.float32).reshape(32, 1)
+    sid = rt1.run(spec, samples)
+    # "crash": claim the root gen task and die without acking
+    abandoned = rt1.broker.get(timeout=1)
+    assert abandoned is not None
+    del rt1
+
+    rt2 = MerlinRuntime(broker=FileBroker(qdir, visibility_timeout=5.0),
+                        workspace=ws, hierarchy=hcfg)
+    rt2.register("sim", lambda ctx: results.write_bundle(
+        ctx.lo, ctx.hi, {"y": ctx.sample_block[:, 0]}))
+    rt2.attach(sid)
+    with WorkerPool(rt2, n_workers=2) as pool:
+        assert rt2.wait(sid, timeout=90)
+        pool.drain(timeout=30)
+    data = results.load_all()
+    assert np.allclose(np.sort(data["y"]), np.arange(32))
+    # the abandoned lease was redelivered with its retry recorded
+    assert rt2.broker.stats["redelivered"] >= 1
