@@ -1,0 +1,306 @@
+"""Ensemble hot-path throughput benchmark (the post-broker bottleneck).
+
+Three measurements, each comparing the fused hot path against the seed
+("baseline") behavior re-created faithfully inside this process:
+
+* **ragged** — the optimization-loop scenario: a stream of ragged-size
+  bundles (the sizes an active-learning loop actually produces).  Baseline
+  constructs a fresh ``EnsembleExecutor`` per task with a private,
+  exact-size jit cache (the seed's ``OptimizationLoop._sim_step``); fused
+  uses one process-wide executor with power-of-two bucket padding.
+* **uniform** — the same comparison on fixed-size bundles, isolating the
+  executor-construction / cache-reuse win from the bucketing win.
+* **surrogate** — deep-ensemble training wall-clock: the seed's eager
+  per-member Python loop (jit re-closed per member => recompile per member,
+  ``steps`` dispatches each) vs the single jitted ``lax.scan`` over steps
+  vmapped over members.
+
+Recompile counts come from ``repro.core.ensemble.trace_count()`` (a counter
+incremented inside the traced function, i.e. once per XLA compile).
+
+Writes ``BENCH_ensemble.json`` at the repo root — schema documented in
+benchmarks/README.md.
+
+Usage: PYTHONPATH=src python -m benchmarks.ensemble_throughput [--quick]
+       [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+DEFAULT_OUT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_ensemble.json"))
+
+
+# ---------------------------------------------------------------------------
+# ragged / uniform bundle execution
+# ---------------------------------------------------------------------------
+
+def ragged_sizes(n_tasks: int, max_bundle: int, seed: int = 0) -> List[int]:
+    """A plausible optimization-loop size stream: mostly full bundles with a
+    ragged tail per iteration, plus odd resubmission fragments."""
+    rng = np.random.default_rng(seed)
+    sizes = []
+    while len(sizes) < n_tasks:
+        full, tail = divmod(int(rng.integers(1, 4) * max_bundle + rng.integers(0, max_bundle)),
+                            max_bundle)
+        sizes.extend([max_bundle] * full)
+        if tail:
+            sizes.append(tail)
+        if rng.random() < 0.3:  # a crawl-and-resubmit fragment
+            sizes.append(int(rng.integers(1, max(2, max_bundle // 2))))
+    return sizes[:n_tasks]
+
+
+def _run_stream(sizes: List[int], fused: bool, workdir: str) -> Dict:
+    """Execute one bundle per size; returns wall-clock + trace accounting."""
+    import jax  # noqa: F401  (imported late so --help stays fast)
+    from repro.core import ensemble as E
+    from repro.core.bundler import Bundler
+    from repro.sim import jag_simulate
+
+    # a per-stream wrapper gives each scenario its own compile-cache key,
+    # so every measurement pays its own compiles (no cross-scenario warmth)
+    def simulator(u, rng):
+        return jag_simulate(u, rng)
+
+    rng = np.random.default_rng(1)
+    blocks = [rng.random((s, 5)).astype(np.float32) for s in sizes]
+    bundler = Bundler(workdir)
+    t_traces = E.trace_count()
+    shared = E.EnsembleExecutor(simulator, bundler) if fused else None
+    lo = 0
+    t0 = time.perf_counter()
+    for block in blocks:
+        hi = lo + len(block)
+        if fused:
+            ex = shared
+        else:
+            # the seed hot path: fresh executor per task, private cache,
+            # exact-size compile (bucketing off)
+            ex = E.EnsembleExecutor(simulator, bundler, bucketed=False,
+                                    share_cache=False)
+        ex.run_bundle(lo, hi, block)
+        lo = hi
+    wall = time.perf_counter() - t0
+    n = sum(sizes)
+    return {"tasks": len(sizes), "samples": n, "wall_s": wall,
+            "samples_per_s": n / wall,
+            "traces": E.trace_count() - t_traces}
+
+
+def bench_bundles(n_tasks: int, max_bundle: int, workroot: str) -> Dict:
+    import tempfile
+    out: Dict = {}
+    for name, sizes in (
+            ("ragged", ragged_sizes(n_tasks, max_bundle)),
+            ("uniform", [max_bundle] * n_tasks)):
+        row: Dict = {"max_bundle": max_bundle}
+        for mode in ("baseline", "fused"):
+            with tempfile.TemporaryDirectory(dir=workroot) as d:
+                row[mode] = _run_stream(sizes, mode == "fused", d)
+        row["speedup"] = (row["fused"]["samples_per_s"]
+                         / row["baseline"]["samples_per_s"])
+        # the bucket schedule bounds fused compiles: one per power-of-two
+        # bucket <= max bundle size in the stream
+        row["bucket_bound"] = int(math.ceil(math.log2(max(sizes)))) + 1
+        out[name] = row
+    return out
+
+
+# ---------------------------------------------------------------------------
+# surrogate training
+# ---------------------------------------------------------------------------
+
+def _train_reference(X, y, n_members=3, hidden=64, steps=300, lr=3e-3, seed=0):
+    """The seed's eager per-member loop, verbatim (kept here as the
+    baseline; core/active.py now trains with one scanned compile)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.active import Surrogate, _mlp_apply, _mlp_init
+
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+
+    def loss_fn(p):
+        return jnp.mean((_mlp_apply(p, X) - y) ** 2)
+
+    members = []
+    for m in range(n_members):
+        rng = jax.random.PRNGKey(seed * 131 + m)
+        p = _mlp_init(rng, [X.shape[1], hidden, hidden, 1])
+        mom = jax.tree.map(jnp.zeros_like, p)
+        vel = jax.tree.map(jnp.zeros_like, p)
+
+        @jax.jit
+        def step(p, mom, vel, i):
+            g = jax.grad(loss_fn)(p)
+            mom = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, mom, g)
+            vel = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ ** 2,
+                               vel, g)
+            p = jax.tree.map(
+                lambda p_, m_, v_: p_ - lr * m_ / (jnp.sqrt(v_) + 1e-8),
+                p, mom, vel)
+            return p, mom, vel
+
+        for i in range(steps):
+            p, mom, vel = step(p, mom, vel, i)
+        members.append(p)
+    return Surrogate(members)
+
+
+def bench_surrogate(n_rows: int, steps: int, repeats: int = 3) -> Dict:
+    """Per-call training wall-clock at the optimization loop's archive size.
+
+    The loop trains two surrogates per iteration, every iteration, on an
+    archive of batch_per_iter × iters rows (~50–200).  The seed loop
+    re-closes and re-jits its step per member on EVERY call, so each call
+    pays n_members compiles plus steps × members eager dispatches — that
+    recurring cost is the baseline (min over calls; every call recompiles
+    by construction).  The scanned trainer compiles once per row-bucket per
+    process (reported as ``scanned_cold_s``) and every subsequent call runs
+    warm (``scanned_s`` = min over warm calls) — the steady-state cost the
+    loop actually pays from its second training call onward."""
+    from repro.core.active import train_surrogate
+
+    rng = np.random.default_rng(0)
+    X = rng.random((n_rows, 5)).astype(np.float32)
+    y = (np.sin(3 * X[:, 0]) + X[:, 1] ** 2).astype(np.float32)
+    y = (y - y.min()) / (y.max() - y.min())
+
+    def timed(fn, seed):
+        t0 = time.perf_counter()
+        sur = fn(seed)
+        sur.predict(X[:8])  # force any pending device work
+        return time.perf_counter() - t0, sur
+
+    base_calls, scan_calls = [], []
+    sur_b = sur_s = None
+    for r in range(repeats):
+        dt, sur_b = timed(lambda s: _train_reference(X, y, steps=steps,
+                                                     seed=s), 0)
+        base_calls.append(dt)
+        dt, sur_s = timed(lambda s: train_surrogate(X, y, steps=steps,
+                                                    seed=s), 0)
+        scan_calls.append(dt)
+    mu_b, _ = sur_b.predict(X)
+    mu_s, _ = sur_s.predict(X)
+    base_s = min(base_calls)
+    scan_s = min(scan_calls[1:]) if len(scan_calls) > 1 else scan_calls[0]
+    return {"rows": n_rows, "steps": steps,
+            "baseline_s": base_s, "scanned_s": scan_s,
+            "scanned_cold_s": scan_calls[0],
+            "speedup": base_s / scan_s,
+            "prediction_max_abs_diff": float(np.max(np.abs(mu_b - mu_s)))}
+
+
+# ---------------------------------------------------------------------------
+# incremental archive loads
+# ---------------------------------------------------------------------------
+
+def bench_loads(n_bundles: int, bundle: int, workroot: str) -> Dict:
+    """Cost of the analyze-funnel read: full re-read vs cached/incremental."""
+    import tempfile
+    from repro.core.bundler import Bundler
+    rng = np.random.default_rng(2)
+    with tempfile.TemporaryDirectory(dir=workroot) as d:
+        b = Bundler(d)
+        for i in range(n_bundles):
+            lo = i * bundle
+            b.write_bundle(lo, lo + bundle, {
+                "inputs": rng.random((bundle, 5)).astype(np.float32),
+                "yield": rng.random(bundle).astype(np.float32)})
+        cold = Bundler(d)
+        t0 = time.perf_counter()
+        cold.load_all()
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cold.load_all()  # warm: unchanged tree, served from cache
+        warm_s = time.perf_counter() - t0
+        # incremental: one new bundle lands, only it is decompressed
+        lo = n_bundles * bundle
+        b.write_bundle(lo, lo + bundle, {
+            "inputs": rng.random((bundle, 5)).astype(np.float32),
+            "yield": rng.random(bundle).astype(np.float32)})
+        t0 = time.perf_counter()
+        cold.load_all()
+        incr_s = time.perf_counter() - t0
+    return {"bundles": n_bundles, "bundle": bundle,
+            "cold_load_s": cold_s, "warm_load_s": warm_s,
+            "incremental_load_s": incr_s,
+            "warm_speedup": cold_s / max(warm_s, 1e-9)}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run(quick: bool = False, out: str = DEFAULT_OUT, workroot: str = None,
+        n_tasks: int = None, max_bundle: int = None, sur_rows: int = None,
+        sur_steps: int = None, load_bundles: int = None) -> Dict:
+    """Explicit size kwargs override the quick/full presets (the slow-marked
+    smoke test runs everything tiny so the bench itself cannot rot)."""
+    import tempfile
+    import jax
+
+    workroot = workroot or tempfile.gettempdir()
+    n_tasks = n_tasks or (24 if quick else 96)
+    max_bundle = max_bundle or (16 if quick else 48)
+    results = {
+        "meta": {
+            "bench": "ensemble_throughput",
+            "quick": quick,
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "unix_time": time.time(),
+        },
+        **bench_bundles(n_tasks, max_bundle, workroot),
+        # 128 rows ≈ the loop's archive after 2–3 iterations of batch 48
+        "surrogate": bench_surrogate(n_rows=sur_rows or (64 if quick else 128),
+                                     steps=sur_steps or (100 if quick else 300),
+                                     repeats=2 if quick else 3),
+        "loads": bench_loads(n_bundles=load_bundles or (20 if quick else 100),
+                             bundle=16, workroot=workroot),
+    }
+    if out:
+        tmp = out + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(results, f, indent=2)
+        os.rename(tmp, out)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="where to write BENCH_ensemble.json ('' to skip)")
+    args = ap.parse_args()
+    r = run(quick=args.quick, out=args.out or None)
+    for scen in ("ragged", "uniform"):
+        row = r[scen]
+        print(f"{scen}: {row['baseline']['samples_per_s']:.0f} -> "
+              f"{row['fused']['samples_per_s']:.0f} samples/s "
+              f"({row['speedup']:.1f}x); compiles "
+              f"{row['baseline']['traces']} -> {row['fused']['traces']} "
+              f"(bound {row['bucket_bound']})")
+    s = r["surrogate"]
+    print(f"surrogate: {s['baseline_s']:.2f}s -> {s['scanned_s']:.2f}s "
+          f"({s['speedup']:.1f}x), max |Δmu|={s['prediction_max_abs_diff']:.2e}")
+    ld = r["loads"]
+    print(f"loads: cold {ld['cold_load_s']*1e3:.1f}ms, warm "
+          f"{ld['warm_load_s']*1e3:.2f}ms, +1 bundle "
+          f"{ld['incremental_load_s']*1e3:.2f}ms")
+    if args.out:
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -55,6 +55,21 @@ def main() -> None:
                      r["us_per_sample"],
                      f"{r['samples_per_s']:.0f} sims/s"))
 
+    # ensemble hot-path bench: in --quick mode run it tiny and emit the
+    # BENCH_ensemble.json perf-trajectory artifact at the repo root
+    if args.quick:
+        from benchmarks import ensemble_throughput as ET
+        et = ET.run(quick=True)
+        for scen in ("ragged", "uniform"):
+            rows.append((f"ensemble_{scen}",
+                         1e6 / et[scen]["fused"]["samples_per_s"],
+                         f"{et[scen]['speedup']:.1f}x vs per-task path; "
+                         f"{et[scen]['fused']['traces']} compiles "
+                         f"(bound {et[scen]['bucket_bound']})"))
+        rows.append(("ensemble_surrogate_train",
+                     et["surrogate"]["scanned_s"] * 1e6,
+                     f"{et['surrogate']['speedup']:.1f}x vs eager loop"))
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")

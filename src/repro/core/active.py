@@ -10,11 +10,27 @@ Loop per iteration, exactly the HYDRA capsule-robustness workflow:
 
 The surrogate is a small JAX MLP ensemble (deep ensembles for cheap
 uncertainty); the simulator is any vmappable f(u, rng)->dict (JAG here).
+
+Hot-path layout (the AI half of the AI–HPC coupling):
+
+* ``train_surrogate`` is ONE jitted ``lax.scan`` over optimizer steps,
+  ``vmap``-ed over ensemble members — a single compile and a single device
+  loop instead of n_members × steps eager dispatches.  Training rows are
+  padded to power-of-two buckets (core/ensemble.bucket_for) with a masked
+  loss, so the growing per-iteration archive re-uses compiled programs
+  instead of re-tracing at every new dataset size.
+* ``Surrogate.predict`` is one jitted batched apply over the stacked member
+  pytree (row-padded the same way), shared process-wide across instances.
+* ``OptimizationLoop`` keeps one executor per iteration (all sharing the
+  process-wide simulator compile cache) and one Bundler whose cached
+  ``load_all`` re-reads only bundles that appeared since the last funnel.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
+import threading
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -22,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bundler import Bundler
-from repro.core.ensemble import EnsembleExecutor
+from repro.core.ensemble import EnsembleExecutor, bucket_for, pad_rows
 from repro.core.runtime import MerlinRuntime
 from repro.core.spec import Step, StudySpec
 
@@ -48,47 +64,90 @@ def _mlp_apply(params, x):
     return x[..., 0]
 
 
+@jax.jit
+def _ensemble_apply(stacked, X):
+    """Batched deep-ensemble forward: member axis leads the stacked pytree."""
+    preds = jax.vmap(_mlp_apply, in_axes=(0, None))(stacked, X)
+    return preds.mean(0), preds.std(0)
+
+
 @dataclasses.dataclass
 class Surrogate:
     params_list: List
 
+    @property
+    def stacked(self):
+        """Members stacked on a leading axis (computed once, cached)."""
+        s = getattr(self, "_stacked", None)
+        if s is None:
+            s = jax.tree.map(lambda *ls: jnp.stack(ls), *self.params_list)
+            object.__setattr__(self, "_stacked", s)
+        return s
+
+    @classmethod
+    def from_stacked(cls, stacked, n_members: int) -> "Surrogate":
+        members = [jax.tree.map(lambda a: a[m], stacked)
+                   for m in range(n_members)]
+        sur = cls(members)
+        object.__setattr__(sur, "_stacked", stacked)
+        return sur
+
     def predict(self, X) -> Tuple[np.ndarray, np.ndarray]:
-        preds = jnp.stack([_mlp_apply(p, jnp.asarray(X))
-                           for p in self.params_list])
-        return np.asarray(preds.mean(0)), np.asarray(preds.std(0))
+        """One jitted device launch; rows padded to a bucket so repeated
+        calls at drifting batch sizes hit the compile cache."""
+        X = np.asarray(X, np.float32)
+        n = len(X)
+        mu, sd = _ensemble_apply(self.stacked,
+                                 jnp.asarray(pad_rows(X, bucket_for(n))))
+        return np.asarray(mu[:n]), np.asarray(sd[:n])
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "lr"))
+def _fit_members(params0, X, y, w, steps: int, lr: float):
+    """Deep-ensemble Adam fit: ``lax.scan`` over steps, members vmapped.
+
+    ``w`` masks padded rows out of the loss (sum(w·err²)/sum(w) equals the
+    unpadded mean exactly); the update rule reproduces the seed's simple
+    Adam (no bias correction) so results match the eager per-member loop.
+    """
+    def member_loss(p):
+        err = _mlp_apply(p, X) - y
+        return jnp.sum(w * err ** 2) / jnp.sum(w)
+
+    zeros = jax.tree.map(jnp.zeros_like, params0)
+
+    def body(carry, _):
+        p, mom, vel = carry
+        g = jax.vmap(jax.grad(member_loss))(p)
+        mom = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, mom, g)
+        vel = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ ** 2, vel, g)
+        p = jax.tree.map(
+            lambda p_, m_, v_: p_ - lr * m_ / (jnp.sqrt(v_) + 1e-8),
+            p, mom, vel)
+        return (p, mom, vel), None
+
+    (params, _, _), _ = jax.lax.scan(body, (params0, zeros, zeros), None,
+                                     length=steps)
+    return params
 
 
 def train_surrogate(X: np.ndarray, y: np.ndarray, n_members: int = 3,
                     hidden: int = 64, steps: int = 300, lr: float = 3e-3,
-                    seed: int = 0) -> Surrogate:
-    X = jnp.asarray(X, jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
-
-    def loss_fn(p):
-        return jnp.mean((_mlp_apply(p, X) - y) ** 2)
-
-    members = []
-    for m in range(n_members):
-        rng = jax.random.PRNGKey(seed * 131 + m)
-        p = _mlp_init(rng, [X.shape[1], hidden, hidden, 1])
-        # simple Adam
-        mom = jax.tree.map(jnp.zeros_like, p)
-        vel = jax.tree.map(jnp.zeros_like, p)
-
-        @jax.jit
-        def step(p, mom, vel, i):
-            g = jax.grad(loss_fn)(p)
-            mom = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, mom, g)
-            vel = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ ** 2, vel, g)
-            p = jax.tree.map(
-                lambda p_, m_, v_: p_ - lr * m_ / (jnp.sqrt(v_) + 1e-8),
-                p, mom, vel)
-            return p, mom, vel
-
-        for i in range(steps):
-            p, mom, vel = step(p, mom, vel, i)
-        members.append(p)
-    return Surrogate(members)
+                    seed: int = 0, pad: bool = True) -> Surrogate:
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.float32)
+    n = len(X)
+    cap = bucket_for(n) if pad else n
+    w = np.zeros(cap, np.float32)
+    w[:n] = 1.0
+    rngs = jnp.stack([jax.random.PRNGKey(seed * 131 + m)
+                      for m in range(n_members)])
+    dims = (X.shape[1], hidden, hidden, 1)
+    params0 = jax.vmap(lambda r: _mlp_init(r, dims))(rngs)
+    params = _fit_members(params0, jnp.asarray(pad_rows(X, cap)),
+                          jnp.asarray(pad_rows(y, cap)), jnp.asarray(w),
+                          steps, lr)
+    return Surrogate.from_stacked(params, n_members)
 
 
 # ---------------------------------------------------------------------------
@@ -150,18 +209,32 @@ class OptimizationLoop:
         self.history: List[Dict] = []
         self.simulator = simulator
         self.root = os.path.join(runtime.workspace, "opt_results")
-        # all-iteration view (load_all/crawl walk recursively)
+        # all-iteration view (load_all/crawl walk recursively); its per-file
+        # cache makes each funnel's load incremental over the archive
         self.bundler = Bundler(self.root)
+        # per-iteration executors live for the whole loop: jit cache and
+        # bundler handles are reused across every task of an iteration (and
+        # the compiled simulator is shared process-wide across iterations)
+        self._executors: Dict[int, EnsembleExecutor] = {}
+        self._exec_lock = threading.Lock()
         runtime.register("opt_simulate", self._sim_step)
         runtime.register("opt_analyze", self._analyze_step)
 
+    def _executor(self, iteration: int) -> EnsembleExecutor:
+        with self._exec_lock:
+            ex = self._executors.get(iteration)
+            if ex is None:
+                # one bundler sub-tree per iteration: sample ids restart at
+                # 0 each iteration, so results must not collide across them
+                b = Bundler(os.path.join(self.root, f"iter{iteration:03d}"))
+                ex = EnsembleExecutor(self.simulator, b)
+                self._executors[iteration] = ex
+            return ex
+
     def _sim_step(self, ctx) -> None:
-        # one bundler sub-tree per iteration: sample ids restart at 0 each
-        # iteration, so results must not collide across iterations
         it = int(ctx.variables["ITER"])
-        b = Bundler(os.path.join(self.root, f"iter{it:03d}"))
-        EnsembleExecutor(self.simulator, b).run_bundle(
-            ctx.lo, ctx.hi, ctx.sample_block)
+        self._executor(it).run_bundle(ctx.lo, ctx.hi, ctx.sample_block,
+                                      sub_ranges=ctx.sub_ranges)
 
     def _spec(self, iteration: int) -> StudySpec:
         return StudySpec(

@@ -10,13 +10,31 @@ asynchronous writers, exactly the paper's design.
 ``crawl()`` is the resilience primitive: walk the tree, return which sample
 ids actually made it to disk (and which files are corrupt), so missing work
 can be resubmitted (the 70% -> 99.755% story).
+
+Incremental loading
+-------------------
+The learner side of the loop (core/active.py) re-reads the archive at every
+funnel.  ``load_all`` therefore keeps a per-file cache keyed by the file's
+``(inode, mtime_ns, size)`` signature: only files that appeared or changed
+since the previous call are decompressed, everything else is served from
+memory, and an unchanged tree returns the previously concatenated result
+without touching the files at all.  ``load_since(cursor)`` exposes the same
+machinery as an explicit delta: it returns only the records from files not
+yet covered by ``cursor`` plus the advanced cursor.  Writers publish via
+atomic rename (fresh inode per publish), so a cached signature can never
+alias a concurrent rewrite.  Note that aggregation rewrites sample ids into
+a *new* file, so a cursor held across ``aggregate_leaf`` re-delivers those
+ids — hold cursors within one aggregation epoch.
 """
 from __future__ import annotations
 
 import os
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Set, Tuple
 
 import numpy as np
+
+# a file's identity-and-content signature: (inode, mtime_ns, size)
+Sig = Tuple[int, int, int]
 
 
 class Bundler:
@@ -24,6 +42,9 @@ class Bundler:
         self.root = root
         self.files_per_leaf = files_per_leaf
         os.makedirs(root, exist_ok=True)
+        self._file_cache: Dict[str, Tuple[Sig, Dict[str, np.ndarray]]] = {}
+        self._all_cache: Optional[Tuple[Dict[str, Sig],
+                                        Dict[str, np.ndarray]]] = None
 
     # -- writing -------------------------------------------------------------
     def leaf_dir(self, bundle_lo: int, bundle_size: int) -> str:
@@ -86,20 +107,90 @@ class Bundler:
                     corrupt.append(path)
         return present, corrupt
 
-    def load_all(self) -> Dict[str, np.ndarray]:
-        """Load every result in sample-id order (for the learner side)."""
-        chunks: List[Dict[str, np.ndarray]] = []
+    # -- loading --------------------------------------------------------------
+    def _scan(self) -> Dict[str, Sig]:
+        """Stat every published result file: path -> signature."""
+        sigs: Dict[str, Sig] = {}
         for dirpath, _, files in os.walk(self.root):
             for f in sorted(files):
-                if f.endswith(".npz") and not f.startswith("."):
-                    chunks.append(dict(np.load(os.path.join(dirpath, f))))
+                if not f.endswith(".npz") or f.startswith("."):
+                    continue
+                path = os.path.join(dirpath, f)
+                try:
+                    st = os.stat(path)
+                except OSError:
+                    continue  # deleted between walk and stat (aggregation)
+                sigs[path] = (st.st_ino, st.st_mtime_ns, st.st_size)
+        return sigs
+
+    def _load_file(self, path: str, sig: Sig) -> Optional[Dict[str, np.ndarray]]:
+        """Load one bundle through the per-file cache (None if it vanished)."""
+        hit = self._file_cache.get(path)
+        if hit is not None and hit[0] == sig:
+            return hit[1]
+        try:
+            with np.load(path) as z:
+                data = {k: z[k] for k in z.files}
+        except (OSError, ValueError):
+            self._file_cache.pop(path, None)
+            return None
+        self._file_cache[path] = (sig, data)
+        return data
+
+    @staticmethod
+    def _concat(chunks: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
         if not chunks:
             return {}
         order = np.argsort(np.concatenate([c["_sample_ids"] for c in chunks]))
-        out = {}
-        for k in chunks[0].keys():
-            out[k] = np.concatenate([c[k] for c in chunks])[order]
-        return out
+        return {k: np.concatenate([c[k] for c in chunks])[order]
+                for k in chunks[0].keys()}
+
+    def load_all(self) -> Dict[str, np.ndarray]:
+        """Load every result in sample-id order (for the learner side).
+
+        Incremental: only files whose signature changed since the previous
+        call are read from disk; an unchanged tree returns the cached
+        concatenation directly.
+        """
+        sigs = self._scan()
+        if self._all_cache is not None and self._all_cache[0] == sigs:
+            return dict(self._all_cache[1])  # shallow copy: callers may pop
+        chunks = []
+        for path in sorted(sigs):
+            data = self._load_file(path, sigs[path])
+            if data is not None:
+                chunks.append(data)
+            else:
+                sigs.pop(path)
+        # evict cache entries for files that no longer exist (aggregation)
+        for stale in set(self._file_cache) - set(sigs):
+            del self._file_cache[stale]
+        out = self._concat(chunks)
+        self._all_cache = (sigs, out)
+        return dict(out)
+
+    def load_since(self, cursor: Optional[Mapping[str, Sig]] = None
+                   ) -> Tuple[Dict[str, np.ndarray], Dict[str, Sig]]:
+        """Delta load: records from files not covered by ``cursor``.
+
+        Returns ``(data, new_cursor)``; start with ``cursor=None`` and feed
+        each returned cursor into the next call.  Safe under concurrent
+        writers: publishes are atomic renames, so every bundle is returned
+        exactly once per cursor chain (aggregation epochs aside, see module
+        docstring).
+        """
+        cursor = dict(cursor) if cursor else {}
+        sigs = self._scan()
+        chunks = []
+        for path in sorted(sigs):
+            if cursor.get(path) == sigs[path]:
+                continue
+            data = self._load_file(path, sigs[path])
+            if data is not None:
+                chunks.append(data)
+            else:
+                sigs.pop(path)
+        return self._concat(chunks), sigs
 
 
 def missing_samples(expected_n: int, present: Set[int]) -> List[Tuple[int, int]]:

@@ -73,8 +73,11 @@ class CalibrationCascade:
 
     def _calib_sim_step(self, ctx) -> None:
         metro = ctx.combo["METRO"]
+        # fresh executor objects are cheap: compiled simulators live in the
+        # process-wide cache, so per-step construction reuses XLA programs
         ex = EnsembleExecutor(self.sim, self._bundler("calib", metro))
-        ex.run_bundle(ctx.lo, ctx.hi, ctx.sample_block)
+        ex.run_bundle(ctx.lo, ctx.hi, ctx.sample_block,
+                      sub_ranges=ctx.sub_ranges)
 
     def _select_step(self, ctx) -> None:
         """ABC selection + dynamic phase-2 launch (from inside a worker)."""
@@ -106,7 +109,7 @@ class CalibrationCascade:
         comp = self.scenarios[scen]["compliance"]
         block[:, 4] = comp / 0.8  # overwrite compliance dim (rescaled [0,0.8])
         ex = EnsembleExecutor(self.sim, self._bundler(f"fc_{scen}", metro))
-        ex.run_bundle(ctx.lo, ctx.hi, block)
+        ex.run_bundle(ctx.lo, ctx.hi, block, sub_ranges=ctx.sub_ranges)
 
     def _package_step(self, ctx) -> None:
         metro = ctx.variables["METRO"]

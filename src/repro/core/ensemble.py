@@ -8,14 +8,46 @@ distributed over the mesh's data axis, so the marginal per-sample overhead
 is device-level, not process-level.  The hierarchy (core/hierarchy.py) still
 generates the index space; only the leaf execution is fused.
 
+Bucketing policy
+----------------
+Ragged bundle sizes are the enemy of a jit cache: an optimization loop that
+re-slices its batch every iteration produces O(#distinct sizes) distinct
+``vmap`` shapes, each a fresh XLA compile.  ``run_bundle`` therefore pads
+every batch up to the next power-of-two *bucket* (``bucket_for``) with
+repeated edge rows and masked (don't-care) seeds, runs the compiled bucket
+program, and slices the outputs back to the real ``[lo, hi)`` extent, so
+the total number of compiles for any workload is O(log2 max_bundle), not
+O(#distinct sizes).
+
+Compile-cache policy
+--------------------
+The jit cache is **process-wide** by default: executors created for
+different bundlers / iterations / studies share compiled programs keyed by
+``(simulator, mesh, data_axis, bucket)``.  A fresh ``EnsembleExecutor`` per
+task (the seed behavior) therefore no longer discards compiled code.  Pass
+``share_cache=False`` to opt a specific executor out (used by benchmarks to
+reproduce the pre-bucketing baseline).  ``trace_count()`` exposes a global
+trace counter for compile-count regression tests.
+
+Dispatch is async: the jitted call returns device futures; results are
+synchronized (``jax.block_until_ready``) only when they must be
+materialized — at bundler-write time, or when the caller asks for numpy
+(``block=True``, the default).
+
 ``EnsembleExecutor.step_fn()`` returns a Merlin fn-step closure that runs
 the simulator over ``ctx.sample_block`` and writes results through the
 Bundler — i.e. the whole JAG workflow (Fig. 7) as one registered step.
+Coalesced contexts (``ctx.sub_ranges``, core/runtime.py) execute as one
+device launch but still publish one bundle file per original sub-task, so
+the on-disk layout, crawl/resubmit granularity, and idempotency markers are
+identical to per-task execution.
 """
 from __future__ import annotations
 
+import threading
 import time
-from typing import Callable, Dict, Optional
+import weakref
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,47 +55,141 @@ import numpy as np
 
 from repro.core.bundler import Bundler
 
+# process-wide compile cache + trace counter ---------------------------------
+# Outer level is a WeakKeyDictionary on the simulator callable: per-study
+# simulator closures (and the XLA executables compiled for them) are evicted
+# when the last executor referencing them dies, so a long-lived worker
+# process does not pin dead simulators forever.
+_CACHE_LOCK = threading.Lock()
+_SHARED_JIT: "weakref.WeakKeyDictionary[Callable, Dict[Tuple, Callable]]" = \
+    weakref.WeakKeyDictionary()
+_TRACE_COUNT = 0
+
+
+def _count_trace() -> None:
+    """Called from inside traced functions: runs once per (re)trace."""
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+
+
+def trace_count() -> int:
+    """Total simulator traces (== XLA compiles) in this process so far."""
+    return _TRACE_COUNT
+
+
+def bucket_for(n: int) -> int:
+    """Smallest power-of-two >= n: the padded batch size for a ragged n."""
+    if n <= 1:
+        return 1
+    return 1 << (n - 1).bit_length()
+
+
+def bucket_schedule(max_n: int) -> List[int]:
+    """All bucket sizes needed for bundles up to ``max_n`` (the compile
+    bound asserted by the regression test: len == ceil(log2 max_n) + 1)."""
+    out = [1]
+    while out[-1] < max_n:
+        out.append(out[-1] * 2)
+    return out
+
+
+def pad_rows(arr: np.ndarray, to: int) -> np.ndarray:
+    """Pad a (n, ...) array to ``to`` rows by repeating the last row (keeps
+    padded work numerically tame; outputs for pad rows are discarded)."""
+    n = len(arr)
+    if n == to:
+        return arr
+    reps = np.repeat(arr[-1:], to - n, axis=0)
+    return np.concatenate([arr, reps], axis=0)
+
 
 class EnsembleExecutor:
     def __init__(self, simulator: Callable, bundler: Optional[Bundler] = None,
-                 mesh=None, data_axis: str = "data"):
+                 mesh=None, data_axis: str = "data", bucketed: bool = True,
+                 share_cache: bool = True):
         """simulator: f(params_row: (d,) array, rng) -> dict of arrays."""
         self.simulator = simulator
         self.bundler = bundler
         self.mesh = mesh
         self.data_axis = data_axis
-        self._jitted: Dict[int, Callable] = {}
-        self.stats = {"bundles": 0, "samples": 0, "sim_time": 0.0}
+        self.bucketed = bucketed
+        self.share_cache = share_cache
+        self._private_jit: Dict[Tuple, Callable] = {}
+        self.stats = {"bundles": 0, "samples": 0, "sim_time": 0.0,
+                      "compiles": 0, "launches": 0, "padded_samples": 0}
+
+    def _build(self, n: int) -> Callable:
+        def run(batch, seeds):
+            _count_trace()
+            rngs = jax.vmap(jax.random.PRNGKey)(seeds)
+            return jax.vmap(self.simulator)(batch, rngs)
+
+        # donation frees the input buffers for reuse by the outputs; XLA on
+        # CPU can't honor it and warns, so only donate on real accelerators
+        donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            axis = self.data_axis if n % self.mesh.shape[self.data_axis] == 0 \
+                else None
+            sh = NamedSharding(self.mesh, P(axis))
+            return jax.jit(run, in_shardings=(sh, sh), out_shardings=sh,
+                           donate_argnums=donate)
+        return jax.jit(run, donate_argnums=donate)
 
     def _compiled(self, n: int) -> Callable:
-        """One jitted vmapped simulator per bundle size (cached)."""
-        if n not in self._jitted:
-            def run(batch, seeds):
-                rngs = jax.vmap(jax.random.PRNGKey)(seeds)
-                return jax.vmap(self.simulator)(batch, rngs)
+        """The jitted vmapped simulator for padded size n (cached; shared
+        process-wide unless this executor opted out)."""
+        key = (self.mesh, self.data_axis, n)
+        if self.share_cache:
+            with _CACHE_LOCK:
+                per_sim = _SHARED_JIT.setdefault(self.simulator, {})
+                fn = per_sim.get(key)
+                if fn is None:
+                    fn = per_sim[key] = self._build(n)
+                    self.stats["compiles"] += 1
+            return fn
+        if key not in self._private_jit:
+            self._private_jit[key] = self._build(n)
+            self.stats["compiles"] += 1
+        return self._private_jit[key]
 
-            if self.mesh is not None:
-                from jax.sharding import NamedSharding, PartitionSpec as P
-                axis = self.data_axis if n % self.mesh.shape[self.data_axis] == 0 \
-                    else None
-                sh = NamedSharding(self.mesh, P(axis))
-                self._jitted[n] = jax.jit(run, in_shardings=(sh, sh),
-                                          out_shardings=sh)
-            else:
-                self._jitted[n] = jax.jit(run)
-        return self._jitted[n]
+    def run_bundle(self, lo: int, hi: int, samples: np.ndarray,
+                   sub_ranges: Optional[Sequence[Tuple[int, int]]] = None,
+                   block: bool = True) -> Dict[str, np.ndarray]:
+        """Simulate samples [lo, hi) as one fused device launch.
 
-    def run_bundle(self, lo: int, hi: int, samples: np.ndarray) -> Dict[str, np.ndarray]:
+        ``sub_ranges``: optional absolute [slo, shi) spans partitioning
+        [lo, hi); one bundle file is written per span (coalesced execution
+        keeps the per-task on-disk layout).  ``block=False`` skips the final
+        host sync and returns device arrays (only valid without a bundler).
+        """
         t0 = time.monotonic()
-        batch = jnp.asarray(samples)
-        seeds = jnp.arange(lo, hi, dtype=jnp.uint32)
-        out = self._compiled(hi - lo)(batch, seeds)
-        out = jax.tree.map(lambda a: np.asarray(a), out)
+        n = hi - lo
+        samples = np.asarray(samples)
+        if len(samples) != n:
+            raise ValueError(f"sample block has {len(samples)} rows "
+                             f"for range [{lo}, {hi})")
+        padded = bucket_for(n) if self.bucketed else n
+        batch = jnp.asarray(pad_rows(samples, padded))
+        # seeds beyond hi are masked work: their outputs are sliced away
+        seeds = jnp.arange(lo, lo + padded, dtype=jnp.uint32)
+        out = self._compiled(padded)(batch, seeds)
+        if padded != n:
+            out = jax.tree.map(lambda a: a[:n], out)
         self.stats["bundles"] += 1
-        self.stats["samples"] += hi - lo
-        self.stats["sim_time"] += time.monotonic() - t0
+        self.stats["samples"] += n
+        self.stats["padded_samples"] += padded - n
+        self.stats["launches"] += 1
         if self.bundler is not None:
-            self.bundler.write_bundle(lo, hi, out)
+            jax.block_until_ready(out)  # sync exactly once, at write time
+            out = jax.tree.map(np.asarray, out)
+            for slo, shi in sub_ranges or ((lo, hi),):
+                sl = slice(slo - lo, shi - lo)
+                self.bundler.write_bundle(
+                    slo, shi, {k: v[sl] for k, v in out.items()})
+        elif block:
+            out = jax.tree.map(np.asarray, out)
+        self.stats["sim_time"] += time.monotonic() - t0
         return out
 
     def step_fn(self) -> Callable:
@@ -72,5 +198,6 @@ class EnsembleExecutor:
             block = ctx.sample_block
             if block is None:
                 raise ValueError("ensemble step requires study samples")
-            self.run_bundle(ctx.lo, ctx.hi, block)
+            self.run_bundle(ctx.lo, ctx.hi, block,
+                            sub_ranges=getattr(ctx, "sub_ranges", None))
         return step

@@ -300,7 +300,13 @@ class FileBroker:
         self._last_discover = 0.0
         self._last_sweep = 0.0
         self._last_tmp_reap = 0.0
-        self.stats = {"enqueued": 0, "acked": 0, "redelivered": 0}
+        # stale-claim tracking: when another instance (process/thread on the
+        # same root) wins the rename race, our index entry was stale; the
+        # consumer loop uses this signal to force an immediate re-list
+        # instead of sleeping through the rescan throttle
+        self._saw_stale = False
+        self.stats = {"enqueued": 0, "acked": 0, "redelivered": 0,
+                      "stale_claims": 0}
 
     # -- paths ---------------------------------------------------------------
     def _qdir(self, queue: str) -> str:
@@ -342,16 +348,20 @@ class FileBroker:
             self.put(t)
 
     # -- index maintenance ---------------------------------------------------
-    def _rescan(self, queues: Optional[Tuple[str, ...]]) -> None:
+    def _rescan(self, queues: Optional[Tuple[str, ...]],
+                force: bool = False) -> None:
         """Re-list pending files from disk (picks up other processes' puts).
 
         Self-throttled per queue on ``rescan_interval`` — a never-scanned
         queue is always stale, so a fresh instance or subscription sees
-        disk immediately.
+        disk immediately.  ``force=True`` bypasses the throttle: used after
+        stale-index claim races (another worker renamed a file we still had
+        indexed), where waiting out the throttle would starve this consumer
+        of work that IS on disk.
         """
         now = time.monotonic()
         if queues is None:
-            if self._last_discover == 0.0 or \
+            if force or self._last_discover == 0.0 or \
                     now - self._last_discover > self._rescan_interval:
                 self._last_discover = now
                 try:
@@ -363,7 +373,8 @@ class FileBroker:
                 with self._ilock:
                     queues = tuple(self._index)
         for q in queues:
-            if now - self._last_rescan.get(q, 0.0) <= self._rescan_interval:
+            if not force and \
+                    now - self._last_rescan.get(q, 0.0) <= self._rescan_interval:
                 continue
             try:
                 names = [n for n in os.listdir(self._qdir(q))
@@ -414,7 +425,13 @@ class FileBroker:
             try:
                 os.rename(src, dst)  # atomic claim
             except OSError:
-                continue  # another worker won; index entry was stale
+                # another worker won the rename race; our index entry was
+                # stale.  Record it so the consumer loop can force a fresh
+                # disk listing instead of concluding the queue is empty.
+                with self._ilock:
+                    self._saw_stale = True
+                    self.stats["stale_claims"] += 1
+                continue
             try:
                 with open(dst) as f:
                     task = Task.from_json(f.read())
@@ -456,8 +473,15 @@ class FileBroker:
                 # index ran dry: consult disk for other processes' puts.
                 # _rescan self-throttles per queue, so idle consumers do
                 # NOT reintroduce the listdir-per-poll load the cached
-                # index exists to remove
-                self._rescan(qsel)
+                # index exists to remove.  Exception: if this claim round
+                # lost rename races (stale index entries), other consumers
+                # are actively draining the same directory and pending work
+                # may exist that we have never listed — force the rescan
+                # so contention degrades to extra listdirs, not to lost
+                # throughput while the throttle runs out.
+                with self._ilock:
+                    force, self._saw_stale = self._saw_stale, False
+                self._rescan(qsel, force=force)
                 fresh = True
                 continue
             if deadline is not None and time.monotonic() >= deadline:

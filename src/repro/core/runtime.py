@@ -152,11 +152,21 @@ def plan_stages(spec: StudySpec) -> List[Dict[str, Any]]:
 # ---------------------------------------------------------------------------
 
 class Context:
-    """Execution context handed to fn-steps."""
+    """Execution context handed to fn-steps.
+
+    ``sub_ranges`` is the coalescing contract: when a worker fuses several
+    contiguous leaf tasks into one execution (``execute_real_many``), the
+    step sees ONE context spanning the union [lo, hi) plus the original
+    per-task [slo, shi) spans.  Steps that write per-range artifacts (the
+    ensemble executor's bundle files) iterate ``sub_ranges`` so the on-disk
+    layout is identical to per-task execution; steps that ignore it simply
+    process the whole block at once.
+    """
 
     def __init__(self, runtime: "MerlinRuntime", study: str, combo: Dict,
                  samples: Optional[np.ndarray], lo: int, hi: int,
-                 workspace: str, variables: Dict):
+                 workspace: str, variables: Dict,
+                 sub_ranges: Optional[Sequence[tuple]] = None):
         self.runtime = runtime
         self.study = study
         self.combo = combo
@@ -164,6 +174,7 @@ class Context:
         self.lo, self.hi = lo, hi
         self.workspace = workspace
         self.variables = variables
+        self.sub_ranges = list(sub_ranges) if sub_ranges else [(lo, hi)]
 
     @property
     def sample_block(self) -> Optional[np.ndarray]:
@@ -295,11 +306,17 @@ class MerlinRuntime:
             self._enqueue_stage(study, stage + 1, combo, n)
 
     # -- execution of a real task -------------------------------------------
+    @staticmethod
+    def _done_key(task: Task) -> str:
+        p = task.payload
+        lo, hi = p["samples"]
+        return f"{p['study']}/exec/s{p['stage']}/c{p['combo']}/{lo}_{hi}"
+
     def execute_real(self, task: Task) -> None:
         p = task.payload
         study, stage_idx, combo_idx = p["study"], p["stage"], p["combo"]
         lo, hi = p["samples"]
-        done_key = f"{study}/exec/s{stage_idx}/c{combo_idx}/{lo}_{hi}"
+        done_key = self._done_key(task)
         # idempotency: if a previous attempt *completed*, redelivered or
         # speculatively-duplicated copies no-op.  Failed attempts leave no
         # marker, so retries re-execute.
@@ -318,6 +335,85 @@ class MerlinRuntime:
         # first completer wins; concurrent duplicates are safe (atomic writes)
         if self.counters.once(done_key):
             self._bundle_done(task)
+
+    # -- coalesced execution of a lease batch --------------------------------
+    def execute_real_many(self, tasks: Sequence[Task]) -> None:
+        """Execute a batch of real tasks, fusing contiguous sample ranges.
+
+        Coalescing policy: tasks from the same (study, stage, combo) whose
+        [lo, hi) ranges are contiguous — the common case when one
+        ``get_many`` drains a generator's leaf burst — execute as ONE step
+        invocation over the union range (one fused vmap launch for ensemble
+        steps) with ``ctx.sub_ranges`` carrying the original spans.  Only
+        parallel stages made of fn-steps coalesce; cmd steps and funnel
+        stages keep per-task execution (their workspace layout is per-task).
+        Idempotency is unchanged: every original task still gets its own
+        once-marker and ``_bundle_done`` accounting, and already-done tasks
+        are skipped before grouping.  If a fused execution fails, the whole
+        group falls back to per-task ``execute_real`` so one poison task
+        cannot take down its batch-mates' progress or retry accounting.
+        """
+        groups: Dict[tuple, List[Task]] = {}
+        singles: List[Task] = []
+        for t in tasks:
+            if self.counters.once_exists(self._done_key(t)):
+                continue  # a previous attempt completed: no-op, no re-count
+            p = t.payload
+            stage = self._stages[p["study"]][p["stage"]]
+            if stage["kind"] == "parallel" and \
+                    all(s.fn is not None for s in stage["steps"]):
+                groups.setdefault((p["study"], p["stage"], p["combo"]),
+                                  []).append(t)
+            else:
+                singles.append(t)
+        for t in singles:
+            self.execute_real(t)
+        for run in self._contiguous_runs(groups):
+            if len(run) == 1:
+                self.execute_real(run[0])
+                continue
+            try:
+                self._execute_coalesced(run)
+            except Exception:
+                for t in run:  # isolate the failure: per-task retry semantics
+                    self.execute_real(t)
+
+    @staticmethod
+    def _contiguous_runs(groups: Dict[tuple, List[Task]]) -> List[List[Task]]:
+        runs: List[List[Task]] = []
+        for ts in groups.values():
+            ts.sort(key=lambda t: t.payload["samples"][0])
+            cur = [ts[0]]
+            for t in ts[1:]:
+                if t.payload["samples"][0] == cur[-1].payload["samples"][1]:
+                    cur.append(t)
+                else:
+                    runs.append(cur)
+                    cur = [t]
+            runs.append(cur)
+        return runs
+
+    def _execute_coalesced(self, run: List[Task]) -> None:
+        """One fused execution covering a contiguous run of leaf tasks."""
+        p = run[0].payload
+        study, stage_idx, combo_idx = p["study"], p["stage"], p["combo"]
+        lo = p["samples"][0]
+        hi = run[-1].payload["samples"][1]
+        spec = self._specs[study]
+        stage = self._stages[study][stage_idx]
+        combo = self._combos[study][combo_idx]
+        samples = self._samples.get(study)
+        wdir = os.path.join(self.workspace, study, f"s{stage_idx}",
+                            f"c{combo_idx}", f"b{lo:09d}_{hi:09d}")
+        os.makedirs(wdir, exist_ok=True)
+        ctx = Context(self, study, combo, samples, lo, hi, wdir,
+                      spec.variables,
+                      sub_ranges=[tuple(t.payload["samples"]) for t in run])
+        for step in stage["steps"]:
+            self._run_step(step, ctx)
+        for t in run:  # per-sub-bundle markers + stage accounting, as before
+            if self.counters.once(self._done_key(t)):
+                self._bundle_done(t)
 
     def _run_step(self, step: Step, ctx: Context) -> None:
         if step.fn is not None:

@@ -64,24 +64,60 @@ class Worker(threading.Thread):
             if not leases:
                 continue
             acks: List[str] = []
+            # Coalesced execution: real leases from one get_many batch are
+            # handed to the runtime together, which fuses contiguous sample
+            # ranges into single device launches (execute_real_many).  Gen
+            # tasks and injected failures keep the per-lease path.
+            reals: List[Lease] = []
             for lease in leases:
-                try:
-                    self._dispatch(lease.task)
-                except Exception:
-                    self.stats["failed"] += 1
-                    self.runtime.journal.append(
-                        {"ev": "task_failed", "task": lease.task.id,
-                         "kind": lease.task.kind,
-                         "payload": {k: v for k, v in lease.task.payload.items()
-                                     if k != "spec"}})
-                    if self.retry_policy.should_retry(lease.task):
-                        broker.nack(lease.tag)
+                if lease.task.kind == "real":
+                    if self.failure_rate and \
+                            self.rng.random() < self.failure_rate:
+                        # injected death: same bookkeeping as a raised
+                        # WorkerError in the per-lease path
+                        self._record_failure(lease, broker)
                     else:
-                        broker.ack(lease.tag)  # poison: give up, leave to crawler
+                        reals.append(lease)
                     continue
-                acks.append(lease.tag)
+                if self._run_one(lease, broker):
+                    acks.append(lease.tag)
+            if reals:
+                if self.first_real_at is None:
+                    self.first_real_at = time.monotonic()
+                try:
+                    self.runtime.execute_real_many([l.task for l in reals])
+                    self.stats["real"] += len(reals)
+                    acks.extend(l.tag for l in reals)
+                except Exception:
+                    # a task in the batch failed even under the runtime's
+                    # per-task fallback: re-run each lease individually so
+                    # ack/nack/retry accounting stays per-task
+                    for lease in reals:
+                        if self._run_one(lease, broker):
+                            acks.append(lease.tag)
             if acks:
                 broker.ack_many(acks)
+
+    def _run_one(self, lease: Lease, broker) -> bool:
+        """Per-lease dispatch with failure accounting; True if ackable."""
+        try:
+            self._dispatch(lease.task)
+        except Exception:
+            self._record_failure(lease, broker)
+            return False
+        return True
+
+    def _record_failure(self, lease: Lease, broker) -> None:
+        self.stats["failed"] += 1
+        self.runtime.journal.append(
+            {"ev": "task_failed", "task": lease.task.id,
+             "kind": lease.task.kind,
+             "payload": {k: v for k, v in lease.task.payload.items()
+                         if k != "spec"}})
+        if self.retry_policy.should_retry(lease.task):
+            broker.nack(lease.tag)
+        else:
+            broker.ack(lease.tag)  # poison: give up, leave to crawler
 
     def _dispatch(self, task: Task) -> None:
         # injected failure: worker "dies" on this task (no ack, no effect)

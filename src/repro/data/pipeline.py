@@ -55,27 +55,52 @@ class SyntheticTokens:
         return b
 
 
-def quantize_record(inputs: np.ndarray, scalars: np.ndarray, vocab: int,
-                    bins_per_field: int = 256) -> np.ndarray:
-    """One simulation record -> token sequence: [field0_bin, field1_bin, ...]
-    with per-field offsets so fields occupy disjoint vocab ranges."""
-    fields = np.concatenate([inputs.ravel(), scalars.ravel()])
-    nf = len(fields)
+def quantize_records(inputs: np.ndarray, scalars: np.ndarray, vocab: int,
+                     bins_per_field: int = 256) -> np.ndarray:
+    """Batched record quantization: (n, ...) inputs + (n, k) scalars ->
+    (n, nf) token matrix in one vectorized op (no per-record Python loop).
+
+    Each record's fields are binned into ``bins_per_field`` levels with
+    per-field offsets so fields occupy disjoint vocab ranges."""
+    inputs = np.asarray(inputs)
+    scalars = np.asarray(scalars)
+    n = len(inputs)
+    fields = np.concatenate([inputs.reshape(n, -1), scalars.reshape(n, -1)],
+                            axis=1)
+    nf = fields.shape[1]
     assert nf * bins_per_field <= vocab, (nf, bins_per_field, vocab)
     q = np.clip((fields * bins_per_field).astype(np.int64), 0,
                 bins_per_field - 1)
     return (q + np.arange(nf) * bins_per_field).astype(np.int32)
 
 
+def quantize_record(inputs: np.ndarray, scalars: np.ndarray, vocab: int,
+                    bins_per_field: int = 256) -> np.ndarray:
+    """One simulation record -> token sequence: [field0_bin, field1_bin, ...]
+    (single-record view of :func:`quantize_records`)."""
+    return quantize_records(np.asarray(inputs)[None], np.asarray(scalars)[None],
+                            vocab, bins_per_field)[0]
+
+
+def tokenize_archive(data: Dict[str, np.ndarray], scalar_keys: Sequence[str],
+                     vocab: int, bins_per_field: int = 256) -> np.ndarray:
+    """Tokenize a whole loaded archive once: normalization and quantization
+    each run exactly one vectorized pass over the stacked fields (the seed
+    called ``quantize_record`` n times and re-derived normalization state on
+    every stream construction)."""
+    scal = np.stack([_normalize(data[k]) for k in scalar_keys], axis=1)
+    return quantize_records(data["inputs"], scal, vocab, bins_per_field)
+
+
 def ensemble_token_stream(data: Dict[str, np.ndarray], scalar_keys: Sequence[str],
                           batch: int, vocab: int, seed: int = 0
                           ) -> Iterator[Dict[str, np.ndarray]]:
-    """Infinite stream of LM batches built from a loaded ensemble archive."""
-    inputs = data["inputs"]
-    n = len(inputs)
-    scal = np.stack([_normalize(data[k]) for k in scalar_keys], axis=1)
-    records = np.stack([
-        quantize_record(inputs[i], scal[i], vocab) for i in range(n)])
+    """Infinite stream of LM batches built from a loaded ensemble archive.
+
+    The archive is tokenized once up front (:func:`tokenize_archive`); each
+    yielded batch is a pure gather from the precomputed token matrix."""
+    records = tokenize_archive(data, scalar_keys, vocab)
+    n = len(records)
     rng = np.random.default_rng(seed)
     while True:
         idx = rng.integers(0, n, size=batch)

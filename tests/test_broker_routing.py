@@ -241,11 +241,13 @@ def test_worker_pool_respects_queue_subscription(tmp_path):
         sid = rt.run(spec, np.zeros((16, 1), np.float32))
         assert not rt.wait(sid, timeout=1.0)
         assert done == []
-    # a pool on the study's real+gen queues drains it
+    # a pool on the study's real+gen queues drains it (batch leasing may
+    # coalesce contiguous leaf tasks into fewer, larger step invocations)
     with WorkerPool(rt, n_workers=2,
                     queues=(rt.real_queue, rt.gen_queue), batch=4) as pool:
         assert rt.wait(sid, timeout=60)
-    assert sorted(done) == [(i, i + 4) for i in range(0, 16, 4)]
+    covered = sorted(i for lo, hi in done for i in range(lo, hi))
+    assert covered == list(range(16))
 
 
 def test_filebroker_crash_resume_two_runtimes(tmp_path):

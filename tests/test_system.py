@@ -87,6 +87,10 @@ def test_surge_workers_join_midstudy(tmp_path):
         time.sleep(0.3)
         pool.scale(5)  # surge
         assert rt.wait(sid, timeout=60)
+        # wait() can return between a worker's final once-marker and its
+        # stats increment; drain (idle broker = all acks done, and acks
+        # follow the increment) makes the counter read deterministic
+        pool.drain(timeout=20)
         stats = pool.stats()
         assert stats["real"] == 40
         # the surged workers actually took work
