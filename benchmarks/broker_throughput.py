@@ -1,18 +1,26 @@
 """Broker claim-throughput benchmark: the perf baseline for the task-queue
 hot path (paper Sec. 2.3 "server stability" / Figs. 3-6 analogues).
 
-Measures end-to-end drain throughput (claim + ack) in tasks/s for both
-broker backends at 1, 4, and 16 concurrent workers, with batch sizes 1 and
-8, plus a reference re-implementation of the *seed* FileBroker claim loop
-(full listdir + sort per claim, O(n log n) per task) so the speedup of the
-indexed hot path is measured, not asserted.
+Measures end-to-end drain throughput (claim + ack) in tasks/s for the
+local broker backends at 1, 4, and 16 concurrent workers with batch sizes
+1 and 8, for the NetBroker (real TCP sockets against a BrokerServer
+fronting an InMemoryBroker and a FileBroker) at batch 1/8/32, and for a
+reference re-implementation of the *seed* FileBroker claim loop (full
+listdir + sort per claim) so every speedup is measured, not asserted.
 
-Usage: PYTHONPATH=src python -m benchmarks.broker_throughput [--tasks N]
+Writes the ``BENCH_broker.json`` artifact (schema: benchmarks/README.md).
+The headline acceptance ratio is NetBroker batched (b>=8) throughput vs
+the indexed FileBroker single-worker baseline — i.e. "going over the wire
+with batching costs nothing vs the shared-filesystem broker".
+
+Usage: PYTHONPATH=src python -m benchmarks.broker_throughput \
+           [--tasks N] [--quick] [--out PATH]
 Prints ``name,tasks_per_s,detail`` CSV rows then a human-readable block.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import shutil
 import tempfile
@@ -20,6 +28,7 @@ import threading
 import time
 from typing import Callable, List
 
+from repro.core.netbroker import BrokerServer, NetBroker
 from repro.core.queue import FileBroker, InMemoryBroker, Task, new_task
 
 
@@ -114,42 +123,95 @@ def bench(make_broker: Callable[[], object], n_tasks: int, n_workers: int,
     return {"tasks_per_s": n_tasks / wall, "wall_s": wall}
 
 
+def bench_net(make_backend: Callable[[], object], n_tasks: int,
+              n_workers: int, batch: int) -> dict:
+    """Drain through real TCP sockets: BrokerServer + NetBroker client."""
+    server = BrokerServer(make_backend()).start()
+    client = NetBroker(server.address)
+    try:
+        client.put_many([new_task("real", {"i": i}, queue="bench")
+                         for i in range(n_tasks)])
+        wall = drain(client, n_tasks, n_workers, batch)
+        return {"tasks_per_s": n_tasks / wall, "wall_s": wall}
+    finally:
+        client.close()
+        server.stop()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tasks", type=int, default=1000,
                     help="queued tasks per configuration")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny run (200 tasks) for CI smoke")
+    ap.add_argument("--out", default="BENCH_broker.json",
+                    help="JSON artifact path (schema: benchmarks/README.md)")
     args = ap.parse_args()
     if args.tasks <= 0:
         ap.error("--tasks must be positive")
-    n = args.tasks
+    n = 200 if args.quick else args.tasks
 
     tmp = tempfile.mkdtemp(prefix="broker-bench-")
     rows = []
+    scenarios = {}
+
+    def record(name, r, detail=""):
+        rows.append((name, r["tasks_per_s"],
+                     detail or f"wall={r['wall_s']*1e3:.1f}ms"))
+        scenarios[name] = {"tasks_per_s": round(r["tasks_per_s"], 1),
+                           "wall_s": round(r["wall_s"], 4)}
+
     try:
         for workers in (1, 4, 16):
             for batch in (1, 8):
-                r = bench(InMemoryBroker, n, workers, batch)
-                rows.append((f"mem_w{workers}_b{batch}", r["tasks_per_s"],
-                             f"wall={r['wall_s']*1e3:.1f}ms"))
+                record(f"mem_w{workers}_b{batch}",
+                       bench(InMemoryBroker, n, workers, batch))
         i = 0
         for workers in (1, 4, 16):
             for batch in (1, 8):
                 i += 1
                 root = os.path.join(tmp, f"file{i}")
-                r = bench(lambda: FileBroker(root), n, workers, batch)
-                rows.append((f"file_w{workers}_b{batch}", r["tasks_per_s"],
-                             f"wall={r['wall_s']*1e3:.1f}ms"))
+                record(f"file_w{workers}_b{batch}",
+                       bench(lambda: FileBroker(root), n, workers, batch))
+        # NetBroker over real sockets, both server backends, batch sweep:
+        # batch 1 pays one round-trip per task; batches amortize it away
+        for batch in (1, 8, 32):
+            record(f"net_mem_w1_b{batch}",
+                   bench_net(InMemoryBroker, n, 1, batch))
+        for j, batch in enumerate((1, 8, 32)):
+            root = os.path.join(tmp, f"netfile{j}")
+            record(f"net_file_w1_b{batch}",
+                   bench_net(lambda: FileBroker(root), n, 1, batch))
         # seed-era baseline: single worker, batch 1 — its claim is O(n log n)
         seed = bench(lambda: SeedFileBroker(os.path.join(tmp, "seed")),
                      n, 1, 1)
-        rows.append(("file_seed_listdir_w1_b1", seed["tasks_per_s"],
-                     f"wall={seed['wall_s']*1e3:.1f}ms"))
-        new_w1 = next(r for r in rows if r[0] == "file_w1_b1")
-        speedup = new_w1[1] / seed["tasks_per_s"]
+        record("file_seed_listdir_w1_b1", seed)
+        new_w1 = scenarios["file_w1_b1"]["tasks_per_s"]
+        speedup = new_w1 / seed["tasks_per_s"]
         rows.append(("file_index_speedup_vs_seed", speedup,
                      f"{speedup:.1f}x at {n} queued tasks"))
+        # acceptance: batched NetBroker vs the indexed FileBroker baseline
+        net_best = max(scenarios[s]["tasks_per_s"] for s in scenarios
+                       if s.startswith("net_") and not s.endswith("_b1"))
+        net_ratio = net_best / new_w1
+        rows.append(("net_batched_vs_file_w1_b1", net_ratio,
+                     f"{net_ratio:.2f}x (acceptance >= 1x)"))
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
+
+    artifact = {
+        "meta": {"bench": "broker_throughput", "tasks": n,
+                 "quick": bool(args.quick), "unix_time": time.time()},
+        "scenarios": scenarios,
+        "file_index_speedup_vs_seed": round(speedup, 2),
+        "acceptance": {
+            "net_batched_vs_file_w1_b1": round(net_ratio, 2),
+            "pass": bool(net_ratio >= 1.0),
+        },
+    }
+    with open(args.out + ".tmp", "w") as f:
+        json.dump(artifact, f, indent=1)
+    os.rename(args.out + ".tmp", args.out)
 
     print("name,tasks_per_s,detail")
     for name, tps, detail in rows:
@@ -159,6 +221,7 @@ def main() -> None:
           f"(claim+ack, tasks/s; higher is better)")
     for name, tps, detail in rows:
         print(f"  {name:<28} {tps:>12.0f}  {detail}")
+    print(f"\nwrote {args.out}")
 
 
 if __name__ == "__main__":

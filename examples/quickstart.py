@@ -7,8 +7,23 @@
    the "ML-ready" part of ML-ready HPC ensembles.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+
+Two-process mode (the paper's actual deployment shape — a standalone
+broker host, like the RabbitMQ server of Sec. 2-3):
+
+    PYTHONPATH=src python examples/quickstart.py --two-process
+
+spawns ``python -m repro.launch.serve broker-serve`` as a separate OS
+process and attaches the runtime + worker pool to it over TCP.  The queue
+lives entirely in the server process — no shared directory, no shared
+memory; kill either side and the other's leases expire and redeliver.
 """
+import argparse
+import os
+import subprocess
+import sys
 import tempfile
+import time
 
 import numpy as np
 
@@ -20,37 +35,74 @@ from repro.sim import jag_simulate, jag_sample_inputs
 import jax
 
 
-def main():
+def spawn_broker_server(workspace: str) -> "tuple[subprocess.Popen, str]":
+    """Start a broker-serve process; return (proc, tcp:// URL)."""
+    port_file = os.path.join(workspace, "broker.port")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "broker-serve",
+         "--port", "0", "--port-file", port_file],
+        env={**os.environ,
+             "PYTHONPATH": "src" + os.pathsep + os.environ.get("PYTHONPATH", "")})
+    deadline = time.monotonic() + 30
+    while not os.path.exists(port_file):
+        if proc.poll() is not None:
+            raise RuntimeError("broker server died during startup")
+        if time.monotonic() > deadline:
+            proc.terminate()
+            raise RuntimeError("broker server did not come up in 30s")
+        time.sleep(0.05)
+    with open(port_file) as f:
+        port = int(f.read())
+    return proc, f"tcp://127.0.0.1:{port}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--two-process", action="store_true",
+                    help="host the queue in a separate broker-serve process "
+                         "(no shared filesystem for the queue)")
+    args = ap.parse_args(argv)
+
+    proc = None
     with tempfile.TemporaryDirectory() as ws:
-        # 1. runtime + study -------------------------------------------------
-        rt = MerlinRuntime(workspace=ws,
-                           hierarchy=HierarchyCfg(max_fanout=8, bundle=64))
-        bundler = Bundler(f"{ws}/results", files_per_leaf=4)
-        executor = EnsembleExecutor(jag_simulate, bundler)
-        rt.register("simulate", executor.step_fn())
-        spec = StudySpec(name="quickstart", steps=[
-            Step(name="simulate", fn="simulate")])
+        broker = None  # default: in-process InMemoryBroker
+        if args.two_process:
+            proc, broker = spawn_broker_server(ws)
+            print(f"broker server up at {broker} (pid {proc.pid})")
+        try:
+            # 1. runtime + study ---------------------------------------------
+            rt = MerlinRuntime(broker=broker, workspace=ws,
+                               hierarchy=HierarchyCfg(max_fanout=8, bundle=64))
+            bundler = Bundler(f"{ws}/results", files_per_leaf=4)
+            executor = EnsembleExecutor(jag_simulate, bundler)
+            rt.register("simulate", executor.step_fn())
+            spec = StudySpec(name="quickstart", steps=[
+                Step(name="simulate", fn="simulate")])
 
-        samples = np.asarray(jag_sample_inputs(jax.random.PRNGKey(0), 512))
+            samples = np.asarray(jag_sample_inputs(jax.random.PRNGKey(0), 512))
 
-        # 2. producer-consumer execution ------------------------------------
-        with WorkerPool(rt, n_workers=4) as pool:
-            study = rt.run(spec, samples)          # `merlin run`: one message
-            assert rt.wait(study, timeout=120)
-            print(f"workers processed {pool.stats()['real']} bundles "
-                  f"({executor.stats['samples']} simulations, "
-                  f"{executor.stats['sim_time']:.2f}s device time)")
+            # 2. producer-consumer execution ---------------------------------
+            with WorkerPool(rt, n_workers=4) as pool:
+                study = rt.run(spec, samples)      # `merlin run`: one message
+                assert rt.wait(study, timeout=120)
+                print(f"workers processed {pool.stats()['real']} bundles "
+                      f"({executor.stats['samples']} simulations, "
+                      f"{executor.stats['sim_time']:.2f}s device time)")
 
-        # 3. ML-ready: train a surrogate on the ensemble --------------------
-        data = bundler.load_all()
-        X, y = regression_dataset(data, target="yield")
-        n = len(X)
-        sur = train_surrogate(X[: n // 2], y[: n // 2], steps=400)
-        mu, sd = sur.predict(X[n // 2:])
-        ss_res = float(np.mean((mu - y[n // 2:]) ** 2))
-        ss_tot = float(np.var(y[n // 2:]))
-        print(f"surrogate R^2 on held-out half: {1 - ss_res / ss_tot:.3f} "
-              f"(n_train={n // 2})")
+            # 3. ML-ready: train a surrogate on the ensemble -----------------
+            data = bundler.load_all()
+            X, y = regression_dataset(data, target="yield")
+            n = len(X)
+            sur = train_surrogate(X[: n // 2], y[: n // 2], steps=400)
+            mu, sd = sur.predict(X[n // 2:])
+            ss_res = float(np.mean((mu - y[n // 2:]) ** 2))
+            ss_tot = float(np.var(y[n // 2:]))
+            print(f"surrogate R^2 on held-out half: {1 - ss_res / ss_tot:.3f} "
+                  f"(n_train={n // 2})")
+        finally:
+            if proc is not None:
+                proc.terminate()
+                proc.wait(timeout=10)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,11 @@
 # Merlin's contribution in JAX-native form: hierarchical task generation,
-# producer-consumer brokers, parameter x sample DAG layering, device-fused
-# ensemble execution, bundling/aggregation, and crawl-resubmit resilience.
-from repro.core.queue import (InMemoryBroker, FileBroker, Task, new_task,  # noqa
+# producer-consumer brokers (in-memory, shared-directory, and networked),
+# parameter x sample DAG layering, device-fused ensemble execution,
+# bundling/aggregation, and crawl-resubmit resilience.
+from repro.core.queue import (Broker, BrokerError, BrokerUnavailable,  # noqa
+                              InMemoryBroker, FileBroker, Task, new_task,
                               PRIORITY_REAL, PRIORITY_GEN)
+from repro.core.netbroker import BrokerServer, NetBroker, make_broker  # noqa
 from repro.core.hierarchy import HierarchyCfg, root_task, expand  # noqa
 from repro.core.spec import StudySpec, Step  # noqa
 from repro.core.runtime import MerlinRuntime  # noqa

@@ -1,0 +1,527 @@
+"""NetBroker: the shared-filesystem-free broker layer (paper Sec. 2-3).
+
+The paper's producers and consumers on *different batch allocations*
+coordinate through a standalone RabbitMQ host — not through a parallel
+filesystem.  This module is that host:
+
+* :class:`BrokerServer` fronts ANY :class:`~repro.core.queue.Broker`
+  backend (InMemoryBroker or FileBroker) over a length-prefixed JSON TCP
+  protocol with one daemon thread per connection.  Blocking ``get``
+  requests park in the handler thread on the backend's condition variable,
+  so idle consumers cost zero wire traffic — no client polling.
+* :class:`NetBroker` is a TCP client implementing the full Broker
+  protocol.  Batched leases (``get_many``/``ack_many``) are one round-trip
+  each; every calling thread gets its own connection so a WorkerPool
+  sharing one NetBroker never serializes a blocking get behind an ack.
+
+Failure model (what makes reconnect safe):
+
+* All queue and lease state is **server-held** (in the backend).  A client
+  that vanishes mid-lease simply never acks; the lease expires and the
+  task redelivers exactly like a dead in-process worker's.
+* Acks are idempotent in every backend, so a client that re-sends an ack
+  after a reconnect (request applied, response lost) is a no-op.
+* Puts retried across a reconnect may duplicate a task — delivery is
+  at-least-once by contract, and the runtime's once-markers make duplicate
+  execution a no-op.
+* :meth:`NetBroker._call` transparently reconnects with backoff for up to
+  ``reconnect_timeout`` seconds, then raises
+  :class:`~repro.core.queue.BrokerUnavailable`; workers treat that as
+  transient and keep polling, so a broker server restart (same address)
+  heals without worker restarts.
+
+URL scheme (``make_broker``): ``mem://`` (fresh InMemoryBroker),
+``file:///path`` (FileBroker on a shared directory), ``tcp://host:port``
+(NetBroker).  ``MerlinRuntime(broker="tcp://...")`` accepts these directly.
+
+Deployment: ``python -m repro.launch.serve broker-serve`` runs a
+BrokerServer as a standalone process (see examples/quickstart.py
+``--two-process``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import socket
+import struct
+import threading
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.queue import (Broker, BrokerError, BrokerUnavailable,
+                              FileBroker, InMemoryBroker, Lease, Task,
+                              _normalize_queues)
+
+# one frame = one request or response; big enough for a 32-task lease batch
+# of fat payloads, small enough to reject garbage (e.g. an HTTP client)
+_MAX_FRAME = 32 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def _send_frame(sock: socket.socket, obj: dict) -> None:
+    data = json.dumps(obj).encode("utf-8")
+    if len(data) > _MAX_FRAME:
+        raise BrokerError(f"frame of {len(data)} bytes exceeds {_MAX_FRAME}")
+    sock.sendall(struct.pack(">I", len(data)) + data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed connection")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def _recv_frame(sock: socket.socket) -> dict:
+    (n,) = struct.unpack(">I", _recv_exact(sock, 4))
+    if n > _MAX_FRAME:
+        raise ConnectionError(f"oversized frame ({n} bytes)")
+    return json.loads(_recv_exact(sock, n).decode("utf-8"))
+
+
+def parse_address(address: str) -> Tuple[str, int]:
+    """``tcp://host:port`` or bare ``host:port`` -> (host, port)."""
+    if address.startswith("tcp://"):
+        address = address[len("tcp://"):]
+    host, sep, port = address.rpartition(":")
+    if not sep or not port.isdigit():
+        raise ValueError(f"broker address must be host:port, got {address!r}")
+    return host or "127.0.0.1", int(port)
+
+
+# ---------------------------------------------------------------------------
+# server
+# ---------------------------------------------------------------------------
+
+class BrokerServer:
+    """Serve any Broker backend to NetBroker clients over TCP.
+
+    One daemon thread per connection; requests on a connection run in
+    order (clients parallelize with per-thread connections).  A blocking
+    ``get_many`` waits inside the backend for at most ``MAX_BLOCK_S`` per
+    request — clients chunk longer timeouts into successive requests, which
+    bounds how long a handler thread can be parked and lets ``stop()``
+    return promptly.
+    """
+
+    MAX_BLOCK_S = 10.0
+
+    def __init__(self, backend: Broker, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.backend = backend
+        self.host = host
+        self._requested_port = port
+        self.port: Optional[int] = None
+        self._lsock: Optional[socket.socket] = None
+        self._accept_thread: Optional[threading.Thread] = None
+        self._stopping = threading.Event()
+        self._conns: set = set()
+        self._conns_lock = threading.Lock()
+        self.stats = {"connections": 0, "requests": 0, "errors": 0}
+
+    @property
+    def address(self) -> str:
+        return f"tcp://{self.host}:{self.port}"
+
+    def start(self) -> "BrokerServer":
+        s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        s.bind((self.host, self._requested_port))
+        s.listen(128)
+        self._lsock = s
+        self.port = s.getsockname()[1]
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, daemon=True,
+            name=f"netbroker-accept-{self.port}")
+        self._accept_thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Close the listener and all client connections.
+
+        Connections are closed abortively (SO_LINGER 0 -> RST): a graceful
+        FIN would leave the server side in FIN_WAIT_2 until every client
+        closes too, blocking a restart from re-binding this port.  RST
+        destroys the kernel state immediately — and clients already treat
+        a reset exactly like a crashed server (reconnect, idempotent
+        re-ack).  Handler threads parked in a backend wait finish their
+        (bounded) wait, fail to write to the closed socket, and exit."""
+        self._stopping.set()
+        if self._lsock is not None:
+            # shutdown() first: close() alone does NOT wake a thread blocked
+            # in accept()/recv(), and the in-flight syscall would keep the
+            # LISTEN socket alive, blocking a restart from re-binding
+            try:
+                self._lsock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                self._lsock.close()
+            except OSError:
+                pass
+        with self._conns_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                             struct.pack("ii", 1, 0))
+            except OSError:
+                pass
+            try:
+                c.shutdown(socket.SHUT_RDWR)  # wake the handler's recv()
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=2.0)
+
+    def serve_forever(self, poll: float = 0.5) -> None:
+        while not self._stopping.is_set():
+            time.sleep(poll)
+
+    def __enter__(self) -> "BrokerServer":
+        if self._lsock is None:
+            self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- internals -----------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stopping.is_set():
+            try:
+                conn, _ = self._lsock.accept()
+            except OSError:
+                return  # listener closed by stop()
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._conns_lock:
+                self._conns.add(conn)
+                self.stats["connections"] += 1
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True, name="netbroker-conn").start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            while not self._stopping.is_set():
+                try:
+                    req = _recv_frame(conn)
+                except (ConnectionError, OSError, struct.error,
+                        json.JSONDecodeError, UnicodeDecodeError):
+                    return  # client went away / spoke garbage: drop conn
+                try:
+                    resp = {"ok": True, **(self._dispatch(req) or {})}
+                except Exception as e:  # backend error -> structured reply
+                    self.stats["errors"] += 1
+                    resp = {"ok": False,
+                            "error": f"{type(e).__name__}: {e}"}
+                try:
+                    _send_frame(conn, resp)
+                except OSError:
+                    return
+        finally:
+            with self._conns_lock:
+                self._conns.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _dispatch(self, req: dict) -> Optional[dict]:
+        self.stats["requests"] += 1
+        op = req.get("op")
+        b = self.backend
+        if op == "ping":
+            return {}
+        if op == "put":
+            b.put(Task(**req["task"]))
+            return {}
+        if op == "put_many":
+            b.put_many([Task(**t) for t in req["tasks"]])
+            return {}
+        if op == "get_many":
+            timeout = req.get("timeout", 0.0)
+            if timeout is None or timeout > self.MAX_BLOCK_S:
+                timeout = self.MAX_BLOCK_S
+            queues = req.get("queues")
+            leases = b.get_many(
+                int(req["n"]), timeout=float(timeout),
+                queues=tuple(queues) if queues is not None else None)
+            return {"leases": [{"task": dataclasses.asdict(l.task),
+                                "tag": l.tag} for l in leases]}
+        if op == "ack":
+            b.ack(req["tag"])
+            return {}
+        if op == "ack_many":
+            b.ack_many(list(req["tags"]))
+            return {}
+        if op == "nack":
+            b.nack(req["tag"])
+            return {}
+        if op == "qsize":
+            queues = req.get("queues")
+            return {"n": b.qsize(tuple(queues) if queues is not None
+                                 else None)}
+        if op == "queue_names":
+            return {"names": b.queue_names()}
+        if op == "inflight":
+            return {"n": b.inflight()}
+        if op == "idle":
+            return {"idle": bool(b.idle())}
+        if op == "stats":
+            return {"stats": dict(b.stats)}
+        if op == "set_visibility_timeout":
+            b.set_visibility_timeout(req["queue"], float(req["timeout"]))
+            return {}
+        if op == "inflight_tasks":
+            return {"tasks": [[dataclasses.asdict(t), age]
+                              for t, age in b.inflight_tasks()]}
+        raise BrokerError(f"unknown op {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# client
+# ---------------------------------------------------------------------------
+
+class NetBroker:
+    """TCP client implementing the full Broker protocol.
+
+    Thread safety: each calling thread gets its own connection, so one
+    worker thread's blocking ``get_many`` never serializes another's acks.
+    All lease state lives server-side; any connection may ack any tag.
+
+    ``get(timeout=...)`` blocks **server-side** (the handler parks on the
+    backend's condition variable); the client chunks timeouts longer than
+    ``block_chunk`` into successive requests so a dead server is detected
+    within ``block_chunk + request_grace`` rather than the full timeout.
+    """
+
+    def __init__(self, address: str, connect_timeout: float = 5.0,
+                 reconnect_timeout: float = 10.0,
+                 request_grace: float = 10.0, block_chunk: float = 5.0):
+        self.host, self.port = parse_address(address)
+        self.connect_timeout = connect_timeout
+        self.reconnect_timeout = reconnect_timeout
+        self.request_grace = request_grace
+        self.block_chunk = block_chunk
+        self._tls = threading.local()
+        # sock -> owning thread; pruned when that thread exits, else a
+        # long-lived client shared by successive WorkerPools would pin one
+        # fd (and one parked server handler thread) per dead worker thread
+        self._socks: Dict[socket.socket, threading.Thread] = {}
+        self._socks_lock = threading.Lock()
+        self._reconnects = 0
+        self._closed = False
+
+    @property
+    def address(self) -> str:
+        return f"tcp://{self.host}:{self.port}"
+
+    # -- connection management ----------------------------------------------
+    def _connected(self) -> socket.socket:
+        sock = getattr(self._tls, "sock", None)
+        if sock is not None:
+            return sock
+        sock = socket.create_connection((self.host, self.port),
+                                        timeout=self.connect_timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._tls.sock = sock
+        with self._socks_lock:
+            dead = [s for s, t in self._socks.items() if not t.is_alive()]
+            for s in dead:
+                del self._socks[s]
+            self._socks[sock] = threading.current_thread()
+        for s in dead:
+            try:
+                s.close()
+            except OSError:
+                pass
+        return sock
+
+    def _drop_conn(self) -> None:
+        sock = getattr(self._tls, "sock", None)
+        if sock is None:
+            return
+        self._tls.sock = None
+        with self._socks_lock:
+            self._socks.pop(sock, None)
+            self._reconnects += 1
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        self._closed = True
+        with self._socks_lock:
+            socks, self._socks = list(self._socks), {}
+        for s in socks:
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    def __enter__(self) -> "NetBroker":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- RPC core ------------------------------------------------------------
+    def _call(self, op: str, _timeout_hint: float = 0.0, **payload) -> dict:
+        """One request/response with transparent reconnect.
+
+        Retries transport failures (send/recv) until ``reconnect_timeout``
+        elapses, then raises BrokerUnavailable.  Retrying is safe for every
+        op: gets whose response was lost leave leases that expire
+        server-side, acks are idempotent, puts are at-least-once."""
+        if self._closed:
+            raise BrokerError("NetBroker is closed")
+        deadline = time.monotonic() + self.reconnect_timeout
+        delay = 0.05
+        while True:
+            try:
+                sock = self._connected()
+                sock.settimeout(_timeout_hint + self.request_grace)
+                _send_frame(sock, {"op": op, **payload})
+                resp = _recv_frame(sock)
+            except (OSError, ConnectionError, struct.error,
+                    json.JSONDecodeError, UnicodeDecodeError) as e:
+                self._drop_conn()
+                now = time.monotonic()
+                if now >= deadline or self._closed:
+                    raise BrokerUnavailable(
+                        f"broker at {self.address} unreachable: {e}") from e
+                time.sleep(min(delay, max(0.0, deadline - now)))
+                delay = min(delay * 2, 1.0)
+                continue
+            if not resp.get("ok"):
+                raise BrokerError(resp.get("error", "remote broker error"))
+            return resp
+
+    def ping(self) -> bool:
+        try:
+            self._call("ping")
+            return True
+        except BrokerUnavailable:
+            return False
+
+    def wait_ready(self, timeout: float = 30.0) -> bool:
+        """Poll until the server answers (for just-spawned server procs)."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.ping():
+                return True
+            time.sleep(0.05)
+        return False
+
+    # -- Broker protocol ------------------------------------------------------
+    def put(self, task: Task) -> None:
+        task.enqueued_at = time.time()
+        self._call("put", task=dataclasses.asdict(task))
+
+    def put_many(self, tasks: List[Task]) -> None:
+        now = time.time()
+        for t in tasks:
+            t.enqueued_at = now
+        self._call("put_many", tasks=[dataclasses.asdict(t) for t in tasks])
+
+    def get(self, timeout: Optional[float] = 0.0,
+            queues: Optional[Sequence[str]] = None) -> Optional[Lease]:
+        leases = self.get_many(1, timeout=timeout, queues=queues)
+        return leases[0] if leases else None
+
+    def get_many(self, n: int, timeout: Optional[float] = 0.0,
+                 queues: Optional[Sequence[str]] = None) -> List[Lease]:
+        qsel = _normalize_queues(queues)
+        qlist = None if qsel is None else list(qsel)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if deadline is None:
+                chunk = self.block_chunk
+            else:
+                chunk = max(0.0, min(self.block_chunk,
+                                     deadline - time.monotonic()))
+            resp = self._call("get_many", _timeout_hint=chunk, n=n,
+                              timeout=chunk, queues=qlist)
+            leases = [Lease(Task(**d["task"]), d["tag"])
+                      for d in resp["leases"]]
+            if leases:
+                return leases
+            if deadline is not None and time.monotonic() >= deadline:
+                return []
+
+    def ack(self, tag: str) -> None:
+        self._call("ack", tag=tag)
+
+    def ack_many(self, tags: Iterable[str]) -> None:
+        tags = list(tags)
+        if tags:
+            self._call("ack_many", tags=tags)
+
+    def nack(self, tag: str) -> None:
+        self._call("nack", tag=tag)
+
+    def qsize(self, queues: Optional[Sequence[str]] = None) -> int:
+        qsel = _normalize_queues(queues)
+        return int(self._call(
+            "qsize", queues=None if qsel is None else list(qsel))["n"])
+
+    def queue_names(self) -> List[str]:
+        return list(self._call("queue_names")["names"])
+
+    def inflight(self) -> int:
+        return int(self._call("inflight")["n"])
+
+    def idle(self) -> bool:
+        return bool(self._call("idle")["idle"])
+
+    def set_visibility_timeout(self, queue: str, timeout: float) -> None:
+        self._call("set_visibility_timeout", queue=queue,
+                   timeout=float(timeout))
+
+    def inflight_tasks(self) -> List[Tuple[Task, float]]:
+        return [(Task(**d), float(age))
+                for d, age in self._call("inflight_tasks")["tasks"]]
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        s = dict(self._call("stats")["stats"])
+        s["net_reconnects"] = self._reconnects
+        return s
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+def make_broker(url: str, **kwargs) -> Broker:
+    """Build a broker from a URL.
+
+    * ``mem://``             fresh in-process InMemoryBroker
+    * ``file:///shared/dir`` FileBroker on a shared directory
+    * ``tcp://host:port``    NetBroker client to a BrokerServer
+
+    Extra kwargs go to the chosen constructor (e.g. ``visibility_timeout``
+    for local backends, ``reconnect_timeout`` for NetBroker).
+    """
+    if url.startswith("tcp://"):
+        return NetBroker(url, **kwargs)
+    if url.startswith("mem://"):
+        return InMemoryBroker(**kwargs)
+    if url.startswith("file://"):
+        path = url[len("file://"):]
+        if not path:
+            raise ValueError("file:// broker URL needs a directory path")
+        return FileBroker(path, **kwargs)
+    raise ValueError(f"unsupported broker URL {url!r} "
+                     "(expected mem://, file://<dir>, or tcp://host:port)")

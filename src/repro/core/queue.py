@@ -21,7 +21,8 @@ Routing semantics (paper Sec. 2.2-3.1):
   lock/filesystem round-trips for high-throughput draining
   (benchmarks/broker_throughput.py).
 
-Two implementations behind one interface:
+The interface is the formal :class:`Broker` protocol below.  Three
+implementations:
 
 * :class:`InMemoryBroker` — thread-safe, condition-variable based (no
   polling slices), per-queue binary heaps; for in-process worker pools and
@@ -32,6 +33,21 @@ Two implementations behind one interface:
   claim hot path does NOT re-list + re-sort the directory per task.
   Independent worker *processes* ("batch allocations") can attach to a
   shared queue directory — the surge-computing model of Sec. 3.
+* :class:`repro.core.netbroker.NetBroker` — a TCP client speaking to a
+  :class:`repro.core.netbroker.BrokerServer` fronting either backend above:
+  allocations on *different nodes* coordinate with no shared filesystem at
+  all, the paper's actual RabbitMQ deployment model.
+
+Cross-cutting policies, identical in every backend:
+
+* **Per-queue visibility timeouts** (``queue_timeouts=`` /
+  ``set_visibility_timeout``): a long-running simulation queue and a fast
+  generation queue no longer share one lease clock.
+* **Fairness** (``fairness="weighted"``, ``queue_weights=``): optional
+  weighted round-robin across the subscribed queues so one flooding queue
+  cannot starve the others; strict global priority stays the default.
+  ``stats["starvation_avoided"]`` counts deliveries where fairness picked a
+  different queue than strict priority would have.
 """
 from __future__ import annotations
 
@@ -43,7 +59,20 @@ import os
 import threading
 import time
 import uuid
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (Any, Dict, Iterable, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
+
+
+class BrokerError(RuntimeError):
+    """A broker operation failed (bad request, protocol violation)."""
+
+
+class BrokerUnavailable(BrokerError, ConnectionError):
+    """The broker cannot be reached (remote down / unreachable).
+
+    Raised by :class:`repro.core.netbroker.NetBroker` after its reconnect
+    window is exhausted; consumers (core/worker.py) treat it as transient
+    and keep polling so a restarted broker server is picked back up."""
 
 # priorities: lower = served first.  Real work drains before generation work.
 PRIORITY_REAL = 0
@@ -97,16 +126,128 @@ def _normalize_queues(queues) -> Optional[Tuple[str, ...]]:
     return tuple(queues)
 
 
+@runtime_checkable
+class Broker(Protocol):
+    """The formal broker contract every backend implements.
+
+    Semantics (shared by InMemoryBroker, FileBroker, and NetBroker):
+
+    * ``put``/``put_many`` enqueue; delivery is at-least-once, so producers
+      may safely retry (execution idempotency is the runtime's job).
+    * ``get``/``get_many(queues=...)`` claim leases from the subscribed
+      queues (``None`` = all, a string = one queue), blocking up to
+      ``timeout`` (``None`` = forever) for the *first* task only.
+    * ``ack``/``ack_many`` complete a lease; acking an unknown or already
+      acked tag is a **no-op** (idempotent — required for safe client
+      retries over a network).
+    * ``nack`` returns a lease to its queue immediately with
+      ``task.retries`` incremented; an unacked lease does the same on its
+      own once its queue's visibility timeout expires.
+    * ``qsize``/``queue_names``/``inflight``/``idle`` introspect;
+      ``stats`` is a plain dict of monotonic counters (``enqueued``,
+      ``acked``, ``redelivered``, ``starvation_avoided``, ...).
+    * ``set_visibility_timeout(queue, t)`` overrides the lease clock for
+      one named queue; ``inflight_tasks()`` snapshots leased tasks with
+      their lease ages (straggler reissue, core/resilience.py).
+    """
+
+    stats: Dict[str, int]
+
+    def put(self, task: Task) -> None: ...
+    def put_many(self, tasks: List[Task]) -> None: ...
+    def get(self, timeout: Optional[float] = 0.0,
+            queues: Optional[Sequence[str]] = None) -> Optional[Lease]: ...
+    def get_many(self, n: int, timeout: Optional[float] = 0.0,
+                 queues: Optional[Sequence[str]] = None) -> List[Lease]: ...
+    def ack(self, tag: str) -> None: ...
+    def ack_many(self, tags: Iterable[str]) -> None: ...
+    def nack(self, tag: str) -> None: ...
+    def qsize(self, queues: Optional[Sequence[str]] = None) -> int: ...
+    def queue_names(self) -> List[str]: ...
+    def inflight(self) -> int: ...
+    def idle(self) -> bool: ...
+    def set_visibility_timeout(self, queue: str, timeout: float) -> None: ...
+    def inflight_tasks(self) -> List[Tuple[Task, float]]: ...
+
+
+class _WeightedRR:
+    """Weighted round-robin queue picker shared by both local backends.
+
+    Each cycle grants every currently-backlogged queue ``weight`` delivery
+    credits (default 1); queues are then served in rotation until the cycle's
+    credits run out, at which point a fresh cycle starts.  A queue flooding
+    10x faster than its neighbors therefore gets at most ``weight`` slots per
+    cycle instead of monopolizing delivery.  Caller must hold the backend's
+    lock — this object keeps no lock of its own.
+    """
+
+    def __init__(self, weights: Optional[Dict[str, float]] = None):
+        self.weights = {q: max(1, int(w)) for q, w in (weights or {}).items()}
+        self.credits: Dict[str, int] = {}
+        self.last: Optional[str] = None
+
+    def pick(self, nonempty: Sequence[str]) -> str:
+        order = sorted(nonempty)
+        if all(self.credits.get(q, 0) <= 0 for q in order):
+            # new cycle: only backlogged queues get credits, so an idle
+            # queue cannot bank slots it will never use
+            self.credits = {q: self.weights.get(q, 1) for q in order}
+        start = (order.index(self.last) + 1) % len(order) \
+            if self.last in order else 0
+        for i in range(len(order)):
+            q = order[(start + i) % len(order)]
+            if self.credits.get(q, 0) > 0:
+                self.credits[q] -= 1
+                self.last = q
+                return q
+        # unreachable (the reset above guarantees a credit), but never pick
+        # nothing if it somehow is
+        self.last = order[start]
+        return order[start]
+
+
+def _check_fairness(fairness: str) -> str:
+    if fairness not in ("priority", "weighted"):
+        raise ValueError(f"fairness must be 'priority' or 'weighted', "
+                         f"got {fairness!r}")
+    return fairness
+
+
 class InMemoryBroker:
     """Thread-safe multi-queue priority broker with visibility timeouts."""
 
-    def __init__(self, visibility_timeout: float = 60.0):
+    def __init__(self, visibility_timeout: float = 60.0,
+                 queue_timeouts: Optional[Dict[str, float]] = None,
+                 fairness: str = "priority",
+                 queue_weights: Optional[Dict[str, float]] = None):
         self._lock = threading.Condition()
         self._heaps: Dict[str, List[Tuple[int, int, Task]]] = {}
         self._seq = itertools.count()
+        # tag -> (task, leased-at).  Expiry is computed at sweep time from
+        # the queue's CURRENT visibility timeout (not frozen at lease time)
+        # so set_visibility_timeout acts retroactively on in-flight leases,
+        # exactly like FileBroker's sweep — the backends must not diverge
+        # behind a NetBroker.
         self._leased: Dict[str, Tuple[Task, float]] = {}
         self._vt = visibility_timeout
-        self.stats = {"enqueued": 0, "acked": 0, "redelivered": 0}
+        self._vt_queue: Dict[str, float] = dict(queue_timeouts or {})
+        self._fairness = _check_fairness(fairness)
+        self._rr = _WeightedRR(queue_weights)
+        self.stats = {"enqueued": 0, "acked": 0, "redelivered": 0,
+                      "starvation_avoided": 0}
+
+    def set_visibility_timeout(self, queue: str, timeout: float) -> None:
+        """Override the lease clock for one named queue (including leases
+        already in flight, as in FileBroker)."""
+        with self._lock:
+            self._vt_queue[queue] = float(timeout)
+            self._lock.notify_all()  # waiters recompute their next expiry
+
+    def _vt_for(self, queue: str) -> float:
+        return self._vt_queue.get(queue, self._vt)
+
+    def _deadline(self, task: Task, leased_at: float) -> float:
+        return leased_at + self._vt_for(task.queue)
 
     # -- producer side -----------------------------------------------------
     def _push_locked(self, task: Task) -> None:
@@ -134,20 +275,27 @@ class InMemoryBroker:
         names = self._heaps.keys() if queues is None else queues
         best_q = None
         best_key: Optional[Tuple[int, int]] = None
+        nonempty: List[str] = []
         for q in names:
             heap = self._heaps.get(q)
             if not heap:
                 continue
+            nonempty.append(q)
             key = heap[0][:2]
             if best_key is None or key < best_key:
                 best_key, best_q = key, q
         if best_q is None:
             return None
+        if self._fairness == "weighted" and len(nonempty) > 1:
+            pick = self._rr.pick(nonempty)
+            if pick != best_q:
+                self.stats["starvation_avoided"] += 1
+            best_q = pick
         return heapq.heappop(self._heaps[best_q])[2]
 
     def _lease_locked(self, task: Task) -> Lease:
         tag = uuid.uuid4().hex
-        self._leased[tag] = (task, time.monotonic() + self._vt)
+        self._leased[tag] = (task, time.monotonic())
         return Lease(task, tag)
 
     def _wait_locked(self, deadline: Optional[float]) -> bool:
@@ -162,7 +310,8 @@ class InMemoryBroker:
             return False
         wake_at = deadline
         if self._leased:
-            next_expiry = min(dl for _, dl in self._leased.values())
+            next_expiry = min(self._deadline(t, at)
+                              for t, at in self._leased.values())
             wake_at = next_expiry if wake_at is None else min(wake_at, next_expiry)
         self._lock.wait(None if wake_at is None else max(0.0, wake_at - now))
         return True
@@ -221,7 +370,8 @@ class InMemoryBroker:
 
     def _requeue_expired_locked(self) -> None:
         now = time.monotonic()
-        expired = [tag for tag, (_, dl) in self._leased.items() if dl < now]
+        expired = [tag for tag, (t, at) in self._leased.items()
+                   if self._deadline(t, at) < now]
         for tag in expired:
             task, _ = self._leased.pop(tag)
             task.retries += 1
@@ -243,6 +393,13 @@ class InMemoryBroker:
     def inflight(self) -> int:
         with self._lock:
             return len(self._leased)
+
+    def inflight_tasks(self) -> List[Tuple[Task, float]]:
+        """Snapshot of leased tasks with lease ages (straggler detection)."""
+        now = time.monotonic()
+        with self._lock:
+            return [(task, now - leased_at)
+                    for task, leased_at in self._leased.values()]
 
     def idle(self) -> bool:
         with self._lock:
@@ -280,7 +437,10 @@ class FileBroker:
     _TMP_PREFIX = ".tmp-"
 
     def __init__(self, root: str, visibility_timeout: float = 120.0,
-                 rescan_interval: float = 0.25):
+                 rescan_interval: float = 0.25,
+                 queue_timeouts: Optional[Dict[str, float]] = None,
+                 fairness: str = "priority",
+                 queue_weights: Optional[Dict[str, float]] = None):
         self.root = root
         self.qroot = os.path.join(root, "queues")
         self.cdir = os.path.join(root, "claimed")
@@ -289,7 +449,17 @@ class FileBroker:
         self._vt = visibility_timeout
         self._seq = itertools.count(int(time.time() * 1e3) % 10 ** 9)
         self._rescan_interval = rescan_interval
-        self._sweep_interval = min(1.0, max(0.05, visibility_timeout / 4.0))
+        # per-queue visibility overrides are shared state like the queue
+        # itself: persisted to <root>/.vt.json so every instance on this
+        # directory (other processes' sweeps included) honors them
+        self._vtconf_path = os.path.join(root, ".vt.json")
+        self._vt_queue: Dict[str, float] = {}
+        self._vtconf_sig: Optional[Tuple[int, int]] = None
+        self._load_vtconf()
+        self._vt_queue.update(queue_timeouts or {})
+        self._fairness = _check_fairness(fairness)
+        self._rr = _WeightedRR(queue_weights)
+        self._recompute_sweep_interval()
         # the cached index is in-process state shared by consumer threads
         # (WorkerPool); filesystem ops are atomic on their own, but the
         # peek-then-pop on the heaps needs a lock
@@ -306,7 +476,69 @@ class FileBroker:
         # instead of sleeping through the rescan throttle
         self._saw_stale = False
         self.stats = {"enqueued": 0, "acked": 0, "redelivered": 0,
-                      "stale_claims": 0}
+                      "stale_claims": 0, "starvation_avoided": 0}
+        if queue_timeouts:  # constructor overrides are shared state too
+            self._save_vtconf()
+
+    # -- per-queue visibility timeouts ---------------------------------------
+    def set_visibility_timeout(self, queue: str, timeout: float) -> None:
+        """Override the lease clock for one named queue.
+
+        Takes effect at the next expiry sweep (claims store their claim
+        timestamp, not a deadline), including sweeps run by *other*
+        instances on this directory: the override is persisted to
+        ``<root>/.vt.json`` and reloaded when its signature changes.
+        """
+        with self._ilock:
+            # merge-before-write: another instance may have persisted its
+            # own overrides since we last read the file; rewriting only our
+            # local view would silently drop theirs (a tiny read-modify-
+            # write window remains — overrides are rare, idempotent config)
+            self._load_vtconf()
+            self._vt_queue[queue] = float(timeout)
+            self._recompute_sweep_interval()
+        self._save_vtconf()
+
+    def _vt_for(self, queue: str) -> float:
+        return self._vt_queue.get(queue, self._vt)
+
+    def _recompute_sweep_interval(self) -> None:
+        min_vt = min([self._vt] + list(self._vt_queue.values()))
+        self._sweep_interval = min(1.0, max(0.05, min_vt / 4.0))
+
+    def _save_vtconf(self) -> None:
+        tmp = os.path.join(self.root, f".tmp-vt-{uuid.uuid4().hex}")
+        try:
+            with open(tmp, "w") as f:
+                json.dump(self._vt_queue, f)
+            os.rename(tmp, self._vtconf_path)
+        except OSError:
+            return
+        try:
+            st = os.stat(self._vtconf_path)
+            self._vtconf_sig = (st.st_mtime_ns, st.st_size)
+        except OSError:
+            pass
+
+    def _load_vtconf(self) -> None:
+        try:
+            st = os.stat(self._vtconf_path)
+        except OSError:
+            return
+        sig = (st.st_mtime_ns, st.st_size)
+        if sig == self._vtconf_sig:
+            return
+        try:
+            with open(self._vtconf_path) as f:
+                conf = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return
+        self._vtconf_sig = sig
+        self._vt_queue.update({q: float(t) for q, t in conf.items()})
+        # a shorter timeout learned from another instance must also tighten
+        # OUR sweep cadence, or its leases expire up to a full (stale)
+        # sweep interval late
+        self._recompute_sweep_interval()
 
     # -- paths ---------------------------------------------------------------
     def _qdir(self, queue: str) -> str:
@@ -396,12 +628,21 @@ class FileBroker:
         with self._ilock:
             names = list(self._index) if queues is None else queues
             best_q = None
+            nonempty = []
             for q in names:
                 heap = self._index.get(q)
-                if heap and (best_q is None or heap[0] < self._index[best_q][0]):
+                if not heap:
+                    continue
+                nonempty.append(q)
+                if best_q is None or heap[0] < self._index[best_q][0]:
                     best_q = q
             if best_q is None:
                 return None
+            if self._fairness == "weighted" and len(nonempty) > 1:
+                pick = self._rr.pick(nonempty)
+                if pick != best_q:
+                    self.stats["starvation_avoided"] += 1
+                best_q = pick
             return best_q, heapq.heappop(self._index[best_q])
 
     def _dead_letter(self, path: str) -> None:
@@ -541,13 +782,15 @@ class FileBroker:
     def _requeue_expired(self) -> None:
         """Expiry sweep: redeliver timed-out leases, reap leaked temp files."""
         self._last_sweep = time.monotonic()
+        self._load_vtconf()  # pick up other instances' per-queue overrides
         now = time.time()
         for name in os.listdir(self.cdir):
             try:
-                ts = float(name.split("__", 1)[0])
+                ts_s, queue, _ = name.split("__", 2)
+                ts = float(ts_s)
             except ValueError:
                 continue
-            if now - ts > self._vt:
+            if now - ts > self._vt_for(queue):
                 self.nack(os.path.join(self.cdir, name))
         # reap temps a crashed producer left behind (live producers hold a
         # temp for microseconds; anything older than the lease window is
@@ -604,6 +847,20 @@ class FileBroker:
 
     def inflight(self) -> int:
         return len(os.listdir(self.cdir))
+
+    def inflight_tasks(self) -> List[Tuple[Task, float]]:
+        """Snapshot of leased tasks with lease ages (straggler detection)."""
+        now = time.time()
+        out: List[Tuple[Task, float]] = []
+        for name in os.listdir(self.cdir):
+            try:
+                ts = float(name.split("__", 1)[0])
+                with open(os.path.join(self.cdir, name)) as f:
+                    task = Task.from_json(f.read())
+            except (ValueError, OSError, json.JSONDecodeError, TypeError):
+                continue  # claim vanished (acked) or poison mid-read
+            out.append((task, now - ts))
+        return out
 
     def idle(self) -> bool:
         self._requeue_expired()

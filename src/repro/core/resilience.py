@@ -11,15 +11,26 @@ Straggler mitigation: ``SpeculativeReissuer`` duplicates tasks that have
 been in flight longer than ``dup_after`` (the backup-task trick); the
 runtime's once-markers make duplicated execution a no-op, so first-finisher
 wins without coordination.
+
+All of this works against ANY Broker — including a remote NetBroker: the
+crawler only needs ``put`` and the reissuer uses the protocol's
+``inflight_tasks()`` snapshot instead of poking backend internals, so the
+recovery pass can run from a machine that shares neither the queue
+directory nor the broker process.
+
+``CursorCrawler`` is the incremental variant of ``crawl_and_resubmit``: it
+delta-reads the archive via ``Bundler.load_since(cursor)`` so a sweep costs
+only the bundles that appeared since the previous sweep, not a full
+re-walk + decompress of the tree.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Iterable, List, Optional, Set, Tuple
+from typing import Dict, Optional, Set, Tuple
 
 from repro.core.bundler import Bundler, missing_samples
-from repro.core.queue import PRIORITY_REAL, Task, new_task
+from repro.core.queue import (PRIORITY_REAL, BrokerUnavailable, Task,
+                              new_task)
 
 
 @dataclasses.dataclass
@@ -49,26 +60,106 @@ def crawl_and_resubmit(bundler: Bundler, expected_n: int, broker,
     for path in corrupt:
         pass  # ids unreadable; covered by the expected-set diff below
     ranges = missing_samples(expected_n, present)
-    n_missing = sum(hi - lo for lo, hi in ranges)
-    n_tasks = 0
+    return (sum(hi - lo for lo, hi in ranges),
+            _enqueue_ranges(broker, ranges, task_template, bundle, queue))
+
+
+def _iter_bundle_chunks(ranges, bundle: int):
+    """Split [lo, hi) ranges into (s, e) chunks — the ONE place chunking
+    lives, so resubmission granularity (and CursorCrawler's cooldown keys)
+    can never diverge from what gets enqueued.
+
+    Chunk boundaries snap to the absolute ``bundle`` grid (matching the
+    hierarchy's leaf layout) rather than running from each range's lo:
+    grid chunks are STABLE as a hole shrinks from either end, so the
+    crawler's per-chunk cooldown keys keep matching across sweeps instead
+    of being reminted every time part of a range completes."""
     for lo, hi in ranges:
-        # split to bundle-sized tasks so redelivery granularity is unchanged
         s = lo
         while s < hi:
-            e = min(s + bundle, hi)
-            broker.put(new_task("real", {**task_template, "samples": [s, e]},
-                                priority=PRIORITY_REAL, queue=queue))
-            n_tasks += 1
+            e = min(hi, (s // bundle + 1) * bundle)
+            yield s, e
             s = e
-    return n_missing, n_tasks
+
+
+def _enqueue_ranges(broker, ranges, task_template: dict, bundle: int,
+                    queue: str) -> int:
+    """Enqueue missing ranges as bundle-sized real tasks (bundle-sized so
+    redelivery granularity is unchanged)."""
+    n_tasks = 0
+    for s, e in _iter_bundle_chunks(ranges, bundle):
+        broker.put(new_task("real", {**task_template, "samples": [s, e]},
+                            priority=PRIORITY_REAL, queue=queue))
+        n_tasks += 1
+    return n_tasks
+
+
+class CursorCrawler:
+    """Incremental crawl-and-resubmit for a long-running recovery loop.
+
+    ``crawl_and_resubmit`` re-walks and re-reads the whole archive on every
+    call — fine for a one-shot pass, quadratic for a periodic sweeper.
+    This crawler holds a ``Bundler.load_since`` cursor: each ``sweep()``
+    decompresses only bundles that appeared since the last sweep, folds
+    their sample ids into the running ``present`` set, and enqueues what is
+    still missing.
+
+    A range already resubmitted is not re-enqueued until it has stayed
+    missing for ``resubmit_after`` further sweeps (duplicates are *safe* —
+    once-markers — just wasteful).
+    """
+
+    def __init__(self, bundler: Bundler, expected_n: int,
+                 resubmit_after: int = 2):
+        self.bundler = bundler
+        self.expected_n = expected_n
+        self.resubmit_after = max(1, resubmit_after)
+        self._cursor = None
+        self._present: Set[int] = set()
+        self._submitted: Dict[Tuple[int, int], int] = {}
+        self._sweep_i = 0
+
+    @property
+    def present(self) -> Set[int]:
+        return set(self._present)
+
+    def sweep(self, broker, task_template: dict, bundle: int,
+              queue: Optional[str] = None) -> Tuple[int, int]:
+        """Delta-read the archive, resubmit missing ranges.
+
+        Returns ``(n_missing_samples, n_tasks_enqueued)``."""
+        self._sweep_i += 1
+        data, self._cursor = self.bundler.load_since(self._cursor)
+        ids = data.get("_sample_ids")
+        if ids is not None:
+            self._present.update(int(i) for i in ids)
+        ranges = missing_samples(self.expected_n, self._present)
+        n_missing = sum(hi - lo for lo, hi in ranges)
+        if queue is None:
+            queue = task_template.get("real_queue", "default")
+        n_tasks = 0
+        still_missing: Dict[Tuple[int, int], int] = {}
+        for s, e in _iter_bundle_chunks(ranges, bundle):
+            last = self._submitted.get((s, e))
+            if last is None or self._sweep_i - last >= self.resubmit_after:
+                broker.put(new_task(
+                    "real", {**task_template, "samples": [s, e]},
+                    priority=PRIORITY_REAL, queue=queue))
+                last = self._sweep_i
+                n_tasks += 1
+            still_missing[(s, e)] = last
+        # completed chunks never go missing again (present only grows):
+        # keeping only still-missing keys bounds the cooldown map
+        self._submitted = still_missing
+        return n_missing, n_tasks
 
 
 class SpeculativeReissuer:
     """Duplicate-issue tasks stuck in flight (straggler mitigation).
 
-    Works with InMemoryBroker: inspects the leased table and re-enqueues
-    copies of tasks leased longer than ``dup_after`` seconds.  Execution
-    idempotency (runtime once-markers) makes the duplicate safe.
+    Uses the Broker protocol's ``inflight_tasks()`` snapshot, so it works
+    identically against every backend — including a remote NetBroker.
+    Execution idempotency (runtime once-markers) makes duplicates safe.
     """
 
     def __init__(self, broker, dup_after: float = 5.0, max_dups: int = 1):
@@ -78,17 +169,13 @@ class SpeculativeReissuer:
         self._dups: dict = {}
 
     def scan_once(self) -> int:
+        try:
+            items = self.broker.inflight_tasks()
+        except BrokerUnavailable:
+            return 0  # broker briefly down: reissue on the next scan
         n = 0
-        leased = getattr(self.broker, "_leased", None)
-        if leased is None:
-            return 0
-        now = time.monotonic()
-        with self.broker._lock:
-            items = list(leased.items())
-        for tag, (task, deadline) in items:
-            vt = getattr(self.broker, "_vt", 60.0)
-            leased_at = deadline - vt
-            if now - leased_at > self.dup_after and \
+        for task, age in items:
+            if age > self.dup_after and \
                     self._dups.get(task.id, 0) < self.max_dups:
                 dup = new_task(task.kind, dict(task.payload),
                                priority=task.priority, queue=task.queue)

@@ -186,6 +186,13 @@ class MerlinRuntime:
                  fns: Optional[Dict[str, Callable]] = None,
                  hierarchy: H.HierarchyCfg = H.HierarchyCfg(),
                  real_queue: str = "real", gen_queue: str = "gen"):
+        # broker may be a Broker instance or a URL: "tcp://host:port"
+        # connects to a remote BrokerServer (no shared filesystem for the
+        # queue — the paper's cross-allocation RabbitMQ model), "file://dir"
+        # a shared-directory FileBroker, "mem://" a private InMemoryBroker.
+        if isinstance(broker, str):
+            from repro.core.netbroker import make_broker
+            broker = make_broker(broker)
         self.broker = broker if broker is not None else InMemoryBroker()
         self.workspace = workspace
         os.makedirs(workspace, exist_ok=True)

@@ -19,6 +19,14 @@ mid-task simply never acks; the task is redelivered and, because real-task
 execution is idempotent (journal/once markers), re-running is safe.  Retry
 caps come from one shared :class:`~repro.core.resilience.RetryPolicy`, so
 both broker backends age out poison tasks identically.
+
+Remote brokers: when the runtime's broker is a NetBroker, a broker-server
+restart surfaces here as :class:`~repro.core.queue.BrokerUnavailable` after
+the client's reconnect window.  Workers treat it as transient — back off,
+keep polling, and effectively resubscribe once the server returns
+(subscriptions are stateless: the queue list rides on every ``get_many``).
+Leases stranded by the outage expire server-side and redeliver; completed
+work re-acked after a reconnect is a no-op (acks are idempotent).
 """
 from __future__ import annotations
 
@@ -28,7 +36,7 @@ import time
 from typing import List, Optional, Sequence
 
 from repro.core import hierarchy as H
-from repro.core.queue import Lease, Task
+from repro.core.queue import BrokerError, Lease, Task
 from repro.core.resilience import RetryPolicy
 from repro.core.runtime import MerlinRuntime
 
@@ -53,14 +61,25 @@ class Worker(threading.Thread):
         self.queues = queues
         self.batch = max(1, batch)
         self.retry_policy = retry_policy or RetryPolicy()
-        self.stats = {"gen": 0, "real": 0, "failed": 0}
+        self.stats = {"gen": 0, "real": 0, "failed": 0, "broker_retries": 0}
         self.first_real_at: Optional[float] = None
 
     def run(self) -> None:
         broker = self.runtime.broker
         while not self.stop_event.is_set():
-            leases = broker.get_many(self.batch, timeout=self.poll_timeout,
-                                     queues=self.queues)
+            try:
+                leases = broker.get_many(self.batch,
+                                         timeout=self.poll_timeout,
+                                         queues=self.queues)
+            except BrokerError:
+                # broker down (BrokerUnavailable) or a transient server-side
+                # failure relayed as a structured error: back off and keep
+                # polling — a dead worker thread is strictly worse, and once
+                # the broker heals we lease again (reconnect-and-resubscribe;
+                # the subscription is stateless, it rides on every get_many)
+                self.stats["broker_retries"] += 1
+                self.stop_event.wait(0.2)
+                continue
             if not leases:
                 continue
             acks: List[str] = []
@@ -96,7 +115,12 @@ class Worker(threading.Thread):
                         if self._run_one(lease, broker):
                             acks.append(lease.tag)
             if acks:
-                broker.ack_many(acks)
+                try:
+                    broker.ack_many(acks)
+                except BrokerError:
+                    # work is done and idempotent: the unacked leases
+                    # expire, redeliver, and no-op on their once-markers
+                    self.stats["broker_retries"] += 1
 
     def _run_one(self, lease: Lease, broker) -> bool:
         """Per-lease dispatch with failure accounting; True if ackable."""
@@ -114,10 +138,14 @@ class Worker(threading.Thread):
              "kind": lease.task.kind,
              "payload": {k: v for k, v in lease.task.payload.items()
                          if k != "spec"}})
-        if self.retry_policy.should_retry(lease.task):
-            broker.nack(lease.tag)
-        else:
-            broker.ack(lease.tag)  # poison: give up, leave to crawler
+        try:
+            if self.retry_policy.should_retry(lease.task):
+                broker.nack(lease.tag)
+            else:
+                broker.ack(lease.tag)  # poison: give up, leave to crawler
+        except BrokerError:
+            # lease expiry redelivers with retries bumped — same outcome
+            self.stats["broker_retries"] += 1
 
     def _dispatch(self, task: Task) -> None:
         # injected failure: worker "dies" on this task (no ack, no effect)
@@ -173,8 +201,11 @@ class WorkerPool:
         """Wait until the broker is idle (queue empty, nothing in flight)."""
         deadline = time.monotonic() + timeout
         while time.monotonic() < deadline:
-            if self.runtime.broker.idle():
-                return True
+            try:
+                if self.runtime.broker.idle():
+                    return True
+            except BrokerError:
+                pass  # server restarting/erroring: not idle, keep waiting
             time.sleep(poll)
         return False
 
@@ -184,7 +215,7 @@ class WorkerPool:
             w.join(timeout=5.0)
 
     def stats(self) -> dict:
-        agg = {"gen": 0, "real": 0, "failed": 0}
+        agg = {"gen": 0, "real": 0, "failed": 0, "broker_retries": 0}
         for w in self.workers:
             for k in agg:
                 agg[k] += w.stats[k]

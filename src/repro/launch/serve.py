@@ -1,15 +1,87 @@
-"""Serving launcher: batched prefill + decode with throughput report.
+"""Serving launchers.
+
+LLM serving (batched prefill + decode with throughput report):
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --reduced \
       --batch 4 --prompt-len 32 --new-tokens 16
+
+Broker serving (a standalone BrokerServer process — the deployable
+RabbitMQ stand-in of paper Sec. 2-3; workers on other nodes connect with
+``MerlinRuntime(broker="tcp://host:port")``, no shared filesystem needed):
+
+  PYTHONPATH=src python -m repro.launch.serve broker-serve \
+      [--backend mem|file] [--root DIR] [--host H] [--port P] \
+      [--port-file PATH] [--visibility-timeout S] [--fairness priority|weighted]
+
+``--port 0`` picks a free port; ``--port-file`` atomically publishes the
+bound port for launcher scripts (examples/quickstart.py --two-process).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
+
+
+def broker_serve_main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve broker-serve",
+        description="Run a standalone broker server for remote "
+                    "MerlinRuntime/WorkerPool processes.")
+    ap.add_argument("--backend", choices=("mem", "file"), default="mem",
+                    help="queue backend the server fronts")
+    ap.add_argument("--root", default=None,
+                    help="FileBroker directory (required for --backend file;"
+                         " makes the queue itself crash-durable)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="TCP port (0 = pick a free one)")
+    ap.add_argument("--port-file", default=None,
+                    help="write the bound port here (atomic) once listening")
+    ap.add_argument("--visibility-timeout", type=float, default=60.0)
+    ap.add_argument("--fairness", choices=("priority", "weighted"),
+                    default="priority")
+    args = ap.parse_args(argv)
+
+    from repro.core.netbroker import BrokerServer
+    from repro.core.queue import FileBroker, InMemoryBroker
+
+    if args.backend == "file":
+        if not args.root:
+            ap.error("--backend file requires --root DIR")
+        backend = FileBroker(args.root,
+                             visibility_timeout=args.visibility_timeout,
+                             fairness=args.fairness)
+    else:
+        backend = InMemoryBroker(visibility_timeout=args.visibility_timeout,
+                                 fairness=args.fairness)
+    server = BrokerServer(backend, host=args.host, port=args.port)
+    server.start()
+    print(json.dumps({"event": "listening", "host": args.host,
+                      "port": server.port, "backend": args.backend}),
+          flush=True)
+    if args.port_file:
+        tmp = args.port_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(str(server.port))
+        os.rename(tmp, args.port_file)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.stop()
 
 
 def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "broker-serve":
+        return broker_serve_main(argv[1:])
+    return llm_serve_main(argv)
+
+
+def llm_serve_main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")
     ap.add_argument("--reduced", action="store_true", default=True)

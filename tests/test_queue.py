@@ -73,6 +73,88 @@ def test_file_broker_cross_instance(tmp_path):
     assert b1.idle()
 
 
+@pytest.fixture(params=["mem", "file"])
+def make_broker_kw(request, tmp_path):
+    """Factory taking backend kwargs (fairness, queue_timeouts, ...)."""
+    def make(**kw):
+        if request.param == "mem":
+            return InMemoryBroker(**kw)
+        return FileBroker(str(tmp_path / "q"), **kw)
+    return make
+
+
+def test_per_queue_visibility_timeout(make_broker_kw):
+    """A fast gen queue and a slow sim queue get independent lease clocks."""
+    b = make_broker_kw(visibility_timeout=30.0, queue_timeouts={"gen": 0.15})
+    b.put(new_task("real", {}, queue="sims"))
+    b.put(new_task("gen", {}, queue="gen"))
+    l_sim = b.get(timeout=1, queues=("sims",))
+    l_gen = b.get(timeout=1, queues=("gen",))
+    assert l_sim and l_gen
+    # only the gen lease expires; the sim queue keeps the default 30s clock
+    back = b.get(timeout=2)
+    assert back is not None and back.task.queue == "gen"
+    assert back.task.retries == 1
+    b.ack(back.tag)
+    assert b.get(timeout=0.1) is None
+    assert b.inflight() == 1  # the sim lease is still held
+
+
+def test_set_visibility_timeout_after_construction(make_broker_kw):
+    b = make_broker_kw(visibility_timeout=30.0)
+    b.set_visibility_timeout("sims", 0.15)
+    b.put(new_task("real", {}, queue="sims"))
+    lease = b.get(timeout=1)
+    assert lease is not None
+    lease2 = b.get(timeout=2)  # 0.15s clock, not 30s
+    assert lease2 is not None and lease2.task.retries == 1
+
+
+def test_filebroker_per_queue_vt_shared_across_instances(tmp_path):
+    """The override is queue state: another instance on the same directory
+    (a different 'allocation' sweeping expiries) honors it."""
+    b1 = FileBroker(str(tmp_path / "q"), visibility_timeout=30.0)
+    b1.set_visibility_timeout("sims", 0.1)
+    b1.put(new_task("real", {}, queue="sims"))
+    assert b1.get(timeout=1) is not None  # leased, never acked
+    b2 = FileBroker(str(tmp_path / "q"), visibility_timeout=30.0)
+    lease = b2.get(timeout=2)  # b2's sweep must apply the 0.1s override
+    assert lease is not None and lease.task.retries == 1
+
+
+def test_weighted_fairness_prevents_starvation(make_broker_kw):
+    """50 queued flood tasks vs 3 trickle tasks: round-robin interleaves
+    them instead of draining the flood first."""
+    b = make_broker_kw(fairness="weighted")
+    b.put_many([new_task("real", {"i": i}, queue="flood") for i in range(50)])
+    b.put_many([new_task("real", {"i": i}, queue="trickle") for i in range(3)])
+    first = [b.get(timeout=1).task.queue for _ in range(6)]
+    assert "trickle" in first[:2]
+    assert first.count("trickle") >= 3  # all trickle served in 6 slots
+    assert b.stats["starvation_avoided"] >= 1
+
+
+def test_weighted_fairness_respects_weights(make_broker_kw):
+    """weight 3 vs 1: the heavy queue gets ~3 slots per cycle."""
+    b = make_broker_kw(fairness="weighted",
+                       queue_weights={"heavy": 3, "light": 1})
+    b.put_many([new_task("real", {"i": i}, queue="heavy") for i in range(9)])
+    b.put_many([new_task("real", {"i": i}, queue="light") for i in range(3)])
+    got = [b.get(timeout=1).task.queue for _ in range(12)]
+    # every consecutive window of 4 deliveries contains exactly 1 light
+    for w in range(0, 12, 4):
+        assert got[w:w + 4].count("light") == 1, got
+
+
+def test_strict_priority_remains_default(make_broker_kw):
+    b = make_broker_kw()
+    b.put_many([new_task("real", {"i": i}, queue="flood") for i in range(10)])
+    b.put(new_task("real", {}, queue="late"))
+    first = [b.get(timeout=1).task.queue for _ in range(10)]
+    assert first == ["flood"] * 10  # enqueue order wins, no rotation
+    assert b.stats["starvation_avoided"] == 0
+
+
 def test_concurrent_claims_unique(tmp_path):
     """Atomic rename: concurrent getters never double-claim one task."""
     b = FileBroker(str(tmp_path / "q"))

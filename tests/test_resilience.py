@@ -6,7 +6,8 @@ import numpy as np
 from repro.core import Bundler, MerlinRuntime, Step, StudySpec, WorkerPool
 from repro.core.hierarchy import HierarchyCfg
 from repro.core.queue import InMemoryBroker, new_task
-from repro.core.resilience import RetryPolicy, SpeculativeReissuer
+from repro.core.resilience import (CursorCrawler, RetryPolicy,
+                                   SpeculativeReissuer, crawl_and_resubmit)
 
 
 def test_retry_policy():
@@ -66,6 +67,76 @@ def test_speculative_reissue_first_finisher_wins(tmp_path):
     broker.ack(gen_lease.tag)
     assert runs == [0]
     assert rt.study_done(sid)
+
+
+def test_cursor_crawler_matches_full_crawl(tmp_path):
+    """The incremental crawler resubmits the same missing ranges as the
+    one-shot full crawl."""
+    import numpy as np
+    bundler = Bundler(str(tmp_path / "res"))
+    for lo in (0, 8, 24):  # holes: [16, 24) and [32, 40)
+        bundler.write_bundle(lo, lo + 8, {"y": np.ones(8)})
+    full_broker, inc_broker = InMemoryBroker(), InMemoryBroker()
+    tmpl = {"study": "s", "stage": 0, "combo": 0, "n_samples": 40,
+            "real_queue": "sims"}
+    n_missing_full, n_full = crawl_and_resubmit(
+        Bundler(str(tmp_path / "res")), 40, full_broker, tmpl, bundle=8)
+    crawler = CursorCrawler(bundler, expected_n=40)
+    n_missing_inc, n_inc = crawler.sweep(inc_broker, tmpl, bundle=8)
+    assert (n_missing_inc, n_inc) == (n_missing_full, n_full) == (16, 2)
+
+    def drain_ranges(b):
+        out = []
+        while True:
+            lease = b.get(timeout=0.1)
+            if lease is None:
+                return sorted(map(tuple, out))
+            out.append(lease.task.payload["samples"])
+            assert lease.task.queue == "sims"
+            b.ack(lease.tag)
+    assert drain_ranges(full_broker) == drain_ranges(inc_broker) \
+        == [(16, 24), (32, 40)]
+
+
+def test_cursor_crawler_is_incremental(tmp_path):
+    """Subsequent sweeps only decompress NEW bundles and do not re-enqueue
+    ranges resubmitted a sweep ago."""
+    import numpy as np
+    bundler = Bundler(str(tmp_path / "res"))
+    bundler.write_bundle(0, 8, {"y": np.ones(8)})
+    broker = InMemoryBroker()
+    crawler = CursorCrawler(bundler, expected_n=24, resubmit_after=2)
+    tmpl = {"real_queue": "sims"}
+    assert crawler.sweep(broker, tmpl, bundle=8) == (16, 2)
+    # a worker completes one missing range between sweeps
+    bundler.write_bundle(8, 16, {"y": np.ones(8)})
+    n_loads_before = len(bundler._file_cache)
+    n_missing, n_tasks = crawler.sweep(broker, tmpl, bundle=8)
+    assert n_missing == 8      # [16, 24) still missing
+    assert n_tasks == 0        # resubmitted last sweep: cooldown holds
+    assert len(bundler._file_cache) == n_loads_before + 1  # delta load only
+    # after the cooldown the still-missing range goes out again
+    n_missing, n_tasks = crawler.sweep(broker, tmpl, bundle=8)
+    assert (n_missing, n_tasks) == (8, 1)
+    assert crawler.present == set(range(16))
+
+
+def test_cursor_crawler_cooldown_stable_for_unaligned_holes(tmp_path):
+    """Chunk keys snap to the bundle grid, so a hole shrinking from one
+    end keeps its remaining chunks' cooldown keys (no instant re-enqueue)."""
+    import numpy as np
+    bundler = Bundler(str(tmp_path / "res"))
+    bundler.write_bundle(0, 4, {"y": np.ones(4)})   # hole: [4, 24)
+    broker = InMemoryBroker()
+    crawler = CursorCrawler(bundler, expected_n=24, resubmit_after=2)
+    tmpl = {"real_queue": "sims"}
+    n_missing, n_tasks = crawler.sweep(broker, tmpl, bundle=8)
+    assert (n_missing, n_tasks) == (20, 3)  # (4,8), (8,16), (16,24)
+    # the ragged head completes; the grid-aligned tail chunks keep their
+    # keys and stay in cooldown instead of being reminted and re-enqueued
+    bundler.write_bundle(4, 8, {"y": np.ones(4)})
+    n_missing, n_tasks = crawler.sweep(broker, tmpl, bundle=8)
+    assert (n_missing, n_tasks) == (16, 0)
 
 
 def test_journal_survives_torn_writes(tmp_path):
