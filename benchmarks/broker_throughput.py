@@ -4,14 +4,18 @@ hot path (paper Sec. 2.3 "server stability" / Figs. 3-6 analogues).
 Measures end-to-end drain throughput (claim + ack) in tasks/s for the
 local broker backends at 1, 4, and 16 concurrent workers with batch sizes
 1 and 8, for the NetBroker (real TCP sockets against a BrokerServer
-fronting an InMemoryBroker and a FileBroker) at batch 1/8/32, and for a
-reference re-implementation of the *seed* FileBroker claim loop (full
-listdir + sort per claim) so every speedup is measured, not asserted.
+fronting an InMemoryBroker and a FileBroker) at batch 1/8/32, for a
+2-shard ShardedBroker federation (two in-process BrokerServers, queues
+split across them by the override map), and for a reference
+re-implementation of the *seed* FileBroker claim loop (full listdir +
+sort per claim) so every speedup is measured, not asserted.
 
 Writes the ``BENCH_broker.json`` artifact (schema: benchmarks/README.md).
-The headline acceptance ratio is NetBroker batched (b>=8) throughput vs
-the indexed FileBroker single-worker baseline — i.e. "going over the wire
-with batching costs nothing vs the shared-filesystem broker".
+Acceptance ratios: NetBroker batched (b>=8) vs the indexed FileBroker
+single-worker baseline ("going over the wire with batching costs nothing
+vs the shared-filesystem broker", PR 3, bar >= 1x), and the 2-shard
+federation at b=8 vs the single net_mem b=8 server ("sharding scales
+past one broker process", PR 4, bar >= 1.3x).
 
 Usage: PYTHONPATH=src python -m benchmarks.broker_throughput \
            [--tasks N] [--quick] [--out PATH]
@@ -30,6 +34,12 @@ from typing import Callable, List
 
 from repro.core.netbroker import BrokerServer, NetBroker
 from repro.core.queue import FileBroker, InMemoryBroker, Task, new_task
+from repro.core.shardbroker import ShardedBroker
+
+# artifact lands at the repo root regardless of the caller's CWD (matching
+# ensemble_throughput) so run.py --quick refreshes the committed file
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "..", "BENCH_broker.json")
 
 
 # ---------------------------------------------------------------------------
@@ -138,18 +148,110 @@ def bench_net(make_backend: Callable[[], object], n_tasks: int,
         server.stop()
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--tasks", type=int, default=1000,
-                    help="queued tasks per configuration")
-    ap.add_argument("--quick", action="store_true",
-                    help="tiny run (200 tasks) for CI smoke")
-    ap.add_argument("--out", default="BENCH_broker.json",
-                    help="JSON artifact path (schema: benchmarks/README.md)")
-    args = ap.parse_args()
-    if args.tasks <= 0:
-        ap.error("--tasks must be positive")
-    n = 200 if args.quick else args.tasks
+def drain_worker_main(cfg_json: str) -> None:
+    """Subprocess entrypoint (``--drain-worker``): attach to the given
+    endpoints, drain the subscribed queues until they stay empty for
+    ``idle_exit`` seconds, report ``{done, t_first, t_last}`` on stdout.
+
+    Separate *processes* matter here: client threads inside the bench
+    process convoy on the GIL with the in-process servers' handler
+    threads, which hides exactly the contention sharding is built to
+    remove.  Real consumers are separate allocations; so are these."""
+    import sys
+    from repro.core.netbroker import make_broker
+    cfg = json.loads(cfg_json)
+    endpoints = cfg["endpoints"]
+    if len(endpoints) > 1:
+        # a drainer spanning shards must use the BENCH's queue->shard
+        # assignment (indices into ITS endpoint list), not the default
+        # hash — the parent routed the tasks with an override map
+        broker = make_broker(endpoints,
+                             queue_shards=cfg.get("queue_shards") or {})
+    else:
+        broker = make_broker(endpoints[0])
+    queues = cfg.get("queues")
+    batch = cfg["batch"]
+    done, t_first, t_last = 0, None, None
+    idle_since = None
+    while True:
+        leases = broker.get_many(batch, timeout=0.05, queues=queues)
+        now = time.time()
+        if not leases:
+            if idle_since is None:
+                idle_since = now
+            elif now - idle_since > cfg["idle_exit"]:
+                break
+            continue
+        idle_since = None
+        broker.ack_many([l.tag for l in leases])
+        if t_first is None:
+            t_first = now
+        t_last = now
+        done += len(leases)
+    json.dump({"done": done, "t_first": t_first, "t_last": t_last},
+              sys.stdout)
+
+
+def bench_shard_procs(n_tasks: int, n_shards: int, n_procs: int, batch: int,
+                      n_queues: int = 8) -> dict:
+    """The federation scenario: ``n_shards`` in-process BrokerServers
+    (each fronting its own InMemoryBroker), queues routed across them with
+    an explicit round-robin override map (exact load split + exercises the
+    override path), drained at saturation by ``n_procs`` drainer
+    *processes*, each subscribed to a disjoint queue subset and connected
+    only to the shards owning it (the pinned-worker topology).
+
+    ``n_shards=1`` is the single-server control with the identical
+    consumer fleet — the apples-to-apples baseline for the federation
+    acceptance ratio.  Throughput is total acks over the
+    [first-lease, last-ack] window across the fleet."""
+    import subprocess
+    import sys
+    servers = [BrokerServer(InMemoryBroker()).start()
+               for _ in range(n_shards)]
+    queues = [f"bench{q}" for q in range(n_queues)]
+    qmap = {q: i % n_shards for i, q in enumerate(queues)}
+    broker = ShardedBroker([s.address for s in servers], queue_shards=qmap)
+    try:
+        broker.put_many([new_task("real", {"i": i},
+                                  queue=queues[i % n_queues])
+                         for i in range(n_tasks)])
+        repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = {**os.environ, "PYTHONPATH": os.path.join(repo_root, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", "")}
+        procs = []
+        for p in range(n_procs):
+            myq = [q for j, q in enumerate(queues) if j % n_procs == p]
+            eps = sorted({f"tcp://127.0.0.1:{servers[qmap[q]].port}"
+                          for q in myq})
+            cfg = {"endpoints": eps, "queues": myq, "batch": batch,
+                   "idle_exit": 0.4,
+                   "queue_shards": {
+                       q: eps.index(f"tcp://127.0.0.1:{servers[qmap[q]].port}")
+                       for q in myq}}
+            procs.append(subprocess.Popen(
+                [sys.executable, "-m", "benchmarks.broker_throughput",
+                 "--drain-worker", json.dumps(cfg)],
+                stdout=subprocess.PIPE, cwd=repo_root, env=env))
+        outs = [json.loads(p.communicate(timeout=120)[0]) for p in procs]
+    finally:
+        broker.close()
+        for s in servers:
+            s.stop()
+    done = sum(o["done"] for o in outs)
+    t0 = min(o["t_first"] for o in outs if o["t_first"] is not None)
+    t1 = max(o["t_last"] for o in outs if o["t_last"] is not None)
+    wall = max(t1 - t0, 1e-9)
+    if done < n_tasks:
+        raise RuntimeError(f"drainers acked {done}/{n_tasks} tasks")
+    return {"tasks_per_s": done / wall, "wall_s": wall}
+
+
+def run(tasks: int = 1000, quick: bool = False,
+        out: str = DEFAULT_OUT) -> dict:
+    """Run the full scenario matrix, write the artifact, return it
+    (with the printable rows under ``"_rows"``)."""
+    n = 200 if quick else tasks
 
     tmp = tempfile.mkdtemp(prefix="broker-bench-")
     rows = []
@@ -182,6 +284,29 @@ def main() -> None:
             root = os.path.join(tmp, f"netfile{j}")
             record(f"net_file_w1_b{batch}",
                    bench_net(lambda: FileBroker(root), n, 1, batch))
+        # federation: a 4-process consumer fleet saturating ONE server vs
+        # the SAME fleet on 2 shards — the topology where claim+ack
+        # throughput scales past one broker process.  Floor of 4000 tasks
+        # (even in --quick) so the measurement window dwarfs drainer
+        # startup and actually saturates the server.  Interleaved
+        # median-of-5 per scenario: box-load drift hits both topologies
+        # equally, the median is the *sustained* figure (a single broker
+        # process's throughput under fleet contention is bimodal —
+        # scheduler-lucky runs spike it; "best-of" would reward exactly
+        # the luck federation exists to remove), and outlier runs in
+        # either direction drop out.
+        # --quick keeps the scenario present but lighter (smaller floor,
+        # median-of-3): it is a CI smoke of the machinery, not the
+        # perf-trajectory measurement
+        n_procs_tasks = max(4 * n, 2000 if quick else 4000)
+        repeats = 3 if quick else 5
+        singles, shards = [], []
+        for _ in range(repeats):
+            singles.append(bench_shard_procs(n_procs_tasks, 1, 4, 8))
+            shards.append(bench_shard_procs(n_procs_tasks, 2, 4, 8))
+        med = lambda rs: sorted(rs, key=lambda r: r["tasks_per_s"])[len(rs) // 2]
+        record("net_mem_procs4_b8", med(singles))
+        record("shard2_mem_procs4_b8", med(shards))
         # seed-era baseline: single worker, batch 1 — its claim is O(n log n)
         seed = bench(lambda: SeedFileBroker(os.path.join(tmp, "seed")),
                      n, 1, 1)
@@ -196,22 +321,58 @@ def main() -> None:
         net_ratio = net_best / new_w1
         rows.append(("net_batched_vs_file_w1_b1", net_ratio,
                      f"{net_ratio:.2f}x (acceptance >= 1x)"))
+        # acceptance: 2-shard federation vs the single net_mem b=8 server
+        # under the identical saturating consumer fleet
+        shard_ratio = (scenarios["shard2_mem_procs4_b8"]["tasks_per_s"]
+                       / scenarios["net_mem_procs4_b8"]["tasks_per_s"])
+        rows.append(("shard2_vs_net_mem_b8", shard_ratio,
+                     f"{shard_ratio:.2f}x (acceptance >= 1.3x)"))
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 
     artifact = {
         "meta": {"bench": "broker_throughput", "tasks": n,
-                 "quick": bool(args.quick), "unix_time": time.time()},
+                 "quick": bool(quick), "unix_time": time.time()},
         "scenarios": scenarios,
         "file_index_speedup_vs_seed": round(speedup, 2),
         "acceptance": {
             "net_batched_vs_file_w1_b1": round(net_ratio, 2),
-            "pass": bool(net_ratio >= 1.0),
+            "pass_net": bool(net_ratio >= 1.0),
+            # contention-regime dependent on small hosts — see
+            # benchmarks/README.md (parity when idle CPU caps both
+            # topologies; 1.4-2.4x measured under co-resident load)
+            "shard2_vs_net_mem_b8": round(shard_ratio, 2),
+            "pass_shard": bool(shard_ratio >= 1.3),
+            "pass": bool(net_ratio >= 1.0 and shard_ratio >= 1.3),
         },
     }
-    with open(args.out + ".tmp", "w") as f:
+    with open(out + ".tmp", "w") as f:
         json.dump(artifact, f, indent=1)
-    os.rename(args.out + ".tmp", args.out)
+    os.rename(out + ".tmp", out)
+    artifact["_rows"] = rows
+    return artifact
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=1000,
+                    help="queued tasks per configuration")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny run (200 tasks) for CI smoke")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="JSON artifact path (schema: benchmarks/README.md; "
+                         "default: BENCH_broker.json at the repo root)")
+    ap.add_argument("--drain-worker", default=None, metavar="JSON",
+                    help=argparse.SUPPRESS)  # bench_shard_procs subprocess
+    args = ap.parse_args()
+    if args.drain_worker is not None:
+        return drain_worker_main(args.drain_worker)
+    if args.tasks <= 0:
+        ap.error("--tasks must be positive")
+
+    artifact = run(tasks=args.tasks, quick=args.quick, out=args.out)
+    rows = artifact["_rows"]
+    n = artifact["meta"]["tasks"]
 
     print("name,tasks_per_s,detail")
     for name, tps, detail in rows:

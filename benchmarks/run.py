@@ -69,6 +69,15 @@ def main() -> None:
         rows.append(("ensemble_surrogate_train",
                      et["surrogate"]["scanned_s"] * 1e6,
                      f"{et['surrogate']['speedup']:.1f}x vs eager loop"))
+        # broker bench (tiny): refreshes BENCH_broker.json so the perf
+        # trajectory covers the federated (sharded) topology too
+        from benchmarks import broker_throughput as BT
+        bt = BT.run(quick=True)
+        shard = bt["scenarios"]["shard2_mem_procs4_b8"]
+        rows.append(("broker_shard2_mem_procs4_b8",
+                     1e6 / shard["tasks_per_s"],
+                     f"{bt['acceptance']['shard2_vs_net_mem_b8']:.2f}x vs "
+                     f"one server, same consumer fleet (bar >= 1.3x)"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

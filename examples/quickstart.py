@@ -17,6 +17,16 @@ spawns ``python -m repro.launch.serve broker-serve`` as a separate OS
 process and attaches the runtime + worker pool to it over TCP.  The queue
 lives entirely in the server process — no shared directory, no shared
 memory; kill either side and the other's leases expire and redeliver.
+
+Sharded mode (the federation that scales past one broker process):
+
+    PYTHONPATH=src python examples/quickstart.py --sharded
+
+spawns TWO broker-serve processes (shards 0/2 and 1/2) and connects the
+runtime with ``broker=[url0, url1]`` — a ShardedBroker that routes each
+queue to its owning shard by stable hash.  The study's ``real`` and
+``gen`` queues land on different shards, so generation and simulation
+traffic never share a broker process.
 """
 import argparse
 import os
@@ -35,12 +45,14 @@ from repro.sim import jag_simulate, jag_sample_inputs
 import jax
 
 
-def spawn_broker_server(workspace: str) -> "tuple[subprocess.Popen, str]":
+def spawn_broker_server(workspace: str, name: str = "broker",
+                        extra_args: "list[str]" = ()) \
+        -> "tuple[subprocess.Popen, str]":
     """Start a broker-serve process; return (proc, tcp:// URL)."""
-    port_file = os.path.join(workspace, "broker.port")
+    port_file = os.path.join(workspace, f"{name}.port")
     proc = subprocess.Popen(
         [sys.executable, "-m", "repro.launch.serve", "broker-serve",
-         "--port", "0", "--port-file", port_file],
+         "--port", "0", "--port-file", port_file, *extra_args],
         env={**os.environ,
              "PYTHONPATH": "src" + os.pathsep + os.environ.get("PYTHONPATH", "")})
     deadline = time.monotonic() + 30
@@ -61,18 +73,36 @@ def main(argv=None):
     ap.add_argument("--two-process", action="store_true",
                     help="host the queue in a separate broker-serve process "
                          "(no shared filesystem for the queue)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="host the queues on TWO broker-serve shard "
+                         "processes, federated client-side by queue hash")
     args = ap.parse_args(argv)
 
-    proc = None
+    procs = []
     with tempfile.TemporaryDirectory() as ws:
         broker = None  # default: in-process InMemoryBroker
-        if args.two_process:
+        if args.sharded:
+            urls = []
+            for i in range(2):
+                p, url = spawn_broker_server(
+                    ws, name=f"shard{i}", extra_args=["--shard-of", f"{i}/2"])
+                procs.append(p)
+                urls.append(url)
+                print(f"shard {i}/2 up at {url} (pid {p.pid})")
+            broker = urls  # a list of endpoints == a ShardedBroker
+        elif args.two_process:
             proc, broker = spawn_broker_server(ws)
+            procs.append(proc)
             print(f"broker server up at {broker} (pid {proc.pid})")
         try:
             # 1. runtime + study ---------------------------------------------
             rt = MerlinRuntime(broker=broker, workspace=ws,
                                hierarchy=HierarchyCfg(max_fanout=8, bundle=64))
+            if args.sharded:
+                sb = rt.broker  # the ShardedBroker built from the URL list
+                print("queue routing: " + ", ".join(
+                    f"{q} -> shard {sb.shard_for(q)}"
+                    for q in (rt.real_queue, rt.gen_queue)))
             bundler = Bundler(f"{ws}/results", files_per_leaf=4)
             executor = EnsembleExecutor(jag_simulate, bundler)
             rt.register("simulate", executor.step_fn())
@@ -100,7 +130,7 @@ def main(argv=None):
             print(f"surrogate R^2 on held-out half: {1 - ss_res / ss_tot:.3f} "
                   f"(n_train={n // 2})")
         finally:
-            if proc is not None:
+            for proc in procs:
                 proc.terminate()
                 proc.wait(timeout=10)
 

@@ -2,10 +2,11 @@
 # producer-consumer brokers (in-memory, shared-directory, and networked),
 # parameter x sample DAG layering, device-fused ensemble execution,
 # bundling/aggregation, and crawl-resubmit resilience.
-from repro.core.queue import (Broker, BrokerError, BrokerUnavailable,  # noqa
-                              InMemoryBroker, FileBroker, Task, new_task,
-                              PRIORITY_REAL, PRIORITY_GEN)
+from repro.core.queue import (Broker, BrokerError, BrokerFull,  # noqa
+                              BrokerUnavailable, InMemoryBroker, FileBroker,
+                              Task, new_task, PRIORITY_REAL, PRIORITY_GEN)
 from repro.core.netbroker import BrokerServer, NetBroker, make_broker  # noqa
+from repro.core.shardbroker import ShardedBroker  # noqa
 from repro.core.hierarchy import HierarchyCfg, root_task, expand  # noqa
 from repro.core.spec import StudySpec, Step  # noqa
 from repro.core.runtime import MerlinRuntime  # noqa

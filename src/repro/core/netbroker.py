@@ -32,7 +32,15 @@ Failure model (what makes reconnect safe):
 
 URL scheme (``make_broker``): ``mem://`` (fresh InMemoryBroker),
 ``file:///path`` (FileBroker on a shared directory), ``tcp://host:port``
-(NetBroker).  ``MerlinRuntime(broker="tcp://...")`` accepts these directly.
+(NetBroker), ``shard://h1:p1,h2:p2`` or a list of URLs (a
+:class:`~repro.core.shardbroker.ShardedBroker` federation).
+``MerlinRuntime(broker=...)`` accepts all of these directly.
+
+Server-side errors relay as structured replies carrying the exception
+class name, so typed conditions — notably
+:class:`~repro.core.queue.BrokerFull` backpressure — survive the wire.
+(Keep backends' ``put_timeout`` below the client's ``request_grace``,
+default 10 s, or a blocking put times the socket out first.)
 
 Deployment: ``python -m repro.launch.serve broker-serve`` runs a
 BrokerServer as a standalone process (see examples/quickstart.py
@@ -48,9 +56,15 @@ import threading
 import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.core.queue import (Broker, BrokerError, BrokerUnavailable,
-                              FileBroker, InMemoryBroker, Lease, Task,
-                              _normalize_queues)
+from repro.core.queue import (Broker, BrokerError, BrokerFull,
+                              BrokerUnavailable, FileBroker, InMemoryBroker,
+                              Lease, Task, _normalize_queues)
+
+# structured server errors carry the exception class name; the client maps
+# it back to the right BrokerError subclass so e.g. backpressure
+# (BrokerFull) is catchable as BrokerFull on the producer's side of the
+# wire, not as a generic failure
+_ERROR_TYPES = {"BrokerFull": BrokerFull}
 
 # one frame = one request or response; big enough for a 32-task lease batch
 # of fat payloads, small enough to reject garbage (e.g. an HTTP client)
@@ -111,10 +125,23 @@ class BrokerServer:
     """
 
     MAX_BLOCK_S = 10.0
+    # served puts must come back strictly BEFORE the clients' socket
+    # timeout (request_grace, 10 s) or the BrokerFull reply loses the race
+    # and the client re-sends the batch; half the grace leaves room for
+    # request decode + scheduling jitter
+    MAX_PUT_BLOCK_S = 5.0
 
     def __init__(self, backend: Broker, host: str = "127.0.0.1",
                  port: int = 0):
         self.backend = backend
+        # clamp the backend's backpressure window like MAX_BLOCK_S clamps
+        # gets: a put blocking past the clients' request_grace would make
+        # them time out mid-put, reconnect, and re-send the batch —
+        # duplicating every admitted task and stacking blocked handler
+        # threads — instead of receiving the typed BrokerFull
+        pt = getattr(backend, "_put_timeout", None)
+        if pt is not None and pt > self.MAX_PUT_BLOCK_S:
+            backend._put_timeout = self.MAX_PUT_BLOCK_S
         self.host = host
         self._requested_port = port
         self.port: Optional[int] = None
@@ -223,6 +250,7 @@ class BrokerServer:
                 except Exception as e:  # backend error -> structured reply
                     self.stats["errors"] += 1
                     resp = {"ok": False,
+                            "error_type": type(e).__name__,
                             "error": f"{type(e).__name__}: {e}"}
                 try:
                     _send_frame(conn, resp)
@@ -285,6 +313,11 @@ class BrokerServer:
         if op == "inflight_tasks":
             return {"tasks": [[dataclasses.asdict(t), age]
                               for t, age in b.inflight_tasks()]}
+        if op == "heartbeat":
+            queues = req.get("queues")
+            b.heartbeat(str(req["consumer_id"]),
+                        tuple(queues) if queues is not None else None)
+            return {}
         raise BrokerError(f"unknown op {op!r}")
 
 
@@ -405,7 +438,8 @@ class NetBroker:
                 delay = min(delay * 2, 1.0)
                 continue
             if not resp.get("ok"):
-                raise BrokerError(resp.get("error", "remote broker error"))
+                exc = _ERROR_TYPES.get(resp.get("error_type"), BrokerError)
+                raise exc(resp.get("error", "remote broker error"))
             return resp
 
     def ping(self) -> bool:
@@ -489,6 +523,14 @@ class NetBroker:
         self._call("set_visibility_timeout", queue=queue,
                    timeout=float(timeout))
 
+    def heartbeat(self, consumer_id: str,
+                  queues: Optional[Sequence[str]] = None) -> None:
+        """Register/refresh this consumer in the server backend's heartbeat
+        registry; surfaces in ``stats["consumers"]`` for every client."""
+        qsel = _normalize_queues(queues)
+        self._call("heartbeat", consumer_id=consumer_id,
+                   queues=None if qsel is None else list(qsel))
+
     def inflight_tasks(self) -> List[Tuple[Task, float]]:
         return [(Task(**d), float(age))
                 for d, age in self._call("inflight_tasks")["tasks"]]
@@ -504,16 +546,32 @@ class NetBroker:
 # factory
 # ---------------------------------------------------------------------------
 
-def make_broker(url: str, **kwargs) -> Broker:
-    """Build a broker from a URL.
+def make_broker(url, **kwargs) -> Broker:
+    """Build a broker from a URL (or a list of endpoint URLs).
 
-    * ``mem://``             fresh in-process InMemoryBroker
-    * ``file:///shared/dir`` FileBroker on a shared directory
-    * ``tcp://host:port``    NetBroker client to a BrokerServer
+    * ``mem://``               fresh in-process InMemoryBroker
+    * ``file:///shared/dir``   FileBroker on a shared directory
+    * ``tcp://host:port``      NetBroker client to a BrokerServer
+    * ``shard://h1:p1,h2:p2``  ShardedBroker federating N endpoints
+      (comma-separated; entries without a scheme default to ``tcp://``)
+    * ``["tcp://...", ...]``   a list/tuple of URLs == a ShardedBroker
 
     Extra kwargs go to the chosen constructor (e.g. ``visibility_timeout``
-    for local backends, ``reconnect_timeout`` for NetBroker).
+    for local backends, ``reconnect_timeout`` for NetBroker); for sharded
+    brokers, ``queue_shards=`` and ``poll_slice=`` are consumed by
+    ShardedBroker and the rest forwarded to every endpoint client.
     """
+    if isinstance(url, (list, tuple)):
+        from repro.core.shardbroker import ShardedBroker
+        return ShardedBroker(list(url), **kwargs)
+    if url.startswith("shard://"):
+        from repro.core.shardbroker import ShardedBroker
+        endpoints = [e if "://" in e else f"tcp://{e}"
+                     for e in url[len("shard://"):].split(",") if e]
+        if not endpoints:
+            raise ValueError("shard:// broker URL needs at least one "
+                             "comma-separated endpoint")
+        return ShardedBroker(endpoints, **kwargs)
     if url.startswith("tcp://"):
         return NetBroker(url, **kwargs)
     if url.startswith("mem://"):
@@ -523,5 +581,5 @@ def make_broker(url: str, **kwargs) -> Broker:
         if not path:
             raise ValueError("file:// broker URL needs a directory path")
         return FileBroker(path, **kwargs)
-    raise ValueError(f"unsupported broker URL {url!r} "
-                     "(expected mem://, file://<dir>, or tcp://host:port)")
+    raise ValueError(f"unsupported broker URL {url!r} (expected mem://, "
+                     "file://<dir>, tcp://host:port, or shard://h:p,h:p)")

@@ -37,6 +37,9 @@ implementations:
   :class:`repro.core.netbroker.BrokerServer` fronting either backend above:
   allocations on *different nodes* coordinate with no shared filesystem at
   all, the paper's actual RabbitMQ deployment model.
+* :class:`repro.core.shardbroker.ShardedBroker` — the federation layer:
+  the full protocol over N endpoints, each *queue* routed to one shard by
+  stable hash, for when ensemble throughput outgrows one broker process.
 
 Cross-cutting policies, identical in every backend:
 
@@ -48,6 +51,17 @@ Cross-cutting policies, identical in every backend:
   cannot starve the others; strict global priority stays the default.
   ``stats["starvation_avoided"]`` counts deliveries where fairness picked a
   different queue than strict priority would have.
+* **Backpressure** (``max_queue_depth=``, ``put_timeout=``): producers
+  against a full queue block until it drains, then get a typed
+  :class:`BrokerFull`; redelivery is exempt so recovery never wedges.
+  Workers throttle generation-task expansion on it instead of dying.
+* **Consumer heartbeats** (``heartbeat(consumer_id, queues)``,
+  ``heartbeat_ttl=``): ``stats["consumers"]`` is a live per-queue
+  consumer count instead of a connection-count guess — the basis for
+  "are there any workers on the sims queue?" operational checks.
+* **Queue-name validation**: enforced once, at :class:`Task` creation
+  (``validate_queue_name``), so a name FileBroker cannot store fails
+  identically and immediately on every backend.
 """
 from __future__ import annotations
 
@@ -74,6 +88,39 @@ class BrokerUnavailable(BrokerError, ConnectionError):
     window is exhausted; consumers (core/worker.py) treat it as transient
     and keep polling so a restarted broker server is picked back up."""
 
+
+class BrokerFull(BrokerError):
+    """Backpressure: a put could not complete within ``put_timeout``
+    because the target queue is at ``max_queue_depth``.
+
+    ``put``/``put_many`` block first and raise only at the deadline;
+    ``put_timeout`` bounds the TOTAL blocking time of one call (not one
+    stall), so a server-side put relayed by a BrokerServer can never park
+    a handler thread longer than ``put_timeout`` — keep it below the
+    clients' ``request_grace`` (10 s) and a blocked put always surfaces
+    as this typed error, never as a socket timeout.  In a ``put_many``
+    the tasks admitted before the raise ARE enqueued (delivery is
+    at-least-once, so retrying is safe — duplicates no-op on the
+    runtime's once-markers; retry in bounded chunks, as the worker's gen
+    expansion does, so re-sent prefixes stay small).  Producers should
+    throttle and retry, never treat this as fatal."""
+
+
+def validate_queue_name(queue: str) -> str:
+    """The ONE queue-name rule, enforced at Task creation for every backend.
+
+    ``__`` is the FileBroker claim-file field separator, ``/`` would escape
+    the queue directory, and a leading ``.`` collides with temp/hidden
+    files — but a name must fail identically on InMemoryBroker/NetBroker
+    too, or the same study spec runs on ``mem://`` and crashes mid-run the
+    first time it is pointed at ``file://`` (or poisons one shard of a
+    federation late in a run)."""
+    if not queue or "__" in queue or "/" in queue or queue.startswith("."):
+        raise ValueError(
+            f"invalid queue name {queue!r}: must be non-empty and contain "
+            "no '__' or '/', and not start with '.'")
+    return queue
+
 # priorities: lower = served first.  Real work drains before generation work.
 PRIORITY_REAL = 0
 PRIORITY_GEN = 1
@@ -89,6 +136,12 @@ class Task:
     queue: str = "default"
     retries: int = 0
     enqueued_at: float = 0.0
+
+    def __post_init__(self) -> None:
+        # every construction path — new_task, from_json, the wire layer's
+        # Task(**d) — funnels through here, so a bad queue name fails at
+        # task creation in EVERY backend, not at FileBroker's first put
+        validate_queue_name(self.queue)
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self))
@@ -144,14 +197,23 @@ class Broker(Protocol):
       ``task.retries`` incremented; an unacked lease does the same on its
       own once its queue's visibility timeout expires.
     * ``qsize``/``queue_names``/``inflight``/``idle`` introspect;
-      ``stats`` is a plain dict of monotonic counters (``enqueued``,
-      ``acked``, ``redelivered``, ``starvation_avoided``, ...).
+      ``stats`` is a dict of monotonic counters (``enqueued``, ``acked``,
+      ``redelivered``, ``starvation_avoided``, ...) plus ``consumers``:
+      a ``{queue: live-consumer-count}`` view built from heartbeats.
+    * ``put``/``put_many`` against a queue at ``max_queue_depth`` block up
+      to ``put_timeout`` then raise :class:`BrokerFull` (backpressure);
+      redelivery (nack / lease expiry) is exempt so recovery never wedges.
+    * ``heartbeat(consumer_id, queues)`` registers/refreshes a consumer's
+      subscription; entries older than the backend's ``heartbeat_ttl`` are
+      dropped, so ``stats["consumers"]`` reports *live* consumers per
+      queue instead of guessing from connection counts.  A ``None``
+      subscription (all queues) is reported under ``"*"``.
     * ``set_visibility_timeout(queue, t)`` overrides the lease clock for
       one named queue; ``inflight_tasks()`` snapshots leased tasks with
       their lease ages (straggler reissue, core/resilience.py).
     """
 
-    stats: Dict[str, int]
+    stats: Dict[str, Any]
 
     def put(self, task: Task) -> None: ...
     def put_many(self, tasks: List[Task]) -> None: ...
@@ -168,6 +230,8 @@ class Broker(Protocol):
     def idle(self) -> bool: ...
     def set_visibility_timeout(self, queue: str, timeout: float) -> None: ...
     def inflight_tasks(self) -> List[Tuple[Task, float]]: ...
+    def heartbeat(self, consumer_id: str,
+                  queues: Optional[Sequence[str]] = None) -> None: ...
 
 
 class _WeightedRR:
@@ -219,7 +283,10 @@ class InMemoryBroker:
     def __init__(self, visibility_timeout: float = 60.0,
                  queue_timeouts: Optional[Dict[str, float]] = None,
                  fairness: str = "priority",
-                 queue_weights: Optional[Dict[str, float]] = None):
+                 queue_weights: Optional[Dict[str, float]] = None,
+                 max_queue_depth: Optional[int] = None,
+                 put_timeout: float = 5.0,
+                 heartbeat_ttl: float = 15.0):
         self._lock = threading.Condition()
         self._heaps: Dict[str, List[Tuple[int, int, Task]]] = {}
         self._seq = itertools.count()
@@ -233,8 +300,47 @@ class InMemoryBroker:
         self._vt_queue: Dict[str, float] = dict(queue_timeouts or {})
         self._fairness = _check_fairness(fairness)
         self._rr = _WeightedRR(queue_weights)
-        self.stats = {"enqueued": 0, "acked": 0, "redelivered": 0,
-                      "starvation_avoided": 0}
+        # backpressure: producers block while a queue holds max_queue_depth
+        # pending tasks, and raise BrokerFull after put_timeout seconds
+        # without forward progress.  None = unbounded (the default).
+        self._max_depth = None if max_queue_depth is None \
+            else max(1, int(max_queue_depth))
+        self._put_timeout = put_timeout
+        # consumer heartbeats: id -> (subscribed queues or None, last-seen)
+        self._hb_ttl = heartbeat_ttl
+        self._consumers: Dict[str, Tuple[Optional[Tuple[str, ...]], float]] = {}
+        self._stats = {"enqueued": 0, "acked": 0, "redelivered": 0,
+                       "starvation_avoided": 0}
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            s = dict(self._stats)
+            s["consumers"] = self._consumers_view_locked()
+        return s
+
+    # -- consumer heartbeats -------------------------------------------------
+    def heartbeat(self, consumer_id: str,
+                  queues: Optional[Sequence[str]] = None) -> None:
+        """Register/refresh a consumer; entries expire after heartbeat_ttl."""
+        qsel = _normalize_queues(queues)
+        now = time.monotonic()
+        with self._lock:
+            self._consumers[consumer_id] = (qsel, now)
+            dead = [c for c, (_, at) in self._consumers.items()
+                    if now - at > 4 * self._hb_ttl]
+            for c in dead:
+                del self._consumers[c]
+
+    def _consumers_view_locked(self) -> Dict[str, int]:
+        now = time.monotonic()
+        view: Dict[str, int] = {}
+        for qsel, at in self._consumers.values():
+            if now - at > self._hb_ttl:
+                continue
+            for q in (qsel if qsel is not None else ("*",)):
+                view[q] = view.get(q, 0) + 1
+        return view
 
     def set_visibility_timeout(self, queue: str, timeout: float) -> None:
         """Override the lease clock for one named queue (including leases
@@ -254,21 +360,54 @@ class InMemoryBroker:
         heap = self._heaps.setdefault(task.queue, [])
         heapq.heappush(heap, (task.priority, next(self._seq), task))
 
+    def _wait_capacity_locked(self, queue: str, deadline: float) -> None:
+        """Block while ``queue`` is at max_queue_depth; BrokerFull at the
+        deadline.  Consumers claiming tasks notify the condition, so a
+        blocked producer wakes as soon as the queue drains."""
+        while len(self._heaps.get(queue, ())) >= self._max_depth:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise BrokerFull(
+                    f"queue {queue!r} held {self._max_depth} pending tasks "
+                    f"for {self._put_timeout}s (max_queue_depth)")
+            self._lock.wait(remaining)
+
     def put(self, task: Task) -> None:
-        task.enqueued_at = time.monotonic()
         with self._lock:
+            if self._max_depth is not None:
+                self._wait_capacity_locked(
+                    task.queue, time.monotonic() + self._put_timeout)
+            task.enqueued_at = time.monotonic()
             self._push_locked(task)
-            self.stats["enqueued"] += 1
+            self._stats["enqueued"] += 1
             self._lock.notify_all()
 
     def put_many(self, tasks: List[Task]) -> None:
-        now = time.monotonic()
+        if self._max_depth is None:  # unbounded: one lock, one wakeup
+            now = time.monotonic()
+            with self._lock:
+                for t in tasks:
+                    t.enqueued_at = now
+                    self._push_locked(t)
+                self._stats["enqueued"] += len(tasks)
+                self._lock.notify_all()
+            return
         with self._lock:
+            # ONE deadline for the whole call: put_timeout bounds total
+            # blocking, so a relayed put_many can never park a server
+            # handler thread past the clients' request_grace (a huge batch
+            # trickling into a small bounded queue fails fast instead —
+            # callers retry in chunks, e.g. the worker's gen throttle)
+            deadline = time.monotonic() + self._put_timeout
             for t in tasks:
-                t.enqueued_at = now
+                self._wait_capacity_locked(t.queue, deadline)
+                t.enqueued_at = time.monotonic()
                 self._push_locked(t)
-            self.stats["enqueued"] += len(tasks)
-            self._lock.notify_all()
+                self._stats["enqueued"] += 1
+                # wake consumers per task (not once at the end): with the
+                # producer parked waiting for capacity mid-batch, consumers
+                # must be draining concurrently or nobody ever wakes anybody
+                self._lock.notify_all()
 
     # -- consumer side ------------------------------------------------------
     def _pop_best_locked(self, queues: Optional[Tuple[str, ...]]) -> Optional[Task]:
@@ -289,7 +428,7 @@ class InMemoryBroker:
         if self._fairness == "weighted" and len(nonempty) > 1:
             pick = self._rr.pick(nonempty)
             if pick != best_q:
-                self.stats["starvation_avoided"] += 1
+                self._stats["starvation_avoided"] += 1
             best_q = pick
         return heapq.heappop(self._heaps[best_q])[2]
 
@@ -341,6 +480,9 @@ class InMemoryBroker:
                         break
                     out.append(self._lease_locked(task))
                 if out:
+                    if self._max_depth is not None:
+                        # claims free queue capacity: wake blocked producers
+                        self._lock.notify_all()
                     return out
                 if not self._wait_locked(deadline):
                     return out
@@ -349,23 +491,26 @@ class InMemoryBroker:
         with self._lock:
             if tag in self._leased:
                 del self._leased[tag]
-                self.stats["acked"] += 1
+                self._stats["acked"] += 1
 
     def ack_many(self, tags: Iterable[str]) -> None:
         with self._lock:
             for tag in tags:
                 if tag in self._leased:
                     del self._leased[tag]
-                    self.stats["acked"] += 1
+                    self._stats["acked"] += 1
 
     def nack(self, tag: str) -> None:
-        """Return a leased task to its queue immediately (worker failure)."""
+        """Return a leased task to its queue immediately (worker failure).
+
+        Redelivery is exempt from the max_queue_depth bound: blocking a
+        nack/expiry sweep on a full queue would wedge recovery."""
         with self._lock:
             if tag in self._leased:
                 task, _ = self._leased.pop(tag)
                 task.retries += 1
                 self._push_locked(task)
-                self.stats["redelivered"] += 1
+                self._stats["redelivered"] += 1
                 self._lock.notify_all()
 
     def _requeue_expired_locked(self) -> None:
@@ -376,7 +521,7 @@ class InMemoryBroker:
             task, _ = self._leased.pop(tag)
             task.retries += 1
             self._push_locked(task)
-            self.stats["redelivered"] += 1
+            self._stats["redelivered"] += 1
         if expired:
             self._lock.notify_all()
 
@@ -440,12 +585,27 @@ class FileBroker:
                  rescan_interval: float = 0.25,
                  queue_timeouts: Optional[Dict[str, float]] = None,
                  fairness: str = "priority",
-                 queue_weights: Optional[Dict[str, float]] = None):
+                 queue_weights: Optional[Dict[str, float]] = None,
+                 max_queue_depth: Optional[int] = None,
+                 put_timeout: float = 5.0,
+                 heartbeat_ttl: float = 15.0):
         self.root = root
         self.qroot = os.path.join(root, "queues")
         self.cdir = os.path.join(root, "claimed")
+        # consumer heartbeats are queue state like the queue itself: one
+        # file per consumer id, mtime = last seen, visible to every
+        # instance sharing this directory
+        self.hbdir = os.path.join(root, "consumers")
         os.makedirs(self.qroot, exist_ok=True)
         os.makedirs(self.cdir, exist_ok=True)
+        self._max_depth = None if max_queue_depth is None \
+            else max(1, int(max_queue_depth))
+        self._put_timeout = put_timeout
+        # serializes THIS instance's bounded puts so its own threads can't
+        # race the check-then-write and overshoot the depth bound; across
+        # processes the bound stays best-effort (see _wait_capacity)
+        self._plock = threading.Lock()
+        self._hb_ttl = heartbeat_ttl
         self._vt = visibility_timeout
         self._seq = itertools.count(int(time.time() * 1e3) % 10 ** 9)
         self._rescan_interval = rescan_interval
@@ -475,10 +635,59 @@ class FileBroker:
         # consumer loop uses this signal to force an immediate re-list
         # instead of sleeping through the rescan throttle
         self._saw_stale = False
-        self.stats = {"enqueued": 0, "acked": 0, "redelivered": 0,
-                      "stale_claims": 0, "starvation_avoided": 0}
+        self._stats = {"enqueued": 0, "acked": 0, "redelivered": 0,
+                       "stale_claims": 0, "starvation_avoided": 0}
         if queue_timeouts:  # constructor overrides are shared state too
             self._save_vtconf()
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        with self._ilock:
+            s = dict(self._stats)
+        s["consumers"] = self._consumers_view()
+        return s
+
+    # -- consumer heartbeats -------------------------------------------------
+    def heartbeat(self, consumer_id: str,
+                  queues: Optional[Sequence[str]] = None) -> None:
+        """Write/refresh this consumer's heartbeat file (atomic rename)."""
+        qsel = _normalize_queues(queues)
+        os.makedirs(self.hbdir, exist_ok=True)
+        safe = "hb-" + "".join(c if c.isalnum() or c in "-_.:" else "_"
+                               for c in consumer_id)
+        tmp = os.path.join(self.hbdir, f"{self._TMP_PREFIX}{uuid.uuid4().hex}")
+        try:
+            with open(tmp, "w") as f:
+                json.dump({"id": consumer_id,
+                           "queues": None if qsel is None else list(qsel)}, f)
+            os.rename(tmp, os.path.join(self.hbdir, safe + ".json"))
+        except OSError:
+            pass  # heartbeat is advisory: never fail the worker over it
+
+    def _consumers_view(self) -> Dict[str, int]:
+        now = time.time()
+        view: Dict[str, int] = {}
+        try:
+            names = os.listdir(self.hbdir)
+        except OSError:
+            return view
+        for n in names:
+            if n.startswith("."):
+                continue
+            path = os.path.join(self.hbdir, n)
+            try:
+                age = now - os.path.getmtime(path)
+                if age > self._hb_ttl:
+                    if age > 4 * self._hb_ttl:
+                        os.unlink(path)  # reap long-dead consumers
+                    continue
+                with open(path) as f:
+                    conf = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue
+            for q in (conf.get("queues") or ("*",)):
+                view[q] = view.get(q, 0) + 1
+        return view
 
     # -- per-queue visibility timeouts ---------------------------------------
     def set_visibility_timeout(self, queue: str, timeout: float) -> None:
@@ -545,8 +754,7 @@ class FileBroker:
         return os.path.join(self.qroot, queue)
 
     def _ensure_queue(self, queue: str) -> str:
-        if "__" in queue or "/" in queue or queue.startswith("."):
-            raise ValueError(f"invalid queue name {queue!r}")
+        validate_queue_name(queue)  # backstop; Task construction validated
         qdir = self._qdir(queue)
         with self._ilock:
             if queue not in self._index:
@@ -555,15 +763,43 @@ class FileBroker:
         return qdir
 
     # -- producer side -------------------------------------------------------
-    def put(self, task: Task) -> None:
-        task.enqueued_at = time.time()
+    @staticmethod
+    def _check_priority(task: Task) -> None:
         if not 0 <= task.priority <= 999:
             # the filename encodes priority as %03d so lexicographic order
             # == delivery order; out-of-range values would silently
             # mis-sort on disk while ordering fine in-memory
             raise ValueError(f"FileBroker priority must be in [0, 999], "
                              f"got {task.priority}")
-        qdir = self._ensure_queue(task.queue)
+
+    def _pending_count(self, queue: str) -> int:
+        try:
+            return sum(1 for n in os.listdir(self._qdir(queue))
+                       if not n.startswith("."))
+        except OSError:
+            return 0
+
+    def _wait_capacity(self, queue: str, deadline: float) -> int:
+        """Return available room (>= 1) in ``queue``; BrokerFull when it
+        stays at max_queue_depth until the deadline.  Counts the directory
+        (not the cached index) so other processes' puts count against the
+        bound — but the check-then-write is unlocked across processes, so
+        concurrent producers in different processes can briefly overshoot
+        by their batch sizes (best-effort, like every cross-process
+        property of this directory-based broker).  Within one instance,
+        ``_plock`` serializes producers and the bound is exact."""
+        while True:
+            room = self._max_depth - self._pending_count(queue)
+            if room > 0:
+                return room
+            if time.monotonic() >= deadline:
+                raise BrokerFull(
+                    f"queue {queue!r} held {self._max_depth} pending tasks "
+                    f"for {self._put_timeout}s (max_queue_depth)")
+            time.sleep(0.02)
+
+    def _write_pending(self, qdir: str, task: Task) -> str:
+        """Write one task file (temp + atomic rename); returns its name."""
         name = f"{task.priority:03d}-{next(self._seq):012d}-{task.id}.json"
         # temp lives INSIDE the queue dir (same fs, skipped by the index and
         # reaped by the expiry sweep if a crashed producer leaks it)
@@ -571,13 +807,70 @@ class FileBroker:
         with open(tmp, "w") as f:
             f.write(task.to_json())
         os.rename(tmp, os.path.join(qdir, name))
+        return name
+
+    def put(self, task: Task) -> None:
+        self._check_priority(task)
+        qdir = self._ensure_queue(task.queue)
+        if self._max_depth is not None:
+            # deadline BEFORE the producer lock: time queued behind another
+            # blocked producer counts against put_timeout, so total
+            # blocking stays bounded per call (the documented contract)
+            deadline = time.monotonic() + self._put_timeout
+            with self._plock:
+                self._wait_capacity(task.queue, deadline)
+                task.enqueued_at = time.time()
+                name = self._write_pending(qdir, task)
+        else:
+            task.enqueued_at = time.time()
+            name = self._write_pending(qdir, task)
         with self._ilock:
             heapq.heappush(self._index[task.queue], name)
-            self.stats["enqueued"] += 1
+            self._stats["enqueued"] += 1
 
     def put_many(self, tasks: List[Task]) -> None:
+        """Batched enqueue: per *queue*, one `_ensure_queue` check, all
+        task files written (temp + atomic rename each), then ONE locked
+        index merge + stats bump — not a per-task put() loop.  Behind a
+        BrokerServer a 1000-task batch previously took 1000 lock
+        acquisitions and heappushes while consumers fought for the same
+        lock; now it takes one per queue (per capacity chunk)."""
+        now = time.time()
+        by_q: Dict[str, List[Task]] = {}
         for t in tasks:
-            self.put(t)
+            self._check_priority(t)
+            t.enqueued_at = now
+            by_q.setdefault(t.queue, []).append(t)
+        for queue, ts in by_q.items():
+            qdir = self._ensure_queue(queue)
+            if self._max_depth is not None:
+                # ONE deadline for the whole queue batch, computed BEFORE
+                # the producer lock (put_timeout bounds total blocking
+                # including time queued behind other producers — a
+                # server-relayed put_many must never outlast the clients'
+                # request_grace); producers of this instance serialized so
+                # they can't jointly overshoot the bound
+                deadline = time.monotonic() + self._put_timeout
+                with self._plock:
+                    i = 0
+                    while i < len(ts):
+                        # admit in capacity-sized chunks; _wait_capacity
+                        # blocks until room exists, BrokerFull at deadline
+                        room = min(len(ts) - i,
+                                   self._wait_capacity(queue, deadline))
+                        self._index_chunk(qdir, queue, ts[i:i + room])
+                        i += room
+            else:
+                self._index_chunk(qdir, queue, ts)
+
+    def _index_chunk(self, qdir: str, queue: str, chunk: List[Task]) -> None:
+        """Write a run of task files, then ONE locked index merge."""
+        names = [self._write_pending(qdir, t) for t in chunk]
+        with self._ilock:
+            index = self._index[queue]
+            for name in names:
+                heapq.heappush(index, name)
+            self._stats["enqueued"] += len(names)
 
     # -- index maintenance ---------------------------------------------------
     def _rescan(self, queues: Optional[Tuple[str, ...]],
@@ -641,7 +934,7 @@ class FileBroker:
             if self._fairness == "weighted" and len(nonempty) > 1:
                 pick = self._rr.pick(nonempty)
                 if pick != best_q:
-                    self.stats["starvation_avoided"] += 1
+                    self._stats["starvation_avoided"] += 1
                 best_q = pick
             return best_q, heapq.heappop(self._index[best_q])
 
@@ -671,13 +964,15 @@ class FileBroker:
                 # disk listing instead of concluding the queue is empty.
                 with self._ilock:
                     self._saw_stale = True
-                    self.stats["stale_claims"] += 1
+                    self._stats["stale_claims"] += 1
                 continue
             try:
                 with open(dst) as f:
                     task = Task.from_json(f.read())
-            except (OSError, json.JSONDecodeError, TypeError):
-                self._dead_letter(dst)  # poison file: quarantine, move on
+            except (OSError, json.JSONDecodeError, TypeError, ValueError):
+                # unparseable OR carrying an invalid queue name (ValueError
+                # from Task validation): quarantine, move on
+                self._dead_letter(dst)
                 continue
             return Lease(task, dst)
 
@@ -736,7 +1031,7 @@ class FileBroker:
         except OSError:
             return
         with self._ilock:
-            self.stats["acked"] += 1
+            self._stats["acked"] += 1
 
     def ack_many(self, tags: Iterable[str]) -> None:
         for tag in tags:
@@ -758,7 +1053,7 @@ class FileBroker:
             return  # claim already gone: a concurrent sweep/ack won
         try:
             task = Task.from_json(raw)
-        except (json.JSONDecodeError, TypeError):
+        except (json.JSONDecodeError, TypeError, ValueError):
             # unparseable poison: redelivering would ping-pong it between
             # pending and claimed forever (retries can never increment)
             self._dead_letter(tag)
@@ -777,7 +1072,7 @@ class FileBroker:
             pass
         with self._ilock:
             heapq.heappush(self._index.setdefault(queue, []), name)
-            self.stats["redelivered"] += 1
+            self._stats["redelivered"] += 1
 
     def _requeue_expired(self) -> None:
         """Expiry sweep: redeliver timed-out leases, reap leaked temp files."""

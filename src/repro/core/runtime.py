@@ -189,8 +189,10 @@ class MerlinRuntime:
         # broker may be a Broker instance or a URL: "tcp://host:port"
         # connects to a remote BrokerServer (no shared filesystem for the
         # queue — the paper's cross-allocation RabbitMQ model), "file://dir"
-        # a shared-directory FileBroker, "mem://" a private InMemoryBroker.
-        if isinstance(broker, str):
+        # a shared-directory FileBroker, "mem://" a private InMemoryBroker,
+        # "shard://h1:p1,h2:p2" (or a list of tcp:// endpoints) a
+        # ShardedBroker federating several BrokerServers by queue name.
+        if isinstance(broker, (str, list, tuple)):
             from repro.core.netbroker import make_broker
             broker = make_broker(broker)
         self.broker = broker if broker is not None else InMemoryBroker()

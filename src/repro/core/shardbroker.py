@@ -1,0 +1,276 @@
+"""ShardedBroker: queue-name federation over N broker endpoints.
+
+The paper's deployment (Sec. 2.2) funnels every allocation's producers and
+surge consumers through ONE RabbitMQ host — exactly the single-server
+bottleneck a :class:`~repro.core.netbroker.BrokerServer` becomes once
+ensemble throughput outgrows one process.  :class:`ShardedBroker` is the
+federation layer: it implements the full
+:class:`~repro.core.queue.Broker` protocol over N independent endpoints
+by routing **whole queues** to shards.
+
+Routing model (why by queue, not by task):
+
+* Every queue name maps to exactly one shard — ``crc32(queue) % n_shards``
+  by default (stable across processes and Python runs, unlike ``hash()``),
+  overridable per queue with an explicit ``queue_shards`` map for
+  operators who want, say, the simulation queue pinned to the big box.
+* Because a queue never spans shards, *all* per-queue semantics the rest
+  of the system relies on survive federation unchanged: strict
+  ``(priority, seq)`` order within a queue, visibility timeouts, weighted
+  fairness inside a shard, lease/ack idempotency.  Global cross-queue
+  priority becomes best-effort across shards (as with any federation) —
+  exact within each shard.
+* ``get_many(queues=...)`` fans out only to the shards that own those
+  queues; a subscription that lives entirely on one shard degenerates to
+  a single pass-through call (no fan-out tax for pinned workers).
+
+Lease tags are wrapped as ``"<shard-idx>:<backend-tag>"`` so ``ack``,
+``ack_many`` (grouped per shard: one call each), and ``nack`` route back
+to the owning shard without keeping client-side lease state — a
+ShardedBroker is as stateless as a NetBroker, so any instance (any
+process) can ack any other instance's tags.
+
+Introspection merges the shard views: ``qsize``/``inflight`` sum,
+``queue_names`` unions, ``stats`` sums the counters, merges the
+per-queue ``consumers`` heartbeat views, and keeps the per-shard
+breakdown under ``"shards"``.  ``BrokerFull`` backpressure raised by one
+shard propagates to the producer exactly like a local backend's.
+
+Construction: pass broker instances, or URLs (resolved through
+:func:`~repro.core.netbroker.make_broker`), or use the ``shard://`` URL
+scheme — ``shard://host1:p1,host2:p2`` — or hand ``make_broker`` /
+``MerlinRuntime(broker=...)`` a list of ``tcp://`` endpoints directly.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+from typing import (Any, Dict, Iterable, List, Optional, Sequence, Tuple,
+                    Union)
+
+from repro.core.queue import (Broker, Lease, Task, _normalize_queues,
+                              validate_queue_name)
+
+
+def shard_index(queue: str, n_shards: int) -> int:
+    """The stable default queue->shard hash (crc32, not Python hash())."""
+    return zlib.crc32(queue.encode("utf-8")) % n_shards
+
+
+class ShardedBroker:
+    """Implements the Broker protocol over N shard endpoints.
+
+    ``shards``: Broker instances or broker URLs (``tcp://...`` etc.).
+    ``queue_shards``: explicit ``{queue: shard_index}`` overrides; every
+    other queue routes by stable hash.
+    ``poll_slice``: when a blocking ``get_many`` spans multiple shards,
+    the wait rotates across them in slices of this many seconds (one
+    shard parks server-side per slice; the others are polled
+    non-blocking each rotation).
+    """
+
+    def __init__(self, shards: Sequence[Union[Broker, str]],
+                 queue_shards: Optional[Dict[str, int]] = None,
+                 poll_slice: float = 0.05, **endpoint_kwargs):
+        if not shards:
+            raise ValueError("ShardedBroker needs at least one shard")
+        resolved: List[Broker] = []
+        for s in shards:
+            if isinstance(s, str):
+                from repro.core.netbroker import make_broker
+                s = make_broker(s, **endpoint_kwargs)
+            resolved.append(s)
+        self.shards: List[Broker] = resolved
+        self.queue_shards = dict(queue_shards or {})
+        for q, i in self.queue_shards.items():
+            validate_queue_name(q)
+            if not 0 <= int(i) < len(self.shards):
+                raise ValueError(f"queue_shards[{q!r}] = {i} out of range "
+                                 f"for {len(self.shards)} shards")
+        self.poll_slice = poll_slice
+        self._rr_offset = 0  # rotates blocking waits across shards
+
+    # -- routing -------------------------------------------------------------
+    def shard_for(self, queue: str) -> int:
+        """The shard index owning ``queue`` (override map, then hash)."""
+        idx = self.queue_shards.get(queue)
+        if idx is None:
+            idx = shard_index(queue, len(self.shards))
+        return int(idx)
+
+    def _shard_selectors(self, queues: Optional[Tuple[str, ...]]
+                         ) -> Dict[int, Optional[List[str]]]:
+        """shard index -> the queue subset it owns (None = all queues)."""
+        if queues is None:
+            return {i: None for i in range(len(self.shards))}
+        sel: Dict[int, List[str]] = {}
+        for q in queues:
+            sel.setdefault(self.shard_for(q), []).append(q)
+        return sel
+
+    @staticmethod
+    def _wrap(idx: int, lease: Lease) -> Lease:
+        return Lease(lease.task, f"{idx}:{lease.tag}")
+
+    def _unwrap(self, tag: str) -> Tuple[int, str]:
+        idx_s, _, inner = tag.partition(":")
+        try:
+            idx = int(idx_s)
+            if not 0 <= idx < len(self.shards):
+                raise ValueError(tag)
+        except ValueError:
+            raise ValueError(f"not a sharded lease tag: {tag!r}") from None
+        return idx, inner
+
+    # -- producer side -------------------------------------------------------
+    def put(self, task: Task) -> None:
+        self.shards[self.shard_for(task.queue)].put(task)
+
+    def put_many(self, tasks: List[Task]) -> None:
+        by_shard: Dict[int, List[Task]] = {}
+        for t in tasks:
+            by_shard.setdefault(self.shard_for(t.queue), []).append(t)
+        # sequential, one batched call per shard; a BrokerFull from one
+        # shard propagates after earlier shards were fed — at-least-once
+        # delivery makes retrying the whole batch safe
+        for idx, ts in by_shard.items():
+            self.shards[idx].put_many(ts)
+
+    # -- consumer side -------------------------------------------------------
+    def get(self, timeout: Optional[float] = 0.0,
+            queues: Optional[Sequence[str]] = None) -> Optional[Lease]:
+        leases = self.get_many(1, timeout=timeout, queues=queues)
+        return leases[0] if leases else None
+
+    def get_many(self, n: int, timeout: Optional[float] = 0.0,
+                 queues: Optional[Sequence[str]] = None) -> List[Lease]:
+        """Claim up to ``n`` leases from the shards owning the subscription.
+
+        Single-shard subscriptions pass straight through (the blocking
+        wait parks on that shard, server-side for NetBroker shards).
+        Multi-shard subscriptions poll every owning shard non-blocking,
+        then rotate a ``poll_slice`` blocking wait across them until the
+        deadline — so a task appearing on ANY owning shard is claimed
+        within one rotation.
+        """
+        qsel = _normalize_queues(queues)
+        sel = self._shard_selectors(qsel)
+        if len(sel) == 1:
+            idx, qs = next(iter(sel.items()))
+            leases = self.shards[idx].get_many(n, timeout=timeout, queues=qs)
+            return [self._wrap(idx, l) for l in leases]
+        deadline = None if timeout is None else time.monotonic() + timeout
+        order = sorted(sel)
+        out: List[Lease] = []
+        while True:
+            # fast pass: drain whatever is claimable right now, rotating
+            # the start shard so one busy shard cannot monopolize batches
+            self._rr_offset = (self._rr_offset + 1) % len(order)
+            for k in range(len(order)):
+                idx = order[(self._rr_offset + k) % len(order)]
+                got = self.shards[idx].get_many(n - len(out), timeout=0.0,
+                                                queues=sel[idx])
+                out.extend(self._wrap(idx, l) for l in got)
+                if len(out) >= n:
+                    return out
+            if out:
+                return out
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return out
+                slice_t = min(self.poll_slice, remaining)
+            else:
+                slice_t = self.poll_slice
+            # blocking slice on one shard; next rotation polls the rest
+            idx = order[self._rr_offset % len(order)]
+            got = self.shards[idx].get_many(n, timeout=slice_t,
+                                            queues=sel[idx])
+            out.extend(self._wrap(idx, l) for l in got)
+            if out:
+                return out
+
+    def ack(self, tag: str) -> None:
+        idx, inner = self._unwrap(tag)
+        self.shards[idx].ack(inner)
+
+    def ack_many(self, tags: Iterable[str]) -> None:
+        by_shard: Dict[int, List[str]] = {}
+        for tag in tags:
+            idx, inner = self._unwrap(tag)
+            by_shard.setdefault(idx, []).append(inner)
+        for idx, inner_tags in by_shard.items():
+            self.shards[idx].ack_many(inner_tags)
+
+    def nack(self, tag: str) -> None:
+        idx, inner = self._unwrap(tag)
+        self.shards[idx].nack(inner)
+
+    # -- introspection (merged views) ----------------------------------------
+    def qsize(self, queues: Optional[Sequence[str]] = None) -> int:
+        qsel = _normalize_queues(queues)
+        return sum(self.shards[idx].qsize(qs)
+                   for idx, qs in self._shard_selectors(qsel).items())
+
+    def queue_names(self) -> List[str]:
+        names = set()
+        for s in self.shards:
+            names.update(s.queue_names())
+        return sorted(names)
+
+    def inflight(self) -> int:
+        return sum(s.inflight() for s in self.shards)
+
+    def inflight_tasks(self) -> List[Tuple[Task, float]]:
+        out: List[Tuple[Task, float]] = []
+        for s in self.shards:
+            out.extend(s.inflight_tasks())
+        return out
+
+    def idle(self) -> bool:
+        return all(s.idle() for s in self.shards)
+
+    def set_visibility_timeout(self, queue: str, timeout: float) -> None:
+        self.shards[self.shard_for(queue)].set_visibility_timeout(
+            queue, timeout)
+
+    def heartbeat(self, consumer_id: str,
+                  queues: Optional[Sequence[str]] = None) -> None:
+        """Register with every shard the subscription touches (all shards
+        for a None subscription), so each shard's ``stats["consumers"]``
+        reflects the consumers that can actually drain it."""
+        qsel = _normalize_queues(queues)
+        for idx, qs in self._shard_selectors(qsel).items():
+            self.shards[idx].heartbeat(consumer_id, qs)
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        """Counters summed across shards; per-queue ``consumers`` views
+        merged (max per queue — the same consumer heartbeats every shard
+        it subscribes on); raw per-shard dicts under ``"shards"``."""
+        merged: Dict[str, Any] = {}
+        consumers: Dict[str, int] = {}
+        per_shard: List[Dict[str, Any]] = []
+        for s in self.shards:
+            st = dict(s.stats)
+            per_shard.append(st)
+            for q, c in (st.get("consumers") or {}).items():
+                consumers[q] = max(consumers.get(q, 0), int(c))
+            for k, v in st.items():
+                if k != "consumers" and isinstance(v, (int, float)):
+                    merged[k] = merged.get(k, 0) + v
+        merged["consumers"] = consumers
+        merged["shards"] = per_shard
+        return merged
+
+    def close(self) -> None:
+        for s in self.shards:
+            close = getattr(s, "close", None)
+            if close is not None:
+                close()
+
+    def __enter__(self) -> "ShardedBroker":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -26,17 +26,33 @@ the client's reconnect window.  Workers treat it as transient — back off,
 keep polling, and effectively resubscribe once the server returns
 (subscriptions are stateless: the queue list rides on every ``get_many``).
 Leases stranded by the outage expire server-side and redeliver; completed
-work re-acked after a reconnect is a no-op (acks are idempotent).
+work re-acked after a reconnect is a no-op (acks are idempotent).  Acks
+that hit the outage are retried after the reconnect instead of dropped
+(``stats["acks_retried"]``) — far cheaper than letting a finished batch's
+leases all expire and re-execute.
+
+Backpressure: a bounded broker queue (``max_queue_depth``) surfaces as
+:class:`~repro.core.queue.BrokerFull` during generation-task expansion.
+Workers throttle — hold the gen lease, back off ``throttle_backoff``,
+retry (``stats["throttled"]``) — and only after ``max_throttle_retries``
+give the task back via the normal nack path.  Expansion never dies over a
+full queue.
+
+Heartbeats: each worker pings ``broker.heartbeat(consumer_id, queues)``
+every ``heartbeat_interval`` seconds, so ``broker.stats["consumers"]``
+reports live consumers per queue across all processes.
 """
 from __future__ import annotations
 
+import os
 import random
+import socket
 import threading
 import time
 from typing import List, Optional, Sequence
 
 from repro.core import hierarchy as H
-from repro.core.queue import BrokerError, Lease, Task
+from repro.core.queue import BrokerError, BrokerFull, Lease, Task
 from repro.core.resilience import RetryPolicy
 from repro.core.runtime import MerlinRuntime
 
@@ -50,7 +66,10 @@ class Worker(threading.Thread):
                  stop_event: threading.Event, failure_rate: float = 0.0,
                  seed: int = 0, poll_timeout: float = 0.05,
                  queues: Optional[Sequence[str]] = None, batch: int = 1,
-                 retry_policy: Optional[RetryPolicy] = None):
+                 retry_policy: Optional[RetryPolicy] = None,
+                 heartbeat_interval: float = 2.0,
+                 throttle_backoff: float = 0.2,
+                 max_throttle_retries: int = 50):
         super().__init__(daemon=True, name=f"merlin-worker-{worker_id}")
         self.runtime = runtime
         self.worker_id = worker_id
@@ -61,12 +80,67 @@ class Worker(threading.Thread):
         self.queues = queues
         self.batch = max(1, batch)
         self.retry_policy = retry_policy or RetryPolicy()
-        self.stats = {"gen": 0, "real": 0, "failed": 0, "broker_retries": 0}
+        self.heartbeat_interval = heartbeat_interval
+        self.throttle_backoff = throttle_backoff
+        self.max_throttle_retries = max_throttle_retries
+        # host-qualified: workers in different allocations (nodes) sharing
+        # one broker must not collide in the heartbeat registry, or
+        # stats["consumers"] undercounts the fleet
+        self.consumer_id = f"{socket.gethostname()}:{os.getpid()}:{self.name}"
+        self.stats = {"gen": 0, "real": 0, "failed": 0, "broker_retries": 0,
+                      "acks_retried": 0, "throttled": 0}
         self.first_real_at: Optional[float] = None
+        self._last_hb = 0.0
+        # acks that hit a broker blip: retried on later iterations instead
+        # of being dropped (satellite: a transient error after a successful
+        # batch must not force N lease-expiry re-executions)
+        self._pending_acks: List[str] = []
+
+    _MAX_PENDING_ACKS = 10_000  # beyond this the leases have long expired
+    _PUT_CHUNK = 64  # children per put_many during gen expansion
+
+    def _heartbeat(self, broker) -> None:
+        """Advisory liveness ping: the broker's stats["consumers"] view."""
+        now = time.monotonic()
+        if now - self._last_hb < self.heartbeat_interval:
+            return
+        self._last_hb = now
+        hb = getattr(broker, "heartbeat", None)
+        if hb is None:
+            return  # non-protocol broker (a test stub): skip, don't die
+        try:
+            hb(self.consumer_id, self.queues)
+        except BrokerError:
+            pass  # broker blip: the next lease attempt handles backoff
+
+    def _flush_acks(self, broker, fresh: List[str]) -> None:
+        """Ack ``fresh`` plus anything a previous iteration failed to ack.
+
+        Acks are idempotent and leases are broker-held, so retrying stale
+        tags after a reconnect is safe — and FAR cheaper than letting every
+        lease of a completed batch expire and re-execute (idempotently but
+        wastefully) on another worker."""
+        retried = len(self._pending_acks)
+        self._pending_acks.extend(fresh)
+        if not self._pending_acks:
+            return
+        try:
+            broker.ack_many(self._pending_acks)
+        except BrokerError:
+            self.stats["broker_retries"] += 1
+            # keep them for the next iteration; cap the backlog — anything
+            # old enough to overflow it has already expired server-side
+            del self._pending_acks[:-self._MAX_PENDING_ACKS]
+        else:
+            self.stats["acks_retried"] += retried
+            self._pending_acks.clear()
 
     def run(self) -> None:
         broker = self.runtime.broker
         while not self.stop_event.is_set():
+            self._heartbeat(broker)
+            if self._pending_acks:
+                self._flush_acks(broker, [])
             try:
                 leases = broker.get_many(self.batch,
                                          timeout=self.poll_timeout,
@@ -115,12 +189,7 @@ class Worker(threading.Thread):
                         if self._run_one(lease, broker):
                             acks.append(lease.tag)
             if acks:
-                try:
-                    broker.ack_many(acks)
-                except BrokerError:
-                    # work is done and idempotent: the unacked leases
-                    # expire, redeliver, and no-op on their once-markers
-                    self.stats["broker_retries"] += 1
+                self._flush_acks(broker, acks)
 
     def _run_one(self, lease: Lease, broker) -> bool:
         """Per-lease dispatch with failure accounting; True if ackable."""
@@ -153,7 +222,37 @@ class Worker(threading.Thread):
             raise WorkerError("injected failure")
         if task.kind == "gen":
             children = H.expand(task)
-            self.runtime.broker.put_many(children)
+            # chunked puts: typical fanouts (<= _PUT_CHUNK) stay one
+            # round-trip, and when backpressure strikes, a retry re-sends
+            # at most one chunk — not the whole expansion — so duplicates
+            # of already-admitted children stay bounded instead of
+            # re-flooding the very queue whose bound tripped
+            attempt = 0
+            for lo in range(0, len(children), self._PUT_CHUNK):
+                chunk = children[lo:lo + self._PUT_CHUNK]
+                while True:
+                    try:
+                        self.runtime.broker.put_many(chunk)
+                        break
+                    except BrokerFull:
+                        # backpressure: the downstream queue is at its
+                        # bound.  Throttle expansion instead of dying —
+                        # hold the gen lease, back off, retry this chunk
+                        # (re-putting an already-admitted child duplicates
+                        # it, which is safe: delivery is at-least-once and
+                        # execution idempotent)
+                        self.stats["throttled"] += 1
+                        attempt += 1
+                        if attempt >= self.max_throttle_retries or \
+                                self.stop_event.wait(self.throttle_backoff):
+                            # give the queue back instead of spinning
+                            # forever: the raised error nacks this gen
+                            # task, so expansion resumes (on any worker,
+                            # re-enqueueing some duplicate children) once
+                            # the flood drains
+                            raise WorkerError(
+                                "gen expansion backpressured past retry "
+                                "budget")
             self.stats["gen"] += 1
         elif task.kind == "real":
             if self.first_real_at is None:
@@ -215,7 +314,8 @@ class WorkerPool:
             w.join(timeout=5.0)
 
     def stats(self) -> dict:
-        agg = {"gen": 0, "real": 0, "failed": 0, "broker_retries": 0}
+        agg = {"gen": 0, "real": 0, "failed": 0, "broker_retries": 0,
+               "acks_retried": 0, "throttled": 0}
         for w in self.workers:
             for k in agg:
                 agg[k] += w.stats[k]

@@ -11,10 +11,16 @@ RabbitMQ stand-in of paper Sec. 2-3; workers on other nodes connect with
 
   PYTHONPATH=src python -m repro.launch.serve broker-serve \
       [--backend mem|file] [--root DIR] [--host H] [--port P] \
-      [--port-file PATH] [--visibility-timeout S] [--fairness priority|weighted]
+      [--port-file PATH] [--visibility-timeout S] [--fairness priority|weighted] \
+      [--max-queue-depth N] [--put-timeout S] [--shard-of I/N]
 
 ``--port 0`` picks a free port; ``--port-file`` atomically publishes the
 bound port for launcher scripts (examples/quickstart.py --two-process).
+``--max-queue-depth``/``--put-timeout`` arm backpressure: producers block
+when a queue is full, then get a structured BrokerFull.  ``--shard-of I/N``
+labels this server as shard I of an N-server federation (clients connect
+with ``shard://h1:p1,...,hN:pN`` or ``MerlinRuntime(broker=[...])``; the
+label is bookkeeping for launchers — routing is client-side by queue hash).
 """
 from __future__ import annotations
 
@@ -42,24 +48,52 @@ def broker_serve_main(argv=None):
     ap.add_argument("--visibility-timeout", type=float, default=60.0)
     ap.add_argument("--fairness", choices=("priority", "weighted"),
                     default="priority")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="backpressure bound: puts against a queue holding "
+                         "this many pending tasks block, then raise "
+                         "BrokerFull (relayed to clients as a typed error)")
+    ap.add_argument("--put-timeout", type=float, default=5.0,
+                    help="seconds a put may block on a full queue before "
+                         "BrokerFull (keep below the clients' request "
+                         "grace, default 10s, or they see a timeout "
+                         "instead of the structured error)")
+    ap.add_argument("--shard-of", default=None, metavar="I/N",
+                    help="label this server as shard I of an N-endpoint "
+                         "federation (advisory: sharding is client-side "
+                         "queue-hash routing via shard:// URLs)")
     args = ap.parse_args(argv)
+
+    shard_of = None
+    if args.shard_of is not None:
+        try:
+            i_s, n_s = args.shard_of.split("/", 1)
+            shard_of = (int(i_s), int(n_s))
+            if not 0 <= shard_of[0] < shard_of[1]:
+                raise ValueError(args.shard_of)
+        except ValueError:
+            ap.error(f"--shard-of must be I/N with 0 <= I < N, "
+                     f"got {args.shard_of!r}")
 
     from repro.core.netbroker import BrokerServer
     from repro.core.queue import FileBroker, InMemoryBroker
 
+    kw = dict(visibility_timeout=args.visibility_timeout,
+              fairness=args.fairness,
+              max_queue_depth=args.max_queue_depth,
+              put_timeout=args.put_timeout)
     if args.backend == "file":
         if not args.root:
             ap.error("--backend file requires --root DIR")
-        backend = FileBroker(args.root,
-                             visibility_timeout=args.visibility_timeout,
-                             fairness=args.fairness)
+        backend = FileBroker(args.root, **kw)
     else:
-        backend = InMemoryBroker(visibility_timeout=args.visibility_timeout,
-                                 fairness=args.fairness)
+        backend = InMemoryBroker(**kw)
     server = BrokerServer(backend, host=args.host, port=args.port)
     server.start()
     print(json.dumps({"event": "listening", "host": args.host,
-                      "port": server.port, "backend": args.backend}),
+                      "port": server.port, "backend": args.backend,
+                      "shard_of": None if shard_of is None
+                      else f"{shard_of[0]}/{shard_of[1]}",
+                      "max_queue_depth": args.max_queue_depth}),
           flush=True)
     if args.port_file:
         tmp = args.port_file + ".tmp"

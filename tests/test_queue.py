@@ -155,6 +155,51 @@ def test_strict_priority_remains_default(make_broker_kw):
     assert b.stats["starvation_avoided"] == 0
 
 
+def test_filebroker_priority_out_of_range(tmp_path):
+    """The filename encodes priority as %03d: out-of-range values must be
+    rejected loudly (they would silently mis-sort on disk), on both the
+    single and the batched put path."""
+    b = FileBroker(str(tmp_path / "q"))
+    for bad in (-1, 1000):
+        with pytest.raises(ValueError):
+            b.put(new_task("real", {}, priority=bad))
+        with pytest.raises(ValueError):
+            b.put_many([new_task("real", {}, priority=bad)])
+    assert b.qsize() == 0  # nothing snuck onto disk
+
+
+def test_weighted_rr_pick_on_stale_heap_forces_rescan(tmp_path):
+    """The fairness race: the weighted RR pick lands on a queue whose only
+    indexed names were already claimed by ANOTHER instance.  The rename
+    races must fail over to other queues' work, mark the index stale, and
+    force a disk re-list (bypassing the rescan throttle) so work this
+    instance has never listed is found immediately instead of after the
+    throttle window."""
+    root = str(tmp_path / "q")
+    # huge rescan_interval: only the stale-claim force can trigger a
+    # re-list within this test's lifetime
+    b1 = FileBroker(root, rescan_interval=60.0, fairness="weighted")
+    b1.put_many([new_task("real", {"q": "flood", "i": i}, queue="flood")
+                 for i in range(3)])
+    b1.put(new_task("real", {"q": "trickle"}, queue="trickle"))
+    # a second instance (another "allocation") claims EVERYTHING b1 has
+    # indexed, so every entry in b1's heaps is now stale
+    b2 = FileBroker(root, rescan_interval=0.0)
+    stolen = b2.get_many(10, timeout=1)
+    assert len(stolen) == 4
+    # ...and enqueues fresh work b1 has never listed
+    b2.put(new_task("real", {"q": "fresh"}, queue="flood"))
+    # b1's claim round: every RR pick hits a stale name (rename fails),
+    # the forced rescan finds b2's fresh task despite the 60s throttle
+    lease = b1.get(timeout=2)
+    assert lease is not None and lease.task.payload["q"] == "fresh"
+    assert b1.stats["stale_claims"] >= 1
+    b1.ack(lease.tag)
+    for l in stolen:
+        b2.ack(l.tag)
+    assert b1.idle() and b2.idle()
+
+
 def test_concurrent_claims_unique(tmp_path):
     """Atomic rename: concurrent getters never double-claim one task."""
     b = FileBroker(str(tmp_path / "q"))
