@@ -1,0 +1,151 @@
+"""Schema fences for the BENCH_*.json perf-trajectory artifacts.
+
+``benchmarks/run.py --quick --check-schema`` (CI's smoke path) validates
+the artifacts right after writing them, so a refactor that silently stops
+emitting a scenario — or emits NaNs/strings where throughput numbers
+belong — fails the build instead of rotting the perf trajectory.
+
+The specs are deliberately *minimal* required shapes: extra keys are
+always allowed (benches grow), missing/mistyped required ones are errors.
+A spec node is either a type tuple (leaf), a dict (required sub-keys), or
+a callable predicate returning an error string or None.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Any, Dict, List, Optional
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_NUM = (int, float)
+
+
+def _finite(x: Any) -> bool:
+    return isinstance(x, _NUM) and not isinstance(x, bool) \
+        and math.isfinite(x)
+
+
+def _check_node(doc: Any, spec: Any, path: str, errors: List[str]) -> None:
+    if callable(spec) and not isinstance(spec, type):
+        msg = spec(doc)
+        if msg:
+            errors.append(f"{path}: {msg}")
+        return
+    if isinstance(spec, dict):
+        if not isinstance(doc, dict):
+            errors.append(f"{path}: expected object, got {type(doc).__name__}")
+            return
+        for key, sub in spec.items():
+            if key not in doc:
+                errors.append(f"{path}.{key}: missing")
+            else:
+                _check_node(doc[key], sub, f"{path}.{key}", errors)
+        return
+    # leaf: type tuple, with numbers required finite
+    if spec is _NUM or spec == _NUM:
+        if not _finite(doc):
+            errors.append(f"{path}: expected finite number, got {doc!r}")
+    elif not isinstance(doc, spec):
+        errors.append(f"{path}: expected {spec}, got {type(doc).__name__}")
+
+
+_STREAM = {"tasks": _NUM, "samples": _NUM, "wall_s": _NUM,
+           "samples_per_s": _NUM, "traces": _NUM}
+
+_BUNDLE_SCENARIO = {"max_bundle": _NUM, "baseline": _STREAM,
+                    "fused": _STREAM, "speedup": _NUM, "bucket_bound": _NUM}
+
+_XBATCH_MODE = {"wall_s": _NUM, "samples_per_s": _NUM, "launches": _NUM}
+
+
+def _mesh_spec(doc: Any) -> Optional[str]:
+    """mesh_dispatch may be {"skipped": reason} (no subprocess support) or
+    the full result; both are schema-valid, silence is not."""
+    if not isinstance(doc, dict):
+        return f"expected object, got {type(doc).__name__}"
+    if "skipped" in doc:
+        return None if isinstance(doc["skipped"], str) else \
+            "skipped must carry a reason string"
+    errs: List[str] = []
+    _check_node(doc, {
+        "devices": _NUM, "bucket_bound": _NUM, "bit_equal": bool,
+        "jag_max_rel_diff": _NUM,
+        "exact_single": {"wall_s": _NUM, "traces": _NUM},
+        "exact_sharded": {"wall_s": _NUM, "traces": _NUM,
+                          "mesh_launches": _NUM},
+        "jag_single": {"samples_per_s": _NUM},
+        "jag_sharded": {"samples_per_s": _NUM, "mesh_launches": _NUM},
+    }, "", errs)
+    return "; ".join(errs) if errs else None
+
+
+ENSEMBLE_SPEC: Dict[str, Any] = {
+    "meta": {"bench": str, "quick": bool, "jax": str, "backend": str,
+             "unix_time": _NUM},
+    "ragged": _BUNDLE_SCENARIO,
+    "uniform": _BUNDLE_SCENARIO,
+    "engine_xbatch": {"n_samples": _NUM, "tasks": _NUM, "bundle": _NUM,
+                      "workers": _NUM, "batch": _NUM,
+                      "per_worker": _XBATCH_MODE, "xbatch": _XBATCH_MODE,
+                      "speedup": _NUM},
+    "mesh_dispatch": _mesh_spec,
+    "surrogate": {"rows": _NUM, "steps": _NUM, "baseline_s": _NUM,
+                  "scanned_s": _NUM, "scanned_cold_s": _NUM,
+                  "speedup": _NUM, "prediction_max_abs_diff": _NUM},
+    "loads": {"bundles": _NUM, "bundle": _NUM, "cold_load_s": _NUM,
+              "warm_load_s": _NUM, "incremental_load_s": _NUM,
+              "warm_speedup": _NUM},
+    "acceptance": {"engine_xbatch_speedup": _NUM, "pass_xbatch": bool,
+                   "pass": bool},
+}
+
+BROKER_SPEC: Dict[str, Any] = {
+    "meta": {"bench": str, "tasks": _NUM, "quick": bool, "unix_time": _NUM},
+    "scenarios": lambda d: None if (
+        isinstance(d, dict) and d and all(
+            isinstance(v, dict) and _finite(v.get("tasks_per_s"))
+            and _finite(v.get("wall_s")) for v in d.values())
+    ) else "every scenario needs finite tasks_per_s and wall_s",
+    "file_index_speedup_vs_seed": _NUM,
+    "acceptance": {"net_batched_vs_file_w1_b1": _NUM, "pass_net": bool,
+                   "shard2_vs_net_mem_b8": _NUM, "pass_shard": bool,
+                   "pass": bool},
+}
+
+
+def check_doc(doc: Any, spec: Dict[str, Any], name: str) -> List[str]:
+    errors: List[str] = []
+    _check_node(doc, spec, name, errors)
+    return errors
+
+
+def check_file(path: str, spec: Dict[str, Any]) -> List[str]:
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return [f"{name}: missing"]
+    except json.JSONDecodeError as e:
+        return [f"{name}: not valid JSON ({e})"]
+    return check_doc(doc, spec, name)
+
+
+def check_all(root: str = REPO_ROOT) -> List[str]:
+    """Validate both artifacts at the repo root; returns all errors."""
+    return (check_file(os.path.join(root, "BENCH_ensemble.json"),
+                       ENSEMBLE_SPEC)
+            + check_file(os.path.join(root, "BENCH_broker.json"),
+                         BROKER_SPEC))
+
+
+if __name__ == "__main__":
+    import sys
+    errs = check_all()
+    for e in errs:
+        print(f"schema error: {e}", file=sys.stderr)
+    if errs:
+        sys.exit(1)
+    print("BENCH_*.json schemas OK")

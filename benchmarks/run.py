@@ -5,7 +5,11 @@ Prints ``name,us_per_call,derived`` CSV rows (us_per_call = the per-unit
 latency each figure is about), then a human-readable block.  Paper-claim
 comparisons live in EXPERIMENTS.md.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--check-schema]
+
+``--check-schema`` validates the BENCH_*.json artifacts (after --quick
+refreshes them, or standalone against the committed ones) and exits
+non-zero on a malformed document — CI's fence against perf-trajectory rot.
 """
 import argparse
 import sys
@@ -14,6 +18,9 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check-schema", action="store_true",
+                    help="validate BENCH_*.json against the documented "
+                         "schemas (benchmarks/README.md); exit 1 on errors")
     args = ap.parse_args()
 
     from benchmarks import figures as F
@@ -69,6 +76,20 @@ def main() -> None:
         rows.append(("ensemble_surrogate_train",
                      et["surrogate"]["scanned_s"] * 1e6,
                      f"{et['surrogate']['speedup']:.1f}x vs eager loop"))
+        xb = et["engine_xbatch"]
+        rows.append(("ensemble_engine_xbatch",
+                     1e6 / xb["xbatch"]["samples_per_s"],
+                     f"{xb['speedup']:.2f}x vs per-worker coalescing "
+                     f"(bar >= 2x); launches "
+                     f"{xb['per_worker']['launches']} -> "
+                     f"{xb['xbatch']['launches']}"))
+        md = et.get("mesh_dispatch", {})
+        if md and "skipped" not in md:
+            rows.append(("ensemble_mesh_dispatch",
+                         1e6 / md["jag_sharded"]["samples_per_s"],
+                         f"{md['devices']} forced host devices; "
+                         f"bit_equal={md['bit_equal']}, jag rel diff "
+                         f"{md['jag_max_rel_diff']:.1e}"))
         # broker bench (tiny): refreshes BENCH_broker.json so the perf
         # trajectory covers the federated (sharded) topology too
         from benchmarks import broker_throughput as BT
@@ -90,6 +111,15 @@ def main() -> None:
         roofline.main()
     except Exception as e:  # pragma: no cover
         print(f"(roofline table skipped: {e})", file=sys.stderr)
+
+    if args.check_schema:
+        from benchmarks.bench_schema import check_all
+        errs = check_all()
+        for e in errs:
+            print(f"schema error: {e}", file=sys.stderr)
+        if errs:
+            sys.exit(1)
+        print("BENCH_*.json schemas OK")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,293 @@
+"""ExecutionEngine: the shared micro-batching scheduler between lease
+pumps and device execution.
+
+Before this module, batching policy lived inside each worker thread: one
+``get_many`` lease batch was the largest unit the runtime could fuse into
+a single device launch (``execute_real_many``), so the fusion width was
+capped by ``batch`` *per worker* — and under a multi-worker pool the
+interleaved claims shredded contiguity, so most "batches" degenerated to
+per-task launches anyway.  The engine moves that policy into one shared,
+testable component:
+
+* **Workers become pure lease pumps.**  A worker leases, submits its real
+  fn-step tasks here, waits for the per-task outcomes, and acks/nacks —
+  it never calls the executor itself.  Leases stay worker-held, so the
+  broker's at-least-once / visibility-timeout story is unchanged.
+* **Deadline-based micro-batching.**  Submissions accumulate in a buffer
+  that is flushed when it reaches ``max_batch`` tasks or when the oldest
+  submission has waited ``max_wait_ms`` — whichever comes first (the
+  classic size-or-deadline batching rule).  A flush hands the whole
+  buffer to ``MerlinRuntime.execute_real_many``, which coalesces
+  compatible tasks (same study/stage/combo, contiguous sample ranges)
+  into fused device launches — **across get_many batches, across
+  workers, and across queues**, because every worker of a runtime feeds
+  the same buffer.
+* **Per-task semantics preserved.**  ``execute_real_many`` keeps the
+  ``ctx.sub_ranges`` contract (one bundle file + once-marker +
+  ``_bundle_done`` per original task).  If a fused flush fails, the
+  engine falls back to per-task ``execute_real`` so a poison task
+  resolves with *its own* error while its batch-mates complete — the
+  worker then acks the survivors and retries/dead-letters only the
+  poison task.
+* **Observability.**  ``stats()`` reports batches fused, a tasks-per-
+  batch histogram, how many flushes were triggered by size vs deadline
+  vs an explicit ``flush()``, and the busy fraction (the share of
+  wall-clock the engine spent inside fused execution — the scheduler's
+  proxy for device utilization; the sample-level view, real vs padded
+  device rows, is ``EnsembleExecutor.stats``).
+
+Lifecycle: engines are shared and reference-counted.  ``MerlinRuntime.
+shared_engine()`` hands every WorkerPool of a runtime the same instance
+(cross-pool coalescing); each pool ``attach()``-es on start and
+``detach()``-es on shutdown, and the last detach closes the dispatcher
+thread.  ``flush()`` forces the current partial buffer out immediately —
+``WorkerPool.drain``/``shutdown`` call it so a partially-filled
+micro-batch never strands leased tasks until their visibility timeout.
+
+Tuning ``max_wait_ms``: it is the latency floor a lone task pays for the
+chance to be fused.  Keep it well below the broker visibility timeout
+and in the order of one device launch (a few ms on CPU); raise it when
+many slow pumps feed one engine, lower it toward zero to approximate
+per-batch execution.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.queue import Task
+
+
+class EngineClosed(RuntimeError):
+    """Submission after the engine's dispatcher has been shut down."""
+
+
+class PendingTask:
+    """A submitted task's completion handle (resolved by the dispatcher).
+
+    ``error`` is None on success, or the exception the task's (fallback,
+    per-task) execution raised — the worker maps it to nack/dead-letter.
+    """
+
+    __slots__ = ("task", "event", "error")
+
+    def __init__(self, task: Task):
+        self.task = task
+        self.event = threading.Event()
+        self.error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self.event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self.event.wait(timeout)
+
+    def _resolve(self, error: Optional[BaseException]) -> None:
+        self.error = error
+        self.event.set()
+
+
+class ExecutionEngine:
+    """Shared size-or-deadline micro-batching scheduler over one runtime."""
+
+    def __init__(self, runtime, max_batch: int = 32,
+                 max_wait_ms: float = 8.0):
+        self.runtime = runtime
+        self.max_batch = max(1, int(max_batch))
+        self.max_wait = max(0.0, float(max_wait_ms) / 1000.0)
+        self._cv = threading.Condition()
+        self._buf: List[PendingTask] = []
+        self._deadline: Optional[float] = None
+        self._flush_asked = False
+        self._closed = False
+        self._refs = 0
+        self._thread: Optional[threading.Thread] = None
+        self._t0: Optional[float] = None  # first submission (uptime clock)
+        self._stats: Dict[str, object] = {
+            "submitted": 0, "executed": 0, "failed_tasks": 0,
+            "batches": 0, "size_flushes": 0, "deadline_flushes": 0,
+            "forced_flushes": 0, "max_batch_seen": 0,
+            "exec_s": 0.0, "batch_hist": {},
+        }
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def refs(self) -> int:
+        """How many users (WorkerPools) are currently attached."""
+        with self._cv:
+            return self._refs
+
+    def buffered(self) -> int:
+        """Tasks currently waiting in the micro-batch buffer (cheap,
+        local — lets drain loops avoid broker round-trips when there is
+        nothing to flush anyway)."""
+        with self._cv:
+            return len(self._buf)
+
+    def attach(self) -> "ExecutionEngine":
+        """Reference-count a user (a WorkerPool); pair with detach()."""
+        with self._cv:
+            if self._closed:
+                raise EngineClosed("cannot attach to a closed engine")
+            self._refs += 1
+        return self
+
+    def detach(self) -> None:
+        """Drop one reference; the last detach closes the dispatcher."""
+        with self._cv:
+            self._refs -= 1
+            last = self._refs <= 0
+        if last:
+            self.close()
+
+    def close(self, timeout: float = 10.0) -> None:
+        """Flush whatever is buffered, then stop the dispatcher thread."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+        # belt-and-braces: the dispatcher drains the buffer before exiting,
+        # but if it died (or never ran), nobody may wait forever on us
+        with self._cv:
+            leftovers, self._buf = self._buf, []
+        for p in leftovers:
+            p._resolve(EngineClosed("engine closed before execution"))
+
+    def _ensure_thread_locked(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._loop, daemon=True, name="merlin-exec-engine")
+            self._thread.start()
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, task: Task) -> PendingTask:
+        return self.submit_many([task])[0]
+
+    def submit_many(self, tasks: Sequence[Task]) -> List[PendingTask]:
+        """Queue tasks for fused execution; returns per-task handles.
+
+        The caller (a worker holding the leases) waits on the handles and
+        acks/nacks per task — the engine never touches the broker."""
+        pendings = [PendingTask(t) for t in tasks]
+        if not pendings:
+            return pendings
+        with self._cv:
+            if self._closed:
+                raise EngineClosed("engine is closed")
+            self._ensure_thread_locked()
+            now = time.monotonic()
+            if self._t0 is None:
+                self._t0 = now
+            if not self._buf:
+                self._deadline = now + self.max_wait
+            self._buf.extend(pendings)
+            self._stats["submitted"] += len(pendings)
+            self._cv.notify_all()
+        return pendings
+
+    def flush(self) -> None:
+        """Dispatch the current partial buffer without waiting for the
+        deadline (drain/shutdown path).  No-op when the buffer is empty."""
+        with self._cv:
+            if self._buf:
+                self._flush_asked = True
+                self._cv.notify_all()
+
+    # -- dispatcher ----------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._buf and not self._closed:
+                    self._cv.wait()
+                if not self._buf and self._closed:
+                    return
+                # size-or-deadline wait (closed/flush cut it short)
+                while (len(self._buf) < self.max_batch and not self._closed
+                       and not self._flush_asked):
+                    remaining = self._deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cv.wait(remaining)
+                if len(self._buf) >= self.max_batch:
+                    reason = "size_flushes"
+                elif self._flush_asked or self._closed:
+                    reason = "forced_flushes"
+                else:
+                    reason = "deadline_flushes"
+                batch = self._buf[:self.max_batch]
+                self._buf = self._buf[self.max_batch:]
+                if self._buf:
+                    # the remainder was submitted later: restart its clock
+                    self._deadline = time.monotonic() + self.max_wait
+                else:
+                    self._flush_asked = False
+            self._execute(batch, reason)
+
+    def _execute(self, batch: List[PendingTask], reason: str) -> None:
+        t0 = time.monotonic()
+        # a handle must NEVER resolve as success unless its task's
+        # execution actually returned — tasks left at this default (e.g.
+        # a step fn raising SystemExit aborts both attempts below) come
+        # back as failures, so the worker nacks them for redelivery
+        # instead of acking work that never ran (at-least-once preserved)
+        outcomes: List[Optional[BaseException]] = [
+            RuntimeError("engine dispatcher aborted before this task "
+                         "executed")] * len(batch)
+        try:
+            try:
+                self.runtime.execute_real_many([p.task for p in batch])
+                outcomes = [None] * len(batch)
+            except BaseException:
+                # fused path failed: isolate the poison task by re-running
+                # per task (already-completed tasks no-op on once-markers)
+                for i, p in enumerate(batch):
+                    try:
+                        self.runtime.execute_real(p.task)
+                        outcomes[i] = None
+                    except BaseException as e:
+                        outcomes[i] = e
+        finally:
+            dt = time.monotonic() - t0
+            failed = sum(1 for e in outcomes if e is not None)
+            with self._cv:
+                s = self._stats
+                s["batches"] += 1
+                s[reason] += 1
+                s["executed"] += len(batch)
+                s["failed_tasks"] += failed
+                s["max_batch_seen"] = max(s["max_batch_seen"], len(batch))
+                s["exec_s"] += dt
+                hist = s["batch_hist"]
+                hist[len(batch)] = hist.get(len(batch), 0) + 1
+            # resolve OUTSIDE the lock, always — a handle left unresolved
+            # would hang its worker forever
+            for p, err in zip(batch, outcomes):
+                p._resolve(err)
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        """Counters plus derived figures (see module docstring)."""
+        with self._cv:
+            s = dict(self._stats)
+            s["batch_hist"] = dict(s["batch_hist"])
+            s["buffered"] = len(self._buf)
+            t0 = self._t0
+        s["avg_batch"] = (s["executed"] / s["batches"]) if s["batches"] else 0.0
+        up = (time.monotonic() - t0) if t0 is not None else 0.0
+        s["uptime_s"] = up
+        s["utilization"] = (s["exec_s"] / up) if up > 0 else 0.0
+        return s
+
+    def __enter__(self) -> "ExecutionEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

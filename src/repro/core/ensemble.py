@@ -3,10 +3,24 @@
 On Sierra a Merlin "bundle" was 10 serial subprocess simulations per task
 (Sec. 3.1); per-sample overhead ~33 ms (Fig. 5).  On a TPU/accelerator the
 equivalent unit is a *vmapped batch*: a leaf task's [lo, hi) sample range is
-executed as ONE jitted ``vmap(simulator)`` call, optionally ``shard_map``-
-distributed over the mesh's data axis, so the marginal per-sample overhead
-is device-level, not process-level.  The hierarchy (core/hierarchy.py) still
-generates the index space; only the leaf execution is fused.
+executed as ONE jitted ``vmap(simulator)`` call, so the marginal per-sample
+overhead is device-level, not process-level.  The hierarchy
+(core/hierarchy.py) still generates the index space; only the leaf
+execution is fused.
+
+Multi-device dispatch
+---------------------
+On hosts exposing more than one device the executor defaults to a shared
+1-D mesh (:func:`device_mesh`) and dispatches fused bundles with
+``shard_map`` over the ``data`` axis: each device runs the vmapped
+simulator on its contiguous slice of the padded batch.  The power-of-two
+bucket schedule doubles as the sharding grid — any bucket >= the
+(power-of-two) device count divides the mesh evenly, so no extra padding
+logic exists for sharding; buckets smaller than the mesh fall back to
+single-device jit.  Per-row independence makes the sharded result
+bit-for-bit identical to the single-device one (regression-tested with
+8 forced host devices), and the compile count stays within the same
+bucketed bound: one trace per bucket, shard_mapped or not.
 
 Bucketing policy
 ----------------
@@ -54,6 +68,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bundler import Bundler
+
+# process-wide 1-D device mesh (multi-device dispatch) ------------------------
+# Built lazily over ALL local devices with one "data" axis.  Fused bundles
+# whose padded (power-of-two) size divides the device count dispatch via
+# shard_map; smaller buckets fall back to the single-device jit — the bucket
+# schedule is reused as the sharding grid, not duplicated.  Tests force a
+# multi-device host with XLA_FLAGS=--xla_force_host_platform_device_count=8
+# in a subprocess (the in-process suite keeps 1 device, see tests/conftest).
+_DEVICE_MESH = None
+
+
+def device_mesh(axis: str = "data"):
+    """The shared 1-D mesh over this process's local devices; None on
+    1-device hosts.  LOCAL devices only: on a multi-host jax.distributed
+    deployment a global-device mesh would require every process to enter
+    the launch collectively, which broker-driven workers never do."""
+    global _DEVICE_MESH
+    if jax.local_device_count() <= 1:
+        return None
+    if _DEVICE_MESH is None or _DEVICE_MESH.axis_names != (axis,):
+        from jax.sharding import Mesh
+        _DEVICE_MESH = Mesh(np.array(jax.local_devices()), (axis,))
+    return _DEVICE_MESH
 
 # process-wide compile cache + trace counter ---------------------------------
 # Outer level is a WeakKeyDictionary on the simulator callable: per-study
@@ -105,18 +142,35 @@ def pad_rows(arr: np.ndarray, to: int) -> np.ndarray:
 
 class EnsembleExecutor:
     def __init__(self, simulator: Callable, bundler: Optional[Bundler] = None,
-                 mesh=None, data_axis: str = "data", bucketed: bool = True,
+                 mesh="auto", data_axis: str = "data", bucketed: bool = True,
                  share_cache: bool = True):
-        """simulator: f(params_row: (d,) array, rng) -> dict of arrays."""
+        """simulator: f(params_row: (d,) array, rng) -> dict of arrays.
+
+        ``mesh="auto"`` (default) resolves to the process-wide 1-D
+        :func:`device_mesh` when the host exposes more than one device
+        (else single-device, exactly the old behavior); ``mesh=None``
+        forces single-device; an explicit Mesh pins dispatch to it.
+        """
         self.simulator = simulator
         self.bundler = bundler
-        self.mesh = mesh
         self.data_axis = data_axis
+        self.mesh = device_mesh(data_axis) if mesh == "auto" else mesh
         self.bucketed = bucketed
         self.share_cache = share_cache
         self._private_jit: Dict[Tuple, Callable] = {}
         self.stats = {"bundles": 0, "samples": 0, "sim_time": 0.0,
-                      "compiles": 0, "launches": 0, "padded_samples": 0}
+                      "compiles": 0, "launches": 0, "padded_samples": 0,
+                      "mesh_launches": 0,
+                      "devices": 1 if self.mesh is None
+                      else int(self.mesh.shape[data_axis])}
+
+    def _mesh_divides(self, n: int) -> bool:
+        """True when size-n batches shard evenly over the mesh.  Power-of-
+        two buckets >= a power-of-two device count always do, so the
+        bucket padding doubles as the sharding grid; smaller buckets (or
+        odd meshes) fall back to single-device dispatch."""
+        return self.mesh is not None and \
+            n % int(self.mesh.shape[self.data_axis]) == 0
 
     def _build(self, n: int) -> Callable:
         def run(batch, seeds):
@@ -127,13 +181,18 @@ class EnsembleExecutor:
         # donation frees the input buffers for reuse by the outputs; XLA on
         # CPU can't honor it and warns, so only donate on real accelerators
         donate = (0, 1) if jax.default_backend() != "cpu" else ()
-        if self.mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            axis = self.data_axis if n % self.mesh.shape[self.data_axis] == 0 \
-                else None
-            sh = NamedSharding(self.mesh, P(axis))
-            return jax.jit(run, in_shardings=(sh, sh), out_shardings=sh,
-                           donate_argnums=donate)
+        if self._mesh_divides(n):
+            # shard_map over the 1-D data axis: each device runs the same
+            # vmapped simulator on its n/ndev contiguous rows.  Rows are
+            # independent (per-row rng from the row's seed), so the split
+            # is bit-for-bit identical to the single-device vmap — the
+            # multi-device equivalence test asserts exactly that.
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            spec = P(self.data_axis)
+            sharded = shard_map(run, mesh=self.mesh,
+                                in_specs=(spec, spec), out_specs=spec)
+            return jax.jit(sharded, donate_argnums=donate)
         return jax.jit(run, donate_argnums=donate)
 
     def _compiled(self, n: int) -> Callable:
@@ -180,6 +239,8 @@ class EnsembleExecutor:
         self.stats["samples"] += n
         self.stats["padded_samples"] += padded - n
         self.stats["launches"] += 1
+        if self._mesh_divides(padded):
+            self.stats["mesh_launches"] += 1
         if self.bundler is not None:
             jax.block_until_ready(out)  # sync exactly once, at write time
             out = jax.tree.map(np.asarray, out)

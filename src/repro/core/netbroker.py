@@ -310,6 +310,11 @@ class BrokerServer:
         if op == "set_visibility_timeout":
             b.set_visibility_timeout(req["queue"], float(req["timeout"]))
             return {}
+        if op == "set_max_queue_depth":
+            depth = req.get("depth")
+            b.set_max_queue_depth(req["queue"],
+                                  None if depth is None else int(depth))
+            return {}
         if op == "inflight_tasks":
             return {"tasks": [[dataclasses.asdict(t), age]
                               for t, age in b.inflight_tasks()]}
@@ -523,6 +528,12 @@ class NetBroker:
         self._call("set_visibility_timeout", queue=queue,
                    timeout=float(timeout))
 
+    def set_max_queue_depth(self, queue: str, depth: Optional[int]) -> None:
+        """Override one queue's backpressure bound in the server backend
+        (None clears it); subsequent puts from ANY client honor it."""
+        self._call("set_max_queue_depth", queue=queue,
+                   depth=None if depth is None else int(depth))
+
     def heartbeat(self, consumer_id: str,
                   queues: Optional[Sequence[str]] = None) -> None:
         """Register/refresh this consumer in the server backend's heartbeat
@@ -554,6 +565,10 @@ def make_broker(url, **kwargs) -> Broker:
     * ``tcp://host:port``      NetBroker client to a BrokerServer
     * ``shard://h1:p1,h2:p2``  ShardedBroker federating N endpoints
       (comma-separated; entries without a scheme default to ``tcp://``)
+    * ``shard+file://<path>``  ShardedBroker assembled from an endpoint
+      discovery file published by ``broker-serve --announce <path>``
+      (waits for the declared federation size; ``expect=`` overrides it,
+      ``discover_timeout=`` bounds the wait)
     * ``["tcp://...", ...]``   a list/tuple of URLs == a ShardedBroker
 
     Extra kwargs go to the chosen constructor (e.g. ``visibility_timeout``
@@ -564,6 +579,16 @@ def make_broker(url, **kwargs) -> Broker:
     if isinstance(url, (list, tuple)):
         from repro.core.shardbroker import ShardedBroker
         return ShardedBroker(list(url), **kwargs)
+    if url.startswith("shard+file://"):
+        from repro.core.shardbroker import discover_shards
+        path = url[len("shard+file://"):]
+        if not path:
+            raise ValueError("shard+file:// broker URL needs the announce "
+                             "file path")
+        return discover_shards(path,
+                               expect=kwargs.pop("expect", None),
+                               timeout=kwargs.pop("discover_timeout", 10.0),
+                               **kwargs)
     if url.startswith("shard://"):
         from repro.core.shardbroker import ShardedBroker
         endpoints = [e if "://" in e else f"tcp://{e}"

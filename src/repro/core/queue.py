@@ -55,6 +55,13 @@ Cross-cutting policies, identical in every backend:
   against a full queue block until it drains, then get a typed
   :class:`BrokerFull`; redelivery is exempt so recovery never wedges.
   Workers throttle generation-task expansion on it instead of dying.
+  ``queue_depths=`` / ``set_max_queue_depth(queue, depth)`` override the
+  bound per named queue (``depth=None`` clears an override back to the
+  global bound) — a flood-prone generation queue can be clamped tight
+  while the simulation queue stays deep.  FileBroker persists overrides
+  to ``<root>/.depth.json`` (like ``.vt.json``) so every instance on the
+  directory honors them; NetBroker relays the op, and ShardedBroker
+  routes it to the queue's owning shard.
 * **Consumer heartbeats** (``heartbeat(consumer_id, queues)``,
   ``heartbeat_ttl=``): ``stats["consumers"]`` is a live per-queue
   consumer count instead of a connection-count guess — the basis for
@@ -203,6 +210,8 @@ class Broker(Protocol):
     * ``put``/``put_many`` against a queue at ``max_queue_depth`` block up
       to ``put_timeout`` then raise :class:`BrokerFull` (backpressure);
       redelivery (nack / lease expiry) is exempt so recovery never wedges.
+      ``set_max_queue_depth(queue, depth)`` overrides the bound for one
+      named queue (``None`` clears the override).
     * ``heartbeat(consumer_id, queues)`` registers/refreshes a consumer's
       subscription; entries older than the backend's ``heartbeat_ttl`` are
       dropped, so ``stats["consumers"]`` reports *live* consumers per
@@ -229,6 +238,8 @@ class Broker(Protocol):
     def inflight(self) -> int: ...
     def idle(self) -> bool: ...
     def set_visibility_timeout(self, queue: str, timeout: float) -> None: ...
+    def set_max_queue_depth(self, queue: str,
+                            depth: Optional[int]) -> None: ...
     def inflight_tasks(self) -> List[Tuple[Task, float]]: ...
     def heartbeat(self, consumer_id: str,
                   queues: Optional[Sequence[str]] = None) -> None: ...
@@ -286,7 +297,8 @@ class InMemoryBroker:
                  queue_weights: Optional[Dict[str, float]] = None,
                  max_queue_depth: Optional[int] = None,
                  put_timeout: float = 5.0,
-                 heartbeat_ttl: float = 15.0):
+                 heartbeat_ttl: float = 15.0,
+                 queue_depths: Optional[Dict[str, int]] = None):
         self._lock = threading.Condition()
         self._heaps: Dict[str, List[Tuple[int, int, Task]]] = {}
         self._seq = itertools.count()
@@ -305,6 +317,10 @@ class InMemoryBroker:
         # without forward progress.  None = unbounded (the default).
         self._max_depth = None if max_queue_depth is None \
             else max(1, int(max_queue_depth))
+        # per-queue depth overrides take precedence over the global bound
+        # (a queue can be bounded on an otherwise-unbounded broker)
+        self._depth_queue: Dict[str, int] = {
+            q: max(1, int(d)) for q, d in (queue_depths or {}).items()}
         self._put_timeout = put_timeout
         # consumer heartbeats: id -> (subscribed queues or None, last-seen)
         self._hb_ttl = heartbeat_ttl
@@ -355,26 +371,45 @@ class InMemoryBroker:
     def _deadline(self, task: Task, leased_at: float) -> float:
         return leased_at + self._vt_for(task.queue)
 
+    # -- per-queue depth overrides -------------------------------------------
+    def set_max_queue_depth(self, queue: str, depth: Optional[int]) -> None:
+        """Override (or, with ``None``, clear) one queue's depth bound."""
+        with self._lock:
+            if depth is None:
+                self._depth_queue.pop(queue, None)
+            else:
+                self._depth_queue[queue] = max(1, int(depth))
+            self._lock.notify_all()  # a raised bound unblocks producers
+
+    def _depth_for(self, queue: str) -> Optional[int]:
+        return self._depth_queue.get(queue, self._max_depth)
+
+    def _bounded(self) -> bool:
+        return self._max_depth is not None or bool(self._depth_queue)
+
     # -- producer side -----------------------------------------------------
     def _push_locked(self, task: Task) -> None:
         heap = self._heaps.setdefault(task.queue, [])
         heapq.heappush(heap, (task.priority, next(self._seq), task))
 
     def _wait_capacity_locked(self, queue: str, deadline: float) -> None:
-        """Block while ``queue`` is at max_queue_depth; BrokerFull at the
+        """Block while ``queue`` is at its depth bound; BrokerFull at the
         deadline.  Consumers claiming tasks notify the condition, so a
         blocked producer wakes as soon as the queue drains."""
-        while len(self._heaps.get(queue, ())) >= self._max_depth:
+        while True:
+            limit = self._depth_for(queue)
+            if limit is None or len(self._heaps.get(queue, ())) < limit:
+                return
             remaining = deadline - time.monotonic()
             if remaining <= 0:
                 raise BrokerFull(
-                    f"queue {queue!r} held {self._max_depth} pending tasks "
+                    f"queue {queue!r} held {limit} pending tasks "
                     f"for {self._put_timeout}s (max_queue_depth)")
             self._lock.wait(remaining)
 
     def put(self, task: Task) -> None:
         with self._lock:
-            if self._max_depth is not None:
+            if self._bounded():
                 self._wait_capacity_locked(
                     task.queue, time.monotonic() + self._put_timeout)
             task.enqueued_at = time.monotonic()
@@ -383,7 +418,7 @@ class InMemoryBroker:
             self._lock.notify_all()
 
     def put_many(self, tasks: List[Task]) -> None:
-        if self._max_depth is None:  # unbounded: one lock, one wakeup
+        if not self._bounded():  # unbounded: one lock, one wakeup
             now = time.monotonic()
             with self._lock:
                 for t in tasks:
@@ -480,7 +515,7 @@ class InMemoryBroker:
                         break
                     out.append(self._lease_locked(task))
                 if out:
-                    if self._max_depth is not None:
+                    if self._bounded():
                         # claims free queue capacity: wake blocked producers
                         self._lock.notify_all()
                     return out
@@ -588,7 +623,8 @@ class FileBroker:
                  queue_weights: Optional[Dict[str, float]] = None,
                  max_queue_depth: Optional[int] = None,
                  put_timeout: float = 5.0,
-                 heartbeat_ttl: float = 15.0):
+                 heartbeat_ttl: float = 15.0,
+                 queue_depths: Optional[Dict[str, int]] = None):
         self.root = root
         self.qroot = os.path.join(root, "queues")
         self.cdir = os.path.join(root, "claimed")
@@ -605,6 +641,18 @@ class FileBroker:
         # race the check-then-write and overshoot the depth bound; across
         # processes the bound stays best-effort (see _wait_capacity)
         self._plock = threading.Lock()
+        # per-queue depth overrides are shared queue state like .vt.json:
+        # persisted to <root>/.depth.json so other instances' producers
+        # honor them (reloaded on sweeps and, throttled, on puts)
+        self._depthconf_path = os.path.join(root, ".depth.json")
+        self._depth_queue: Dict[str, int] = {}
+        self._depthconf_sig: Optional[Tuple[int, int]] = None
+        self._last_depth_check = 0.0
+        self._load_depthconf()
+        if queue_depths:
+            self._depth_queue.update(
+                {q: max(1, int(d)) for q, d in queue_depths.items()})
+            self._save_depthconf()
         self._hb_ttl = heartbeat_ttl
         self._vt = visibility_timeout
         self._seq = itertools.count(int(time.time() * 1e3) % 10 ** 9)
@@ -749,6 +797,79 @@ class FileBroker:
         # sweep interval late
         self._recompute_sweep_interval()
 
+    # -- per-queue depth overrides -------------------------------------------
+    def set_max_queue_depth(self, queue: str, depth: Optional[int]) -> None:
+        """Override (or clear, with ``None``) one queue's depth bound.
+
+        Persisted to ``<root>/.depth.json`` so other instances on this
+        directory pick it up: their sweeps reload eagerly, their put paths
+        re-check the file signature at most twice a second (an override is
+        rare, slowly-changing config — ops, not dataplane).  The
+        read-merge-write is serialized ACROSS processes by an fcntl lock
+        on ``.depth.lock`` — .vt.json-style unlocked merging would let two
+        processes' concurrent overrides silently drop one (and, because
+        loads REPLACE the local view, later erase the loser's own bound).
+        """
+        import fcntl
+        with self._ilock:
+            try:
+                lf = open(os.path.join(self.root, ".depth.lock"), "w")
+            except OSError:
+                lf = None  # degraded: process-local serialization only
+            try:
+                if lf is not None:
+                    fcntl.flock(lf, fcntl.LOCK_EX)
+                self._load_depthconf(force=True)  # merge-before-write
+                if depth is None:
+                    self._depth_queue.pop(queue, None)
+                else:
+                    self._depth_queue[queue] = max(1, int(depth))
+                self._save_depthconf()
+            finally:
+                if lf is not None:
+                    lf.close()  # releases the flock
+
+    def _depth_for(self, queue: str) -> Optional[int]:
+        return self._depth_queue.get(queue, self._max_depth)
+
+    def _save_depthconf(self) -> None:
+        tmp = os.path.join(self.root, f".tmp-depth-{uuid.uuid4().hex}")
+        try:
+            with open(tmp, "w") as f:
+                json.dump(self._depth_queue, f)
+            os.rename(tmp, self._depthconf_path)
+        except OSError:
+            return
+        try:
+            st = os.stat(self._depthconf_path)
+            self._depthconf_sig = (st.st_mtime_ns, st.st_size)
+        except OSError:
+            pass
+
+    def _load_depthconf(self, force: bool = False) -> None:
+        """Reload overrides when the file changed (throttled to 0.5s unless
+        forced — puts call this on their hot path)."""
+        now = time.monotonic()
+        if not force and now - self._last_depth_check < 0.5:
+            return
+        self._last_depth_check = now
+        try:
+            st = os.stat(self._depthconf_path)
+        except OSError:
+            return
+        sig = (st.st_mtime_ns, st.st_size)
+        if sig == self._depthconf_sig:
+            return
+        try:
+            with open(self._depthconf_path) as f:
+                conf = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return
+        self._depthconf_sig = sig
+        # the file is authoritative (REPLACE, not update): clearing an
+        # override must propagate to every instance, not resurrect
+        self._depth_queue = {q: max(1, int(d)) for q, d in conf.items()}
+
     # -- paths ---------------------------------------------------------------
     def _qdir(self, queue: str) -> str:
         return os.path.join(self.qroot, queue)
@@ -781,7 +902,7 @@ class FileBroker:
 
     def _wait_capacity(self, queue: str, deadline: float) -> int:
         """Return available room (>= 1) in ``queue``; BrokerFull when it
-        stays at max_queue_depth until the deadline.  Counts the directory
+        stays at its depth bound until the deadline.  Counts the directory
         (not the cached index) so other processes' puts count against the
         bound — but the check-then-write is unlocked across processes, so
         concurrent producers in different processes can briefly overshoot
@@ -789,12 +910,15 @@ class FileBroker:
         property of this directory-based broker).  Within one instance,
         ``_plock`` serializes producers and the bound is exact."""
         while True:
-            room = self._max_depth - self._pending_count(queue)
+            limit = self._depth_for(queue)
+            if limit is None:
+                return 1 << 30  # override cleared while we waited
+            room = limit - self._pending_count(queue)
             if room > 0:
                 return room
             if time.monotonic() >= deadline:
                 raise BrokerFull(
-                    f"queue {queue!r} held {self._max_depth} pending tasks "
+                    f"queue {queue!r} held {limit} pending tasks "
                     f"for {self._put_timeout}s (max_queue_depth)")
             time.sleep(0.02)
 
@@ -812,7 +936,8 @@ class FileBroker:
     def put(self, task: Task) -> None:
         self._check_priority(task)
         qdir = self._ensure_queue(task.queue)
-        if self._max_depth is not None:
+        self._load_depthconf()  # throttled: other instances' overrides
+        if self._depth_for(task.queue) is not None:
             # deadline BEFORE the producer lock: time queued behind another
             # blocked producer counts against put_timeout, so total
             # blocking stays bounded per call (the documented contract)
@@ -841,9 +966,10 @@ class FileBroker:
             self._check_priority(t)
             t.enqueued_at = now
             by_q.setdefault(t.queue, []).append(t)
+        self._load_depthconf()  # throttled: other instances' overrides
         for queue, ts in by_q.items():
             qdir = self._ensure_queue(queue)
-            if self._max_depth is not None:
+            if self._depth_for(queue) is not None:
                 # ONE deadline for the whole queue batch, computed BEFORE
                 # the producer lock (put_timeout bounds total blocking
                 # including time queued behind other producers — a
@@ -1078,6 +1204,7 @@ class FileBroker:
         """Expiry sweep: redeliver timed-out leases, reap leaked temp files."""
         self._last_sweep = time.monotonic()
         self._load_vtconf()  # pick up other instances' per-queue overrides
+        self._load_depthconf(force=True)  # ... and their depth bounds
         now = time.time()
         for name in os.listdir(self.cdir):
             try:

@@ -207,6 +207,11 @@ class MerlinRuntime:
         self.gen_queue = gen_queue
         self.counters = FileCounter(os.path.join(workspace, "_counters"))
         self.journal = Journal(os.path.join(workspace, "_journal.jsonl"))
+        # one micro-batching ExecutionEngine per runtime (lazily created):
+        # every WorkerPool attached to this runtime feeds the same
+        # scheduler, so fused launches span pools as well as workers
+        self._engine = None
+        self._engine_lock = threading.Lock()
         self._specs: Dict[str, StudySpec] = {}
         self._stages: Dict[str, List[Dict]] = {}
         self._samples: Dict[str, Optional[np.ndarray]] = {}
@@ -214,6 +219,28 @@ class MerlinRuntime:
 
     def register(self, name: str, fn: Callable) -> None:
         self.fns[name] = fn
+
+    def shared_engine(self, **cfg):
+        """This runtime's shared :class:`~repro.core.engine.ExecutionEngine`
+        (created on first use, re-created after the last pool closed it).
+
+        Returns the engine with one reference attached — callers pair this
+        with ``engine.detach()`` (WorkerPool does both automatically).
+        ``cfg`` (``max_batch``, ``max_wait_ms``) only applies when this
+        call creates the engine; later callers share the first
+        configuration.
+        """
+        from repro.core.engine import EngineClosed, ExecutionEngine
+        with self._engine_lock:
+            while True:
+                if self._engine is None or self._engine.closed:
+                    self._engine = ExecutionEngine(self, **cfg)
+                try:
+                    return self._engine.attach()
+                except EngineClosed:
+                    # lost a race with the last pool's detach-close:
+                    # build a fresh engine on the next spin
+                    self._engine = None
 
     # -- producer ("merlin run") -------------------------------------------
     def run(self, spec: StudySpec, samples: Optional[np.ndarray] = None,
@@ -316,6 +343,30 @@ class MerlinRuntime:
 
     # -- execution of a real task -------------------------------------------
     @staticmethod
+    def _stage_fusable(stage: Dict[str, Any]) -> bool:
+        """THE fusion predicate — the single definition both the worker's
+        engine-routing decision (``coalescable``) and the grouping in
+        ``execute_real_many`` consult, so they can never disagree about
+        what fuses."""
+        return stage["kind"] == "parallel" and \
+            all(s.fn is not None for s in stage["steps"])
+
+    def coalescable(self, task: Task) -> bool:
+        """True when this real task can profit from fused execution: its
+        stage is a parallel run of fn-steps (the only thing
+        ``execute_real_many`` fuses).  Cmd-step and funnel-stage tasks —
+        and tasks for studies this runtime does not know — return False:
+        workers run those in their own threads, where N workers really do
+        mean N concurrent subprocesses, instead of serializing them behind
+        the engine's single dispatcher."""
+        try:
+            p = task.payload
+            stage = self._stages[p["study"]][p["stage"]]
+        except (KeyError, IndexError, TypeError):
+            return False
+        return self._stage_fusable(stage)
+
+    @staticmethod
     def _done_key(task: Task) -> str:
         p = task.payload
         lo, hi = p["samples"]
@@ -369,8 +420,7 @@ class MerlinRuntime:
                 continue  # a previous attempt completed: no-op, no re-count
             p = t.payload
             stage = self._stages[p["study"]][p["stage"]]
-            if stage["kind"] == "parallel" and \
-                    all(s.fn is not None for s in stage["steps"]):
+            if self._stage_fusable(stage):
                 groups.setdefault((p["study"], p["stage"], p["combo"]),
                                   []).append(t)
             else:

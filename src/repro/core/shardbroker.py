@@ -43,18 +43,151 @@ scheme — ``shard://host1:p1,host2:p2`` — or hand ``make_broker`` /
 """
 from __future__ import annotations
 
+import fcntl
+import json
+import os
 import time
+import uuid
 import zlib
 from typing import (Any, Dict, Iterable, List, Optional, Sequence, Tuple,
                     Union)
 
-from repro.core.queue import (Broker, Lease, Task, _normalize_queues,
-                              validate_queue_name)
+from repro.core.queue import (Broker, BrokerUnavailable, Lease, Task,
+                              _normalize_queues, validate_queue_name)
 
 
 def shard_index(queue: str, n_shards: int) -> int:
     """The stable default queue->shard hash (crc32, not Python hash())."""
     return zlib.crc32(queue.encode("utf-8")) % n_shards
+
+
+# ---------------------------------------------------------------------------
+# endpoint discovery file
+# ---------------------------------------------------------------------------
+# ``broker-serve --announce <path>`` publishes each server's bound endpoint
+# into ONE shared JSON file; ``make_broker("shard+file://<path>")`` reads it
+# and assembles the shard list — launchers stop hand-building URL lists and
+# stop caring which server bound which ephemeral port.  Format:
+#
+#     {"endpoints": {"0": "tcp://h1:p1", "1": "tcp://h2:p2"}, "n": 2}
+#
+# Keys are shard indices (from ``--shard-of I/N``, which also sets "n", the
+# expected federation size discovery waits for) or the URL itself for
+# unindexed servers.  Writers merge under an fcntl lock on a sidecar .lock
+# file and publish via atomic rename, so concurrent servers on a shared
+# filesystem cannot tear or drop each other's entries.
+
+def announce_endpoint(path: str, url: str, index: Optional[int] = None,
+                      total: Optional[int] = None) -> None:
+    """Merge ``url`` into the announce file at ``path`` (atomic, locked)."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with open(path + ".lock", "w") as lf:
+        fcntl.flock(lf, fcntl.LOCK_EX)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            doc = {}
+        eps = doc.setdefault("endpoints", {})
+        eps[url if index is None else str(index)] = url
+        if total is not None:
+            doc["n"] = int(total)
+        tmp = os.path.join(d, f".tmp-announce-{uuid.uuid4().hex}")
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.rename(tmp, path)
+
+
+def read_endpoints(path: str) -> Tuple[List[str], Optional[int]]:
+    """The announced (ordered) endpoint URLs plus the declared federation
+    size, if any.  Indexed entries come first in shard-index order — the
+    order MUST be stable across every reader, or the queue->shard hash
+    disagrees between producers and consumers."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return [], None
+    eps = doc.get("endpoints", {})
+    indexed = sorted((int(k), u) for k, u in eps.items()
+                     if k.lstrip("-").isdigit())
+    rest = sorted(u for k, u in eps.items() if not k.lstrip("-").isdigit())
+    n = doc.get("n")
+    return [u for _, u in indexed] + rest, None if n is None else int(n)
+
+
+def _endpoint_alive(url: str, timeout: float = 1.0) -> bool:
+    """Best-effort liveness probe: one raw TCP connect, no protocol, no
+    retries (a refused port answers instantly — NetBroker.ping would burn
+    its whole reconnect window on it).  Non-tcp URLs — mem://, file:// —
+    have no server to probe and count as alive."""
+    if not url.startswith("tcp://"):
+        return True
+    import socket
+
+    from repro.core.netbroker import parse_address
+    try:
+        sock = socket.create_connection(parse_address(url), timeout=timeout)
+    except OSError:
+        return False
+    try:
+        sock.close()
+    except OSError:
+        pass
+    return True
+
+
+def discover_shards(path: str, expect: Optional[int] = None,
+                    timeout: float = 10.0, poll: float = 0.05,
+                    settle: float = 0.5,
+                    **endpoint_kwargs) -> "ShardedBroker":
+    """Build a ShardedBroker from an announce file, waiting (up to
+    ``timeout``) until the declared federation size — ``expect`` or the
+    file's own "n" — has announced.
+
+    Candidate sets are liveness-probed (dead endpoints dropped) before
+    acceptance, not on every poll: entries persist across federation
+    restarts (nothing ever un-announces — an indexed restart replaces its
+    slot, an unindexed one on a fresh ephemeral port cannot), so without
+    the probe a reader racing a relaunch would assemble the PREVIOUS
+    run's dead shard list — with a declared "n", a fully-stale file would
+    even satisfy the count immediately.
+
+    With NO declared size, membership is inherently ambiguous while
+    servers are still announcing: a client reading between two
+    announcements would build a smaller federation than one reading after
+    — and the crc32(queue) % N routing would split brains.  Discovery
+    therefore waits until the file has been *stable* for ``settle``
+    seconds before accepting an undeclared set.  Declaring N via
+    ``--shard-of`` / ``expect=`` is still the recommended mode: it pins
+    membership and the shard ORDER every client must agree on."""
+    deadline = time.monotonic() + timeout
+    last_sig: Any = ()
+    sig_since = time.monotonic()
+    while True:
+        try:
+            st = os.stat(path)
+            sig: Any = (st.st_mtime_ns, st.st_size)
+        except OSError:
+            sig = None
+        now = time.monotonic()
+        if sig != last_sig:
+            last_sig, sig_since = sig, now
+        urls, declared = read_endpoints(path)
+        want = expect if expect is not None else declared
+        settled = want is not None or now - sig_since >= settle
+        if urls and settled and (want is None or len(urls) >= want):
+            live = [u for u in urls if _endpoint_alive(u)]
+            if live and (want is None or len(live) >= want):
+                return ShardedBroker(live if want is None else live[:want],
+                                     **endpoint_kwargs)
+        if time.monotonic() >= deadline:
+            raise BrokerUnavailable(
+                f"announce file {path!r} published {len(urls)} endpoint(s) "
+                f"(live subset insufficient) within {timeout}s "
+                f"(wanted {want or 'at least 1, settled'})")
+        time.sleep(poll)
 
 
 class ShardedBroker:
@@ -233,6 +366,11 @@ class ShardedBroker:
     def set_visibility_timeout(self, queue: str, timeout: float) -> None:
         self.shards[self.shard_for(queue)].set_visibility_timeout(
             queue, timeout)
+
+    def set_max_queue_depth(self, queue: str, depth: Optional[int]) -> None:
+        """Per-queue backpressure bound, applied on the queue's owning
+        shard (queues never span shards, so one shard is enough)."""
+        self.shards[self.shard_for(queue)].set_max_queue_depth(queue, depth)
 
     def heartbeat(self, consumer_id: str,
                   queues: Optional[Sequence[str]] = None) -> None:

@@ -41,6 +41,16 @@ full queue.
 Heartbeats: each worker pings ``broker.heartbeat(consumer_id, queues)``
 every ``heartbeat_interval`` seconds, so ``broker.stats["consumers"]``
 reports live consumers per queue across all processes.
+
+Execution engine: by default every WorkerPool routes its real fn-step
+tasks through the runtime's shared :class:`~repro.core.engine.
+ExecutionEngine` — workers become pure lease pumps (lease, submit, wait
+for per-task outcomes, ack), and the engine's deadline-based
+micro-batcher coalesces compatible tasks across get_many batches, across
+workers, and across queues into single fused device launches.  Pass
+``engine=None`` to keep the pre-engine behavior (per-worker, per-batch
+coalescing inside the worker thread), or an ExecutionEngine instance to
+share one scheduler between pools explicitly.
 """
 from __future__ import annotations
 
@@ -52,6 +62,7 @@ import time
 from typing import List, Optional, Sequence
 
 from repro.core import hierarchy as H
+from repro.core.engine import EngineClosed, ExecutionEngine
 from repro.core.queue import BrokerError, BrokerFull, Lease, Task
 from repro.core.resilience import RetryPolicy
 from repro.core.runtime import MerlinRuntime
@@ -69,7 +80,8 @@ class Worker(threading.Thread):
                  retry_policy: Optional[RetryPolicy] = None,
                  heartbeat_interval: float = 2.0,
                  throttle_backoff: float = 0.2,
-                 max_throttle_retries: int = 50):
+                 max_throttle_retries: int = 50,
+                 engine: Optional[ExecutionEngine] = None):
         super().__init__(daemon=True, name=f"merlin-worker-{worker_id}")
         self.runtime = runtime
         self.worker_id = worker_id
@@ -83,6 +95,7 @@ class Worker(threading.Thread):
         self.heartbeat_interval = heartbeat_interval
         self.throttle_backoff = throttle_backoff
         self.max_throttle_retries = max_throttle_retries
+        self.engine = engine
         # host-qualified: workers in different allocations (nodes) sharing
         # one broker must not collide in the heartbeat registry, or
         # stats["consumers"] undercounts the fleet
@@ -177,19 +190,71 @@ class Worker(threading.Thread):
             if reals:
                 if self.first_real_at is None:
                     self.first_real_at = time.monotonic()
-                try:
-                    self.runtime.execute_real_many([l.task for l in reals])
-                    self.stats["real"] += len(reals)
-                    acks.extend(l.tag for l in reals)
-                except Exception:
-                    # a task in the batch failed even under the runtime's
-                    # per-task fallback: re-run each lease individually so
-                    # ack/nack/retry accounting stays per-task
-                    for lease in reals:
-                        if self._run_one(lease, broker):
-                            acks.append(lease.tag)
+                acks.extend(self._execute_reals(reals, broker))
             if acks:
                 self._flush_acks(broker, acks)
+
+    def _execute_reals(self, reals: List[Lease], broker) -> List[str]:
+        """Run a lease batch's real tasks; returns the ackable tags.
+
+        Engine path (the default): fusable (parallel fn-step) tasks go to
+        the shared micro-batching scheduler and this thread waits for the
+        per-task outcomes — cross-worker fusion happens there, and a
+        failed task comes back as ITS handle's error while batch-mates
+        succeed.  Everything else — cmd steps, funnel stages, unknown
+        studies, or all tasks when ``engine=None`` — runs in-thread
+        (fusing within this lease batch only, per-lease fallback on
+        failure)."""
+        acks: List[str] = []
+        if self.engine is not None:
+            # only fusable work goes through the shared dispatcher; cmd
+            # steps and funnel stages stay in THIS thread, so a pool of N
+            # workers still runs N subprocess simulations concurrently and
+            # a slow cmd step cannot head-of-line-block fn-step batches
+            fusable, direct = [], []
+            for lease in reals:
+                (fusable if self.runtime.coalescable(lease.task)
+                 else direct).append(lease)
+            pendings = None
+            if fusable:
+                try:
+                    pendings = self.engine.submit_many(
+                        [l.task for l in fusable])
+                except EngineClosed:
+                    direct = reals  # pool tearing down: all in-thread
+            if direct:
+                acks.extend(self._execute_reals_inline(direct, broker))
+            if pendings is not None:
+                for lease, p in zip(fusable, pendings):
+                    # dispatch is deadline-bounded (max_wait_ms), so this
+                    # wait is short unless the device itself is busy
+                    p.wait()
+                    if isinstance(p.error, EngineClosed):
+                        continue  # never executed: lease expiry redelivers
+                    if p.error is None:
+                        self.stats["real"] += 1
+                        acks.append(lease.tag)
+                    else:
+                        self._record_failure(lease, broker)
+            return acks
+        return acks + self._execute_reals_inline(reals, broker)
+
+    def _execute_reals_inline(self, reals: List[Lease],
+                              broker) -> List[str]:
+        """The in-thread path: fuse within this lease batch only."""
+        acks: List[str] = []
+        try:
+            self.runtime.execute_real_many([l.task for l in reals])
+            self.stats["real"] += len(reals)
+            acks.extend(l.tag for l in reals)
+        except Exception:
+            # a task in the batch failed even under the runtime's
+            # per-task fallback: re-run each lease individually so
+            # ack/nack/retry accounting stays per-task
+            for lease in reals:
+                if self._run_one(lease, broker):
+                    acks.append(lease.tag)
+        return acks
 
     def _run_one(self, lease: Lease, broker) -> bool:
         """Per-lease dispatch with failure accounting; True if ackable."""
@@ -268,12 +333,25 @@ class WorkerPool:
 
     ``queues`` pins every worker in the pool to the named queues (None =
     all); ``batch`` sets the per-poll lease batch size.
+
+    ``engine`` selects the execution path for real fn-step tasks:
+
+    * ``"auto"`` (default) — the runtime's shared
+      :class:`~repro.core.engine.ExecutionEngine`: every pool on the
+      runtime feeds one micro-batching scheduler, so fusion spans
+      workers, pools, and queues.  ``engine_cfg`` (``max_batch``,
+      ``max_wait_ms``) parameterizes it when this pool creates it.
+    * ``None``/``False`` — the legacy in-thread path (coalescing only
+      within one worker's lease batch).
+    * an :class:`~repro.core.engine.ExecutionEngine` instance — share an
+      explicitly-constructed scheduler.
     """
 
     def __init__(self, runtime: MerlinRuntime, n_workers: int = 2,
                  failure_rate: float = 0.0, seed: int = 0,
                  queues: Optional[Sequence[str]] = None, batch: int = 1,
-                 retry_policy: Optional[RetryPolicy] = None):
+                 retry_policy: Optional[RetryPolicy] = None,
+                 engine="auto", engine_cfg: Optional[dict] = None):
         self.runtime = runtime
         self.stop_event = threading.Event()
         self.failure_rate = failure_rate
@@ -281,6 +359,12 @@ class WorkerPool:
         self.queues = queues
         self.batch = batch
         self.retry_policy = retry_policy
+        if engine == "auto":
+            self.engine = runtime.shared_engine(**(engine_cfg or {}))
+        elif engine in (None, False):
+            self.engine = None
+        else:
+            self.engine = engine.attach()
         self.workers: List[Worker] = []
         self.scale(n_workers)
 
@@ -292,26 +376,56 @@ class WorkerPool:
                        failure_rate=self.failure_rate,
                        seed=self.seed + base + i,
                        queues=self.queues, batch=self.batch,
-                       retry_policy=self.retry_policy)
+                       retry_policy=self.retry_policy,
+                       engine=self.engine)
             w.start()
             self.workers.append(w)
 
     def drain(self, timeout: float = 120.0, poll: float = 0.02) -> bool:
-        """Wait until the broker is idle (queue empty, nothing in flight)."""
+        """Wait until the broker is idle (queue empty, nothing in flight).
+
+        Once nothing is left to LEASE, kicks the engine's partial
+        micro-batch out so tail-end tasks (fewer than ``max_batch`` under
+        a long ``max_wait_ms``) execute now instead of waiting out the
+        batching deadline — or, worse, their visibility timeout.  While
+        the queue still holds work the engine is left alone: flushing
+        mid-stream would shred the micro-batches drain exists to finish,
+        not to defeat."""
         deadline = time.monotonic() + timeout
         while time.monotonic() < deadline:
             try:
                 if self.runtime.broker.idle():
                     return True
+                # gate on the LOCAL buffer count first: the extra qsize
+                # round-trip (it fans out per shard on a federation) is
+                # only worth paying when there is something to flush
+                if self.engine is not None and self.engine.buffered() > 0 \
+                        and self.runtime.broker.qsize() == 0:
+                    # only leased (buffered) tasks remain: no fuller
+                    # batch can form, so dispatch what is there
+                    self.engine.flush()
             except BrokerError:
                 pass  # server restarting/erroring: not idle, keep waiting
             time.sleep(poll)
         return False
 
     def shutdown(self) -> None:
+        if self.stop_event.is_set():
+            return  # idempotent: explicit shutdown + context-manager exit
+        # flush BEFORE stopping: workers may be parked on handles for a
+        # partially-filled micro-batch; the forced dispatch resolves them
+        # so every leased task is executed and acked, not stranded until
+        # its visibility timeout redelivers it.  Skipped while OTHER
+        # pools share the engine — force-dispatching THEIR accumulating
+        # batches would shred cross-pool coalescing, and our own workers'
+        # waits are deadline-bounded (max_wait_ms) regardless.
+        if self.engine is not None and self.engine.refs <= 1:
+            self.engine.flush()
         self.stop_event.set()
         for w in self.workers:
             w.join(timeout=5.0)
+        if self.engine is not None:
+            self.engine.detach()  # last pool out closes the dispatcher
 
     def stats(self) -> dict:
         agg = {"gen": 0, "real": 0, "failed": 0, "broker_retries": 0,
@@ -319,6 +433,8 @@ class WorkerPool:
         for w in self.workers:
             for k in agg:
                 agg[k] += w.stats[k]
+        if self.engine is not None:
+            agg["engine"] = self.engine.stats()
         return agg
 
     def __enter__(self):

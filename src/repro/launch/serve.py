@@ -12,15 +12,26 @@ RabbitMQ stand-in of paper Sec. 2-3; workers on other nodes connect with
   PYTHONPATH=src python -m repro.launch.serve broker-serve \
       [--backend mem|file] [--root DIR] [--host H] [--port P] \
       [--port-file PATH] [--visibility-timeout S] [--fairness priority|weighted] \
-      [--max-queue-depth N] [--put-timeout S] [--shard-of I/N]
+      [--max-queue-depth N] [--queue-depth Q=N ...] [--put-timeout S] \
+      [--shard-of I/N] [--announce PATH]
 
 ``--port 0`` picks a free port; ``--port-file`` atomically publishes the
 bound port for launcher scripts (examples/quickstart.py --two-process).
 ``--max-queue-depth``/``--put-timeout`` arm backpressure: producers block
-when a queue is full, then get a structured BrokerFull.  ``--shard-of I/N``
-labels this server as shard I of an N-server federation (clients connect
-with ``shard://h1:p1,...,hN:pN`` or ``MerlinRuntime(broker=[...])``; the
-label is bookkeeping for launchers — routing is client-side by queue hash).
+when a queue is full, then get a structured BrokerFull; ``--queue-depth
+Q=N`` (repeatable) bounds single named queues.  ``--shard-of I/N`` labels
+this server as shard I of an N-server federation (clients connect with
+``shard://h1:p1,...,hN:pN`` or ``MerlinRuntime(broker=[...])``; the label
+is bookkeeping for launchers — routing is client-side by queue hash).
+``--announce PATH`` atomically publishes the bound endpoint into a shared
+discovery file: clients assemble the whole federation from it with
+``make_broker("shard+file://PATH")`` instead of hand-building URL lists.
+
+Broker status (the ops view of any broker URL — per-queue depth, in-flight
+leases, and live consumers from the heartbeat registry):
+
+  PYTHONPATH=src python -m repro.launch.serve merlin-status \
+      --broker tcp://host:port [--watch S] [--json]
 """
 from __future__ import annotations
 
@@ -52,6 +63,10 @@ def broker_serve_main(argv=None):
                     help="backpressure bound: puts against a queue holding "
                          "this many pending tasks block, then raise "
                          "BrokerFull (relayed to clients as a typed error)")
+    ap.add_argument("--queue-depth", action="append", default=[],
+                    metavar="QUEUE=N",
+                    help="per-queue depth override (repeatable); takes "
+                         "precedence over --max-queue-depth for that queue")
     ap.add_argument("--put-timeout", type=float, default=5.0,
                     help="seconds a put may block on a full queue before "
                          "BrokerFull (keep below the clients' request "
@@ -61,7 +76,28 @@ def broker_serve_main(argv=None):
                     help="label this server as shard I of an N-endpoint "
                          "federation (advisory: sharding is client-side "
                          "queue-hash routing via shard:// URLs)")
+    ap.add_argument("--announce", default=None, metavar="PATH",
+                    help="atomically publish the bound endpoint into this "
+                         "shared discovery file; clients build the shard "
+                         "list with make_broker('shard+file://PATH')")
+    ap.add_argument("--announce-host", default=None, metavar="HOST",
+                    help="hostname to publish in the discovery file. "
+                         "Default: --host, except the wildcard binds "
+                         "(0.0.0.0/::) publish this machine's hostname — "
+                         "a wildcard is not dialable.  A loopback --host "
+                         "publishes loopback, which is correct: such a "
+                         "server only accepts local connections anyway; "
+                         "bind 0.0.0.0 (or set this flag) for "
+                         "cross-node federations")
     args = ap.parse_args(argv)
+
+    queue_depths = {}
+    for spec_s in args.queue_depth:
+        try:
+            q, _, n_s = spec_s.partition("=")
+            queue_depths[q] = int(n_s)
+        except ValueError:
+            ap.error(f"--queue-depth must be QUEUE=N, got {spec_s!r}")
 
     shard_of = None
     if args.shard_of is not None:
@@ -80,7 +116,8 @@ def broker_serve_main(argv=None):
     kw = dict(visibility_timeout=args.visibility_timeout,
               fairness=args.fairness,
               max_queue_depth=args.max_queue_depth,
-              put_timeout=args.put_timeout)
+              put_timeout=args.put_timeout,
+              queue_depths=queue_depths or None)
     if args.backend == "file":
         if not args.root:
             ap.error("--backend file requires --root DIR")
@@ -100,6 +137,17 @@ def broker_serve_main(argv=None):
         with open(tmp, "w") as f:
             f.write(str(server.port))
         os.rename(tmp, args.port_file)
+    if args.announce:
+        import socket as _socket
+        from repro.core.shardbroker import announce_endpoint
+        host = args.announce_host or args.host
+        if host in ("0.0.0.0", "::", ""):
+            # the wildcard bind address is not a connectable endpoint;
+            # publish something peers can actually dial
+            host = _socket.gethostname()
+        announce_endpoint(args.announce, f"tcp://{host}:{server.port}",
+                          index=None if shard_of is None else shard_of[0],
+                          total=None if shard_of is None else shard_of[1])
     try:
         server.serve_forever()
     except KeyboardInterrupt:
@@ -108,10 +156,99 @@ def broker_serve_main(argv=None):
         server.stop()
 
 
+def status_snapshot(broker) -> dict:
+    """One consistent-ish view of a broker: per-queue depth, in-flight
+    leases, and live consumers (heartbeat registry), plus the counter
+    totals.  Works against any Broker — local, NetBroker, ShardedBroker —
+    because it only uses protocol ops."""
+    stats = dict(broker.stats)
+    consumers = dict(stats.pop("consumers", None) or {})
+    inflight_by_q: dict = {}
+    for task, _age in broker.inflight_tasks():
+        inflight_by_q[task.queue] = inflight_by_q.get(task.queue, 0) + 1
+    queues = sorted(set(broker.queue_names())
+                    | set(inflight_by_q)
+                    | {q for q in consumers if q != "*"})
+    rows = {q: {"depth": broker.qsize((q,)),
+                "inflight": inflight_by_q.get(q, 0),
+                "consumers": consumers.get(q, 0)} for q in queues}
+    return {
+        "queues": rows,
+        "totals": {"depth": sum(r["depth"] for r in rows.values()),
+                   "inflight": sum(r["inflight"] for r in rows.values())},
+        # "*"-subscribed consumers (no named queues) can drain anything
+        "wildcard_consumers": consumers.get("*", 0),
+        "counters": {k: v for k, v in stats.items()
+                     if isinstance(v, (int, float))},
+    }
+
+
+def _render_status(snap: dict, broker_url: str) -> str:
+    lines = [f"broker {broker_url}"]
+    header = f"{'queue':<24} {'depth':>8} {'inflight':>9} {'consumers':>10}"
+    lines.append(header)
+    lines.append("-" * len(header))
+    for q, r in snap["queues"].items():
+        lines.append(f"{q:<24} {r['depth']:>8} {r['inflight']:>9} "
+                     f"{r['consumers']:>10}")
+    if not snap["queues"]:
+        lines.append("(no queues)")
+    t = snap["totals"]
+    lines.append(f"{'TOTAL':<24} {t['depth']:>8} {t['inflight']:>9} "
+                 f"{snap['wildcard_consumers']:>9}*")
+    c = snap["counters"]
+    lines.append("counters: " + ", ".join(
+        f"{k}={c[k]}" for k in sorted(c)))
+    return "\n".join(lines)
+
+
+def merlin_status_main(argv=None):
+    """``merlin-status``: the ROADMAP's 'surface consumers in a CLI' item —
+    one-shot (or --watch) per-queue depth/inflight/consumers against any
+    broker URL."""
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve merlin-status",
+        description="Show per-queue depth, in-flight leases, and live "
+                    "consumers for a broker.")
+    ap.add_argument("--broker", required=True,
+                    help="broker URL: tcp://host:port, file://dir, "
+                         "shard://h:p,h:p, or shard+file://announce-path")
+    ap.add_argument("--watch", type=float, default=None, metavar="S",
+                    help="refresh every S seconds until interrupted")
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable JSON instead of the table")
+    args = ap.parse_args(argv)
+
+    import time as _time
+    from repro.core.netbroker import make_broker
+    broker = make_broker(args.broker)
+    try:
+        while True:
+            snap = status_snapshot(broker)
+            if args.json:
+                print(json.dumps({"broker": args.broker, **snap}),
+                      flush=True)
+            else:
+                print(_render_status(snap, args.broker), flush=True)
+            if args.watch is None:
+                return
+            _time.sleep(args.watch)
+            if not args.json:
+                print()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        close = getattr(broker, "close", None)
+        if close is not None:
+            close()
+
+
 def main(argv=None):
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "broker-serve":
         return broker_serve_main(argv[1:])
+    if argv and argv[0] == "merlin-status":
+        return merlin_status_main(argv[1:])
     return llm_serve_main(argv)
 
 

@@ -232,7 +232,10 @@ def test_attach_with_different_hierarchy_cfg(tmp_path):
     # attaching runtime uses the DEFAULT config (bundle=1)
     rt2 = MerlinRuntime(broker=FileBroker(qdir), workspace=ws)
     done = []
-    rt2.register("sim", lambda ctx: done.append((ctx.lo, ctx.hi)))
+    # record per sub-range: the engine may fuse contiguous bundles into
+    # one invocation, but sub_ranges carries the payload-sized spans
+    rt2.register("sim", lambda ctx: done.extend(
+        tuple(r) for r in ctx.sub_ranges))
     rt2.attach(sid)
     with WorkerPool(rt2, n_workers=2):
         assert rt2.wait(sid, timeout=60)

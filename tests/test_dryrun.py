@@ -8,7 +8,19 @@ import sys
 
 import pytest
 
-from repro.launch.dryrun import _shape_bytes, collective_bytes
+# importing dryrun sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+# in THIS process (it must, before jax init, for its own `python -m` use).
+# Restore the env around the import: the suite's contract (conftest.py) is
+# that in-process tests see ONE device — leaking 512 would silently flip
+# every later-initializing jax test (e.g. the ensemble auto-mesh) into a
+# forced-multi-device process.
+_saved_xla_flags = os.environ.get("XLA_FLAGS")
+from repro.launch.dryrun import _shape_bytes, collective_bytes  # noqa: E402
+
+if _saved_xla_flags is None:
+    os.environ.pop("XLA_FLAGS", None)
+else:
+    os.environ["XLA_FLAGS"] = _saved_xla_flags
 
 HLO = """
 ENTRY main {

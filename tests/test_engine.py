@@ -1,0 +1,338 @@
+"""ExecutionEngine: cross-worker micro-batching, drain/shutdown flush
+semantics, poison isolation inside fused batches, engine lifecycle, and
+the multi-device shard_map dispatch equivalence (subprocess, forced
+8-device host)."""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ensemble as E
+from repro.core.bundler import Bundler
+from repro.core.engine import EngineClosed, ExecutionEngine
+from repro.core.hierarchy import HierarchyCfg
+from repro.core.queue import PRIORITY_REAL, new_task
+from repro.core.resilience import RetryPolicy
+from repro.core.runtime import MerlinRuntime, plan_stages
+from repro.core.spec import Step, StudySpec, expand_parameters
+from repro.core.worker import WorkerPool
+
+
+def _seed_study(rt: MerlinRuntime, study: str, spans, n_samples: int,
+                bundle: int, fn: str = "sim") -> None:
+    """Register a study and enqueue its leaf tasks directly (the resubmit
+    path): the stage counter expects exactly len(spans) bundles."""
+    spec = StudySpec(name=study, steps=[Step(name=fn, fn=fn)])
+    rt._specs[study] = spec
+    rt._stages[study] = plan_stages(spec)
+    rt._combos[study] = expand_parameters(spec)
+    rt._samples[study] = np.random.default_rng(0).random(
+        (n_samples, 3)).astype(np.float32)
+    rt.broker.put_many([
+        new_task("real", {"study": study, "stage": 0, "combo": 0,
+                          "n_samples": n_samples, "bundle": bundle,
+                          "fanout": 16, "samples": [lo, hi],
+                          "real_queue": "real", "gen_queue": "gen"},
+                 priority=PRIORITY_REAL, queue="real")
+        for lo, hi in spans])
+
+
+# ---------------------------------------------------------------------------
+# cross-worker coalescing
+# ---------------------------------------------------------------------------
+
+def test_cross_worker_fusion_exceeds_per_worker_batch(tmp_path):
+    """4 workers at batch 4 feeding one engine: at least one fused context
+    must span MORE leaf tasks than any single worker's lease batch — the
+    cross-get_many / cross-worker coalescing the per-worker path cannot
+    do."""
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    calls = []
+    rt.register("sim", lambda ctx: calls.append(list(map(tuple,
+                                                         ctx.sub_ranges))))
+    spans = [(i * 2, (i + 1) * 2) for i in range(16)]
+    _seed_study(rt, "xw", spans, n_samples=32, bundle=2)
+    with WorkerPool(rt, n_workers=4, batch=4,
+                    engine_cfg={"max_batch": 16, "max_wait_ms": 100}) as p:
+        assert p.drain(timeout=60)
+        eng_stats = p.stats()["engine"]
+    covered = sorted(r for call in calls for r in call)
+    assert covered == spans  # every leaf executed exactly once
+    assert max(len(c) for c in calls) > 4  # fused beyond one lease batch
+    assert eng_stats["max_batch_seen"] > 4
+    assert eng_stats["batches"] >= 1
+    # histogram and flush-reason accounting are coherent
+    assert sum(eng_stats["batch_hist"].values()) == eng_stats["batches"]
+    assert (eng_stats["size_flushes"] + eng_stats["deadline_flushes"]
+            + eng_stats["forced_flushes"]) == eng_stats["batches"]
+    assert eng_stats["executed"] == 16
+
+
+def test_engine_coalesces_across_queues(tmp_path):
+    """Tasks leased from different QUEUES but the same study/stage/combo
+    land in one buffer and fuse (compatibility is execution identity, not
+    queue identity)."""
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    calls = []
+    rt.register("sim", lambda ctx: calls.append(len(ctx.sub_ranges)))
+    spec = StudySpec(name="q2", steps=[Step(name="sim", fn="sim")])
+    rt._specs["q2"] = spec
+    rt._stages["q2"] = plan_stages(spec)
+    rt._combos["q2"] = expand_parameters(spec)
+    rt._samples["q2"] = np.zeros((8, 2), np.float32)
+    tasks = []
+    for i in range(4):  # alternate contiguous spans across two queues
+        tasks.append(new_task(
+            "real", {"study": "q2", "stage": 0, "combo": 0, "n_samples": 8,
+                     "bundle": 2, "fanout": 16, "samples": [i * 2, i * 2 + 2],
+                     "real_queue": "real", "gen_queue": "gen"},
+            priority=PRIORITY_REAL, queue="sims-a" if i % 2 else "sims-b"))
+    rt.broker.put_many(tasks)
+    with WorkerPool(rt, n_workers=2, batch=2, queues=("sims-a", "sims-b"),
+                    engine_cfg={"max_batch": 8, "max_wait_ms": 150}) as p:
+        assert p.drain(timeout=60)
+    assert sum(calls) == 4
+    assert max(calls) > 2  # spans from both queues fused into one launch
+
+
+# ---------------------------------------------------------------------------
+# drain / shutdown flush semantics
+# ---------------------------------------------------------------------------
+
+def test_drain_flushes_partial_microbatch(tmp_path):
+    """A partially-filled buffer under a HUGE max_wait must not strand
+    leased tasks: drain() forces the flush."""
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    done = []
+    rt.register("sim", lambda ctx: done.append((ctx.lo, ctx.hi)))
+    _seed_study(rt, "dr", [(0, 2), (2, 4), (4, 6)], 6, 2)
+    t0 = time.monotonic()
+    with WorkerPool(rt, n_workers=1, batch=4,
+                    engine_cfg={"max_batch": 64,
+                                "max_wait_ms": 60_000}) as p:
+        assert p.drain(timeout=30)
+        elapsed = time.monotonic() - t0
+    assert sorted(r for c in done for r in [c]) and len(done) >= 1
+    assert sum(hi - lo for lo, hi in done) == 6
+    assert elapsed < 20  # nowhere near the 60s batching deadline
+    assert rt.broker.idle()  # all acked, nothing left to expire
+
+
+def test_shutdown_flushes_partial_microbatch(tmp_path):
+    """shutdown() without a prior drain must also execute + ack the
+    buffered partial batch (not abandon the leases)."""
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    done = []
+    rt.register("sim", lambda ctx: done.extend(map(tuple, ctx.sub_ranges)))
+    _seed_study(rt, "sd", [(0, 2), (2, 4)], 4, 2)
+    pool = WorkerPool(rt, n_workers=1, batch=2,
+                      engine_cfg={"max_batch": 64, "max_wait_ms": 60_000})
+    # wait until both tasks are leased and submitted (buffer holds them)
+    deadline = time.monotonic() + 10
+    while time.monotonic() < deadline and rt.broker.qsize() > 0:
+        time.sleep(0.01)
+    pool.shutdown()
+    assert sorted(done) == [(0, 2), (2, 4)]
+    assert rt.broker.idle()  # acked on the way out, not left to expire
+
+
+# ---------------------------------------------------------------------------
+# poison isolation in fused cross-worker batches
+# ---------------------------------------------------------------------------
+
+def test_poison_in_fused_batch_dead_letters_alone(tmp_path):
+    """One poison task inside a cross-worker fused batch must dead-letter
+    by itself (retries exhausted -> acked away) while every sibling
+    executes and acks."""
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    done = []
+
+    def step(ctx):
+        if any(tuple(r) == (4, 6) for r in ctx.sub_ranges):
+            raise RuntimeError("poison")
+        done.extend(map(tuple, ctx.sub_ranges))
+
+    rt.register("sim", step)
+    spans = [(i * 2, (i + 1) * 2) for i in range(8)]
+    _seed_study(rt, "px", spans, 16, 2)
+    with WorkerPool(rt, n_workers=2, batch=4,
+                    retry_policy=RetryPolicy(max_retries=2),
+                    engine_cfg={"max_batch": 8, "max_wait_ms": 50}) as p:
+        assert p.drain(timeout=60)  # reaches idle => poison dead-lettered
+        stats = p.stats()
+    assert sorted(set(done)) == [s for s in spans if s != (4, 6)]
+    assert (4, 6) not in done
+    assert stats["failed"] >= 1  # the poison task's failures were recorded
+    assert rt.broker.idle()
+    # siblings completed exactly once each (once-markers all present)
+    for lo, hi in spans:
+        marked = rt.counters.once_exists(f"px/exec/s0/c0/{lo}_{hi}")
+        assert marked == ((lo, hi) != (4, 6))
+
+
+def test_cmd_and_funnel_tasks_bypass_engine(tmp_path):
+    """Only parallel fn-step stages are engine-fusable; cmd-step and
+    funnel tasks run in the worker's own thread (N workers = N concurrent
+    subprocesses), so a slow cmd step cannot head-of-line-block the
+    dispatcher."""
+    from repro.core.spec import Step, StudySpec
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    spec = StudySpec(name="mix", steps=[
+        Step(name="sim", cmd="true"),
+        Step(name="post", fn="post", depends=("sim_*",),
+             over_samples=False)])
+    rt._specs["mix"] = spec
+    rt._stages["mix"] = plan_stages(spec)
+    cmd_task = new_task("real", {"study": "mix", "stage": 0, "combo": 0,
+                                 "n_samples": 4, "bundle": 2, "fanout": 4,
+                                 "samples": [0, 2]})
+    funnel_task = new_task("real", {"study": "mix", "stage": 1, "combo": 0,
+                                    "n_samples": 4, "bundle": 2,
+                                    "fanout": 4, "samples": [0, 1]})
+    unknown = new_task("real", {"study": "nope", "stage": 0, "combo": 0,
+                                "samples": [0, 1]})
+    assert not rt.coalescable(cmd_task)
+    assert not rt.coalescable(funnel_task)
+    assert not rt.coalescable(unknown)
+    rt2 = MerlinRuntime(workspace=str(tmp_path / "w2"))
+    rt2.register("sim", lambda ctx: None)
+    spec2 = StudySpec(name="fn", steps=[Step(name="sim", fn="sim")])
+    rt2._specs["fn"] = spec2
+    rt2._stages["fn"] = plan_stages(spec2)
+    fn_task = new_task("real", {"study": "fn", "stage": 0, "combo": 0,
+                                "n_samples": 4, "bundle": 2, "fanout": 4,
+                                "samples": [0, 2]})
+    assert rt2.coalescable(fn_task)
+
+
+def test_base_exception_in_step_never_acks_unexecuted_siblings(tmp_path):
+    """A step raising a BaseException (SystemExit) must not let the
+    dispatcher resolve batch-mates as successes they never earned: every
+    task either executed (resolved None) or comes back as a failure for
+    redelivery — at-least-once survives."""
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    done = []
+
+    def step(ctx):
+        if any(tuple(r) == (2, 4) for r in ctx.sub_ranges):
+            raise SystemExit(1)  # not an Exception subclass
+        done.extend(map(tuple, ctx.sub_ranges))
+
+    rt.register("sim", step)
+    spans = [(0, 2), (2, 4), (4, 6), (6, 8)]
+    _seed_study(rt, "be", spans, 8, 2)
+    leases = rt.broker.get_many(4, timeout=1)
+    eng = ExecutionEngine(rt, max_batch=4, max_wait_ms=5)
+    pendings = eng.submit_many([l.task for l in leases])
+    for p in pendings:
+        assert p.wait(30)
+    by_span = {tuple(p.task.payload["samples"]): p for p in pendings}
+    assert isinstance(by_span[(2, 4)].error, SystemExit)
+    for span in ((0, 2), (4, 6), (6, 8)):
+        assert by_span[span].error is None  # executed via fallback
+        assert span in done
+    assert (2, 4) not in done
+    eng.close()
+    for lease in leases:
+        rt.broker.ack(lease.tag)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: shared engine, refcounts, closed-engine behavior
+# ---------------------------------------------------------------------------
+
+def test_shared_engine_refcount_across_pools(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    rt.register("sim", lambda ctx: None)
+    p1 = WorkerPool(rt, n_workers=1)
+    p2 = WorkerPool(rt, n_workers=1)
+    assert p1.engine is p2.engine  # one scheduler per runtime
+    p1.shutdown()
+    assert not p1.engine.closed  # p2 still attached
+    p2.shutdown()
+    assert p2.engine.closed  # last pool out closes the dispatcher
+    p3 = WorkerPool(rt, n_workers=1)  # a fresh engine is created
+    assert p3.engine is not p1.engine and not p3.engine.closed
+    p3.shutdown()
+
+
+def test_submit_to_closed_engine_raises(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    eng = ExecutionEngine(rt)
+    eng.close()
+    with pytest.raises(EngineClosed):
+        eng.submit(new_task("real", {}))
+
+
+def test_close_resolves_buffered_handles(tmp_path):
+    """close() executes the buffered batch (forced flush), so handles
+    resolve instead of hanging their waiters."""
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    done = []
+    rt.register("sim", lambda ctx: done.append((ctx.lo, ctx.hi)))
+    _seed_study(rt, "cl", [(0, 3)], 3, 3)
+    lease = rt.broker.get(timeout=1)
+    eng = ExecutionEngine(rt, max_batch=64, max_wait_ms=60_000)
+    pending = eng.submit(lease.task)
+    eng.close()
+    assert pending.done()
+    assert pending.error is None and done == [(0, 3)]
+    rt.broker.ack(lease.tag)
+
+
+# ---------------------------------------------------------------------------
+# multi-device shard_map dispatch (forced 8-device subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_mesh_dispatch_matches_single_device_bit_for_bit():
+    """The acceptance equivalence: shard_map dispatch over 8 forced host
+    devices is bit-for-bit identical to single-device execution for an
+    IEEE-exact simulator (and within last-ULP transcendental codegen
+    variance for the JAG stand-in), with compiles inside the bucketed
+    bound.  Runs in a subprocess because the in-process suite pins the
+    1-device default (tests/conftest.py)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root]
+        + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+    cfg = {"sizes": [32, 32, 16, 5]}
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.ensemble_throughput",
+         "--mesh-worker", json.dumps(cfg)],
+        capture_output=True, text=True, env=env, cwd=root, timeout=590)
+    assert proc.returncode == 0, proc.stderr[-1000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 8
+    assert out["bit_equal"] is True
+    assert out["jag_max_rel_diff"] <= 1e-3
+    # compile count: one trace per bucket per path, within the bound
+    for tag in ("exact_sharded", "jag_sharded", "exact_single",
+                "jag_single"):
+        assert out[tag]["traces"] <= out["bucket_bound"]
+    # the sharded streams actually used the mesh (32- and 16-buckets
+    # divide 8 devices; the 5->8 bucket does too)
+    assert out["exact_sharded"]["mesh_launches"] >= 3
+    assert out["exact_single"].get("mesh_launches", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# executor mesh plumbing that does not need a subprocess
+# ---------------------------------------------------------------------------
+
+def test_single_device_auto_mesh_is_none():
+    """On the suite's 1-device host, mesh='auto' degrades to exactly the
+    old single-device behavior."""
+    ex = E.EnsembleExecutor(lambda u, rng: {"v": u}, mesh="auto")
+    assert ex.mesh is None
+    assert ex.stats["devices"] == 1
+    out = ex.run_bundle(0, 3, np.zeros((3, 2), np.float32))
+    assert out["v"].shape == (3, 2)
+    assert ex.stats["mesh_launches"] == 0

@@ -300,18 +300,30 @@ def test_filebroker_contention_claims_exactly_once(tmp_path):
 @pytest.mark.slow
 def test_ensemble_bench_smoke(tmp_path):
     from benchmarks import ensemble_throughput as ET
+    from benchmarks.bench_schema import ENSEMBLE_SPEC, check_doc
     out = str(tmp_path / "BENCH_ensemble.json")
     r = ET.run(quick=True, out=out, workroot=str(tmp_path),
                n_tasks=6, max_bundle=8, sur_rows=32, sur_steps=25,
-               load_bundles=5)
+               load_bundles=5, xb_samples=48, xb_bundle=4,
+               mesh_tasks=2, mesh_bundle=16)
     import json
     with open(out) as f:
         on_disk = json.load(f)
     assert on_disk["meta"]["bench"] == "ensemble_throughput"
+    # the artifact the bench writes satisfies its documented schema
+    assert check_doc(on_disk, ENSEMBLE_SPEC, "smoke") == []
     for scen in ("ragged", "uniform"):
         row = r[scen]
         assert row["baseline"]["samples"] == row["fused"]["samples"]
         assert row["speedup"] > 0
         assert row["fused"]["traces"] <= row["bucket_bound"]
+    xb = r["engine_xbatch"]
+    assert xb["per_worker"]["samples_per_s"] > 0
+    assert xb["xbatch"]["samples_per_s"] > 0
+    assert xb["xbatch"]["engine"]["batches"] >= 1
+    md = r["mesh_dispatch"]
+    if "skipped" not in md:  # subprocess ran: equivalence must hold
+        assert md["bit_equal"] is True
+        assert md["jag_max_rel_diff"] <= 1e-3
     assert r["surrogate"]["prediction_max_abs_diff"] < 1e-2
     assert r["loads"]["warm_load_s"] <= r["loads"]["cold_load_s"]

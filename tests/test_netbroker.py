@@ -2,6 +2,7 @@
 server-held leases, and the two-process (no shared queue filesystem)
 deployment.  All socket tests carry the ``net`` marker so restricted
 sandboxes can deselect them with ``-m 'not net'``."""
+import json
 import os
 import subprocess
 import sys
@@ -260,3 +261,57 @@ def test_two_process_study_via_broker_serve(tmp_path):
     finally:
         proc.terminate()
         proc.wait(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# per-queue depth + status over the wire
+# ---------------------------------------------------------------------------
+
+@pytest.mark.net
+def test_per_queue_depth_override_over_the_wire(served_mem):
+    """set_max_queue_depth relays to the backend, and the resulting
+    BrokerFull comes back as the TYPED error for every client."""
+    from repro.core.queue import BrokerFull
+    server, nb = served_mem
+    server.backend._put_timeout = 0.2
+    nb.set_max_queue_depth("gen", 1)
+    nb.put(new_task("gen", {}, queue="gen"))
+    with pytest.raises(BrokerFull):
+        nb.put(new_task("gen", {}, queue="gen"))
+    nb.set_max_queue_depth("gen", None)  # clearing relays too
+    nb.put(new_task("gen", {}, queue="gen"))
+    assert nb.qsize(("gen",)) == 2
+
+
+@pytest.mark.net
+def test_merlin_status_snapshot_over_the_wire(served_mem):
+    """The merlin-status CLI's snapshot: depth / inflight / consumers per
+    queue against a remote broker."""
+    from repro.launch.serve import status_snapshot
+    server, nb = served_mem
+    nb.put_many([new_task("real", {}, queue="sims") for _ in range(3)])
+    nb.put(new_task("gen", {}, queue="gen"))
+    lease = nb.get(timeout=1, queues=("sims",))
+    nb.heartbeat("w0", ("sims",))
+    nb.heartbeat("w1", None)  # wildcard consumer
+    snap = status_snapshot(nb)
+    assert snap["queues"]["sims"] == {"depth": 2, "inflight": 1,
+                                      "consumers": 1}
+    assert snap["queues"]["gen"]["depth"] == 1
+    assert snap["wildcard_consumers"] == 1
+    assert snap["totals"] == {"depth": 3, "inflight": 1}
+    assert snap["counters"]["enqueued"] == 4
+    nb.ack(lease.tag)
+
+
+@pytest.mark.net
+def test_merlin_status_cli_renders_table(served_mem, capsys):
+    from repro.launch.serve import merlin_status_main
+    server, nb = served_mem
+    nb.put(new_task("real", {}, queue="sims"))
+    merlin_status_main(["--broker", server.address])
+    out = capsys.readouterr().out
+    assert "sims" in out and "depth" in out and "TOTAL" in out
+    merlin_status_main(["--broker", server.address, "--json"])
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["queues"]["sims"]["depth"] == 1

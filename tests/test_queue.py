@@ -222,3 +222,58 @@ def test_concurrent_claims_unique(tmp_path):
     [t.start() for t in ts]
     [t.join() for t in ts]
     assert sorted(got) == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# per-queue max_queue_depth overrides
+# ---------------------------------------------------------------------------
+
+def test_per_queue_depth_override(make_broker_kw):
+    """One queue bounded on an otherwise-unbounded broker: only it
+    backpressures."""
+    from repro.core.queue import BrokerFull
+    b = make_broker_kw(put_timeout=0.2, queue_depths={"gen": 2})
+    b.put(new_task("gen", {}, queue="gen"))
+    b.put(new_task("gen", {}, queue="gen"))
+    with pytest.raises(BrokerFull):
+        b.put(new_task("gen", {}, queue="gen"))
+    for _ in range(10):  # the sibling queue has no bound at all
+        b.put(new_task("real", {}, queue="sims"))
+    # draining frees capacity for the bounded queue again
+    lease = b.get(timeout=1, queues=("gen",))
+    b.ack(lease.tag)
+    b.put(new_task("gen", {}, queue="gen"))
+
+
+def test_per_queue_depth_tightens_and_clears(make_broker_kw):
+    """set_max_queue_depth overrides the global bound per queue; None
+    clears the override back to the global bound."""
+    from repro.core.queue import BrokerFull
+    b = make_broker_kw(put_timeout=0.2, max_queue_depth=5)
+    b.set_max_queue_depth("gen", 1)
+    b.put(new_task("gen", {}, queue="gen"))
+    with pytest.raises(BrokerFull):  # override (1) beats the global (5)
+        b.put(new_task("gen", {}, queue="gen"))
+    b.set_max_queue_depth("gen", None)
+    for _ in range(4):  # back on the global bound of 5
+        b.put(new_task("gen", {}, queue="gen"))
+    with pytest.raises(BrokerFull):
+        b.put(new_task("gen", {}, queue="gen"))
+
+
+def test_filebroker_depth_override_shared_across_instances(tmp_path):
+    """Overrides persist to .depth.json: a fresh instance and an already-
+    running one (after its sweep) both honor another instance's bound."""
+    from repro.core.queue import BrokerFull, FileBroker
+    root = str(tmp_path / "q")
+    b1 = FileBroker(root, put_timeout=0.2)
+    b2 = FileBroker(root, put_timeout=0.2)  # constructed BEFORE the override
+    b1.set_max_queue_depth("gen", 1)
+    b3 = FileBroker(root, put_timeout=0.2)  # constructed after: loads at init
+    b3.put(new_task("gen", {}, queue="gen"))
+    with pytest.raises(BrokerFull):
+        b3.put(new_task("gen", {}, queue="gen"))
+    # b2 learns the override via its sweep (idle() runs one)
+    b2.idle()
+    with pytest.raises(BrokerFull):
+        b2.put(new_task("gen", {}, queue="gen"))

@@ -468,3 +468,145 @@ def test_worker_retries_acks_after_broker_blip(tmp_path):
     covered = sorted(i for lo, hi in done for i in range(lo, hi))
     assert covered == list(range(16))
     assert broker._inner.stats["redelivered"] == 0
+
+
+# ---------------------------------------------------------------------------
+# per-queue depth routing + endpoint discovery file
+# ---------------------------------------------------------------------------
+
+@SHARD
+def test_sharded_set_max_queue_depth_routes_to_owner():
+    sb = _two_mem_shards(queue_shards={"gen": 0, "sims": 1})
+    for s in sb.shards:
+        s._put_timeout = 0.2
+    sb.set_max_queue_depth("gen", 1)
+    sb.put(new_task("gen", {}, queue="gen"))
+    with pytest.raises(BrokerFull):
+        sb.put(new_task("gen", {}, queue="gen"))
+    # the override landed ONLY on gen's owning shard
+    for _ in range(5):
+        sb.put(new_task("real", {}, queue="sims"))
+    assert sb.shards[0]._depth_queue == {"gen": 1}
+    assert sb.shards[1]._depth_queue == {}
+
+
+@SHARD
+def test_announce_and_read_endpoints_ordered(tmp_path):
+    """Announce entries merge (locked, atomic) and read back in shard-index
+    order regardless of announce order."""
+    from repro.core.shardbroker import announce_endpoint, read_endpoints
+    path = str(tmp_path / "shards.json")
+    announce_endpoint(path, "tcp://h2:2", index=1, total=2)
+    announce_endpoint(path, "tcp://h1:1", index=0, total=2)
+    urls, n = read_endpoints(path)
+    assert urls == ["tcp://h1:1", "tcp://h2:2"]
+    assert n == 2
+    # re-announcing (a restarted server on a new port) replaces its slot
+    announce_endpoint(path, "tcp://h2:22", index=1, total=2)
+    urls, _ = read_endpoints(path)
+    assert urls == ["tcp://h1:1", "tcp://h2:22"]
+
+
+@SHARD
+@NET
+def test_discover_drops_dead_endpoints_when_size_undeclared(tmp_path):
+    """Un-announced (dead) endpoints from a previous federation run must
+    not be assembled into the shard list when no size is declared."""
+    from repro.core.shardbroker import announce_endpoint, discover_shards
+    path = str(tmp_path / "shards.json")
+    live = BrokerServer(InMemoryBroker()).start()
+    try:
+        dead_url = "tcp://127.0.0.1:1"  # reserved port: nothing listens
+        announce_endpoint(path, dead_url)          # "previous run"
+        announce_endpoint(path, live.address)      # current run
+        sb = discover_shards(path, timeout=5.0)
+        assert len(sb.shards) == 1
+        sb.put(new_task("real", {"ok": 1}, queue="q"))
+        lease = sb.get(timeout=1, queues=("q",))
+        assert lease and lease.task.payload == {"ok": 1}
+        sb.ack(lease.tag)
+        sb.close()
+    finally:
+        live.stop()
+
+
+@SHARD
+def test_discover_shards_waits_for_declared_size(tmp_path):
+    from repro.core.queue import BrokerUnavailable
+    from repro.core.shardbroker import announce_endpoint, discover_shards
+    path = str(tmp_path / "shards.json")
+    announce_endpoint(path, "mem://", index=0, total=2)
+    # only 1 of the declared 2 endpoints announced: discovery times out
+    with pytest.raises(BrokerUnavailable):
+        discover_shards(path, timeout=0.3)
+    announce_endpoint(path, "mem://", index=1, total=2)
+    sb = discover_shards(path, timeout=1.0)
+    assert len(sb.shards) == 2
+
+
+@SHARD
+@NET
+def test_shard_file_url_end_to_end(tmp_path):
+    """broker-serve --announce + make_broker('shard+file://...'): clients
+    assemble the federation from the discovery file and route normally."""
+    from repro.core.shardbroker import announce_endpoint
+    servers = [BrokerServer(InMemoryBroker()).start() for _ in range(2)]
+    try:
+        path = str(tmp_path / "shards.json")
+        for i, s in enumerate(servers):
+            announce_endpoint(path, s.address, index=i, total=2)
+        sb = make_broker(f"shard+file://{path}")
+        assert isinstance(sb, ShardedBroker) and len(sb.shards) == 2
+        sb.put(new_task("real", {"x": 1}, queue="sims"))
+        lease = sb.get(timeout=1, queues=("sims",))
+        assert lease.task.payload == {"x": 1}
+        sb.ack(lease.tag)
+        assert sb.idle()
+        # routing agreement: the queue landed on the crc32-owned shard
+        owner = sb.shard_for("sims")
+        assert servers[owner].backend.stats["enqueued"] == 1
+        sb.close()
+    finally:
+        for s in servers:
+            s.stop()
+
+
+@SHARD
+@NET
+def test_broker_serve_announce_flag(tmp_path):
+    """The --announce flag publishes the bound endpoint for discovery."""
+    import json as _json
+    import os as _os
+    import subprocess as _subprocess
+    import sys as _sys
+    from repro.core.shardbroker import read_endpoints
+    root = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+    env = dict(_os.environ)
+    env["PYTHONPATH"] = _os.pathsep.join(
+        [_os.path.join(root, "src")]
+        + [p for p in env.get("PYTHONPATH", "").split(_os.pathsep) if p])
+    ann = str(tmp_path / "ann.json")
+    proc = _subprocess.Popen(
+        [_sys.executable, "-m", "repro.launch.serve", "broker-serve",
+         "--backend", "mem", "--port", "0", "--shard-of", "0/1",
+         "--announce", ann],
+        stdout=_subprocess.PIPE, text=True, env=env)
+    try:
+        line = _json.loads(proc.stdout.readline())
+        assert line["event"] == "listening"
+        deadline = time.monotonic() + 10
+        urls, n = [], None
+        while time.monotonic() < deadline and not urls:
+            urls, n = read_endpoints(ann)
+            time.sleep(0.05)
+        assert urls == [f"tcp://127.0.0.1:{line['port']}"]
+        assert n == 1
+        nb = make_broker(f"shard+file://{ann}")
+        nb.put(new_task("real", {"ok": 1}, queue="q"))
+        lease = nb.get(timeout=2, queues=("q",))
+        assert lease and lease.task.payload == {"ok": 1}
+        nb.ack(lease.tag)
+        nb.close()
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10)
