@@ -161,8 +161,8 @@ def _xbatch_run(simulator, spans, n_samples: int, bundle: int,
     from repro.core import ensemble as E
     from repro.core.bundler import Bundler
     from repro.core.queue import PRIORITY_REAL, new_task
-    from repro.core.runtime import MerlinRuntime, plan_stages
-    from repro.core.spec import Step, StudySpec, expand_parameters
+    from repro.core.runtime import MerlinRuntime
+    from repro.core.spec import Step, StudySpec
     from repro.core.worker import WorkerPool
 
     with tempfile.TemporaryDirectory(dir=workroot) as ws:
@@ -172,11 +172,10 @@ def _xbatch_run(simulator, spans, n_samples: int, bundle: int,
         rt.register("sim", ex.step_fn())
         spec = StudySpec(name="xb", steps=[Step(name="sim", fn="sim")])
         study = "xb-bench"
-        rt._specs[study] = spec
-        rt._stages[study] = plan_stages(spec)
-        rt._combos[study] = expand_parameters(spec)
         rng = np.random.default_rng(7)
-        rt._samples[study] = rng.random((n_samples, 5)).astype(np.float32)
+        rt.register_study(spec, study_id=study,
+                          samples=rng.random((n_samples, 5))
+                          .astype(np.float32))
         tasks = [new_task("real",
                           {"study": study, "stage": 0, "combo": 0,
                            "n_samples": n_samples, "bundle": bundle,

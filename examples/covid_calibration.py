@@ -1,11 +1,14 @@
-"""COVID-19 intervention study (paper Sec. 3.3): a two-phase cascading
-workflow on the epicast-like SEIR model.
+"""COVID-19 intervention study (paper Sec. 3.3): the calibrate->forecast
+cascade on the epicast-like SEIR model, as ONE declarative DAG
+(presim -> select -> forecast -> package; see examples/specs/
+covid_cascade.yaml for the YAML rendering).
 
-Phase 1 calibrates per-metro model parameters against "observed" case
+Calibration fits per-metro model parameters against "observed" case
 curves (metros are DAG parameters; parameter draws are samples).  The
-funnel step of phase 1 launches phase 2 from inside a worker: forecasts
-under three non-pharmaceutical-intervention scenarios per metro, packaged
-into quantile bands.
+per-metro select step publishes its ABC posterior as a named sample set,
+and the graph edge to the forecast nodes fans each metro out over three
+non-pharmaceutical-intervention scenarios — what used to be a phase-2
+``merlin run`` launched from inside a worker is now just edges.
 
 Run: PYTHONPATH=src python examples/covid_calibration.py
 """

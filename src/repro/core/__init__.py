@@ -8,7 +8,11 @@ from repro.core.queue import (Broker, BrokerError, BrokerFull,  # noqa
 from repro.core.netbroker import BrokerServer, NetBroker, make_broker  # noqa
 from repro.core.shardbroker import ShardedBroker  # noqa
 from repro.core.hierarchy import HierarchyCfg, root_task, expand  # noqa
-from repro.core.spec import StudySpec, Step  # noqa
+from repro.core.spec import StudySpec, Step, SpecError  # noqa
+from repro.core.dag import TaskDag, DagNode, DagEdge, compile_dag  # noqa
+from repro.core.handlers import (ExecutionHandler, FnStepHandler,  # noqa
+                                 SubprocessHandler, SchedulerJobHandler,
+                                 MockScheduler, HandlerError)
 from repro.core.runtime import MerlinRuntime  # noqa
 from repro.core.worker import Worker, WorkerPool  # noqa
 from repro.core.bundler import Bundler, missing_samples  # noqa

@@ -1,22 +1,33 @@
-"""The two-phase cascading calibrate->forecast archetype (paper Sec. 3.3).
+"""The cascading calibrate->forecast archetype (paper Sec. 3.3) — as ONE
+declarative DAG.
 
-Phase 1 ("calibration"): per metro area (a DAG *parameter*, Fig. 1), run a
-pre-ensemble of epidemic simulations over sampled parameter sets (*samples*)
-against observed case data; the funnel step scores fits, keeps the best
-parameter draws (an ABC-style posterior), and — from inside the worker
-task — enqueues phase 2.
+Per metro area (a DAG *parameter*, Fig. 1): a pre-ensemble of epidemic
+simulations over sampled parameter sets (*samples*) runs against observed
+case data; a per-metro selection step scores the fits and keeps the best
+draws (an ABC-style posterior); the posterior feeds per-(metro, scenario)
+forecast ensembles whose results a packaging step reduces to quantile
+bands.
 
-Phase 2 ("forecast"): for each metro, simulate the posterior draws under
-each intervention scenario and package the results (quantile bands) for
-analysis.  Parameters (metro x scenario) stay in the DAG; draws stay
-samples — the layering that made this workflow "both intuitive and
-scalable".
+What used to be "phase 2" — a nested ``runtime.run()`` launched from
+inside the selection worker — is now an ordinary pair of graph edges:
+
+    presim[METRO] ──→ select[METRO] ──→ forecast[METRO, SCENARIO]
+                                              │
+                                              └──→ package[METRO, SCENARIO]
+
+``select`` publishes its posterior as a named sample set scoped to its
+metro (``ctx.publish_samples("posterior", ...)``); the ``forecast`` nodes
+declare ``sample_set="posterior"`` and expand over the extra SCENARIO
+parameter, so the DAG compiler's edge matching fans one select instance
+out to all of its metro's scenario forecasts.  Parameters (metro x
+scenario) stay in the DAG; draws stay samples — the layering that made
+this workflow "both intuitive and scalable".
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -50,19 +61,26 @@ class CalibrationCascade:
         runtime.register("epi_forecast", self._forecast_sim_step)
         runtime.register("epi_package", self._package_step)
 
-    # -- phase 1 --------------------------------------------------------------
-    def start(self) -> str:
-        spec = StudySpec(
-            name="covid-calibrate",
+    def spec(self) -> StudySpec:
+        """The whole cascade as one multi-stage DAG spec."""
+        return StudySpec(
+            name="covid-cascade",
             steps=[
-                Step(name="presim", fn="epi_calibrate"),
-                Step(name="select", fn="epi_select", depends=("presim_*",),
-                     over_samples=False),
+                Step(name="presim", fn="epi_calibrate", params=("METRO",)),
+                Step(name="select", fn="epi_select", depends=("presim",),
+                     over_samples=False, params=("METRO",)),
+                Step(name="forecast", fn="epi_forecast", depends=("select",),
+                     params=("METRO", "SCENARIO"), sample_set="posterior"),
+                Step(name="package", fn="epi_package", depends=("forecast",),
+                     over_samples=False, params=("METRO", "SCENARIO")),
             ],
-            parameters={"METRO": sorted(self.observed)})
+            parameters={"METRO": sorted(self.observed),
+                        "SCENARIO": sorted(self.scenarios)})
+
+    def start(self) -> str:
         rng = np.random.default_rng(self.seed)
         samples = rng.uniform(0, 1, (self.n_calib, 6)).astype(np.float32)
-        return self.rt.run(spec, samples)
+        return self.rt.run(self.spec(), samples)
 
     def _bundler(self, phase: str, metro: str) -> Bundler:
         key = f"{phase}/{metro}"
@@ -80,7 +98,9 @@ class CalibrationCascade:
                       sub_ranges=ctx.sub_ranges)
 
     def _select_step(self, ctx) -> None:
-        """ABC selection + dynamic phase-2 launch (from inside a worker)."""
+        """ABC selection; publishing the posterior IS the phase-2 launch —
+        completion of this node unlocks the forecast edges, which iterate
+        the published set."""
         metro = ctx.combo["METRO"]
         data = self._bundler("calib", metro).load_all()
         obs = self.observed[metro]
@@ -89,21 +109,10 @@ class CalibrationCascade:
         posterior = data["inputs"][keep]
         self.results.setdefault(metro, {})["posterior_rmse"] = float(
             np.sqrt(err[keep].mean()))
-        # phase 2: scenarios are DAG parameters; posterior draws are samples
-        spec = StudySpec(
-            name=f"covid-forecast-{metro}",
-            steps=[
-                Step(name="forecast", fn="epi_forecast"),
-                Step(name="package", fn="epi_package", depends=("forecast_*",),
-                     over_samples=False),
-            ],
-            parameters={"SCENARIO": sorted(self.scenarios)},
-            variables={"METRO": metro})
-        ctx.runtime.run(spec, posterior.astype(np.float32))
+        ctx.publish_samples("posterior", posterior.astype(np.float32))
 
-    # -- phase 2 --------------------------------------------------------------
     def _forecast_sim_step(self, ctx) -> None:
-        metro = ctx.variables["METRO"]
+        metro = ctx.combo["METRO"]
         scen = ctx.combo["SCENARIO"]
         block = np.array(ctx.sample_block)
         comp = self.scenarios[scen]["compliance"]
@@ -112,7 +121,7 @@ class CalibrationCascade:
         ex.run_bundle(ctx.lo, ctx.hi, block, sub_ranges=ctx.sub_ranges)
 
     def _package_step(self, ctx) -> None:
-        metro = ctx.variables["METRO"]
+        metro = ctx.combo["METRO"]
         scen = ctx.combo["SCENARIO"]
         data = self._bundler(f"fc_{scen}", metro).load_all()
         daily = data["daily_cases"]

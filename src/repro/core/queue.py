@@ -83,6 +83,8 @@ import uuid
 from typing import (Any, Dict, Iterable, List, Optional, Protocol, Sequence,
                     Tuple, runtime_checkable)
 
+from repro.core import jsonstore
+
 
 class BrokerError(RuntimeError):
     """A broker operation failed (bad request, protocol violation)."""
@@ -327,11 +329,14 @@ class InMemoryBroker:
         self._consumers: Dict[str, Tuple[Optional[Tuple[str, ...]], float]] = {}
         self._stats = {"enqueued": 0, "acked": 0, "redelivered": 0,
                        "starvation_avoided": 0}
+        # per-queue ack counters feed merlin-status --watch throughput
+        self._acked_q: Dict[str, int] = {}
 
     @property
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             s = dict(self._stats)
+            s["acked_by_queue"] = dict(self._acked_q)
             s["consumers"] = self._consumers_view_locked()
         return s
 
@@ -525,15 +530,18 @@ class InMemoryBroker:
     def ack(self, tag: str) -> None:
         with self._lock:
             if tag in self._leased:
-                del self._leased[tag]
+                task, _ = self._leased.pop(tag)
                 self._stats["acked"] += 1
+                self._acked_q[task.queue] = self._acked_q.get(task.queue, 0) + 1
 
     def ack_many(self, tags: Iterable[str]) -> None:
         with self._lock:
             for tag in tags:
                 if tag in self._leased:
-                    del self._leased[tag]
+                    task, _ = self._leased.pop(tag)
                     self._stats["acked"] += 1
+                    self._acked_q[task.queue] = \
+                        self._acked_q.get(task.queue, 0) + 1
 
     def nack(self, tag: str) -> None:
         """Return a leased task to its queue immediately (worker failure).
@@ -644,15 +652,15 @@ class FileBroker:
         # per-queue depth overrides are shared queue state like .vt.json:
         # persisted to <root>/.depth.json so other instances' producers
         # honor them (reloaded on sweeps and, throttled, on puts)
-        self._depthconf_path = os.path.join(root, ".depth.json")
+        self._depthconf = jsonstore.SharedJsonConfig(
+            os.path.join(root, ".depth.json"))
         self._depth_queue: Dict[str, int] = {}
-        self._depthconf_sig: Optional[Tuple[int, int]] = None
         self._last_depth_check = 0.0
         self._load_depthconf()
         if queue_depths:
-            self._depth_queue.update(
-                {q: max(1, int(d)) for q, d in queue_depths.items()})
-            self._save_depthconf()
+            ov = {q: max(1, int(d)) for q, d in queue_depths.items()}
+            doc = self._depthconf.update(lambda d: d.update(ov))
+            self._depth_queue = {q: max(1, int(d)) for q, d in doc.items()}
         self._hb_ttl = heartbeat_ttl
         self._vt = visibility_timeout
         self._seq = itertools.count(int(time.time() * 1e3) % 10 ** 9)
@@ -660,9 +668,9 @@ class FileBroker:
         # per-queue visibility overrides are shared state like the queue
         # itself: persisted to <root>/.vt.json so every instance on this
         # directory (other processes' sweeps included) honors them
-        self._vtconf_path = os.path.join(root, ".vt.json")
+        self._vtconf = jsonstore.SharedJsonConfig(
+            os.path.join(root, ".vt.json"))
         self._vt_queue: Dict[str, float] = {}
-        self._vtconf_sig: Optional[Tuple[int, int]] = None
         self._load_vtconf()
         self._vt_queue.update(queue_timeouts or {})
         self._fairness = _check_fairness(fairness)
@@ -685,6 +693,9 @@ class FileBroker:
         self._saw_stale = False
         self._stats = {"enqueued": 0, "acked": 0, "redelivered": 0,
                        "stale_claims": 0, "starvation_avoided": 0}
+        # per-queue ack counters (this instance's acks only — each worker
+        # process counts its own work) feed merlin-status --watch rates
+        self._acked_q: Dict[str, int] = {}
         if queue_timeouts:  # constructor overrides are shared state too
             self._save_vtconf()
 
@@ -692,6 +703,7 @@ class FileBroker:
     def stats(self) -> Dict[str, Any]:
         with self._ilock:
             s = dict(self._stats)
+            s["acked_by_queue"] = dict(self._acked_q)
         s["consumers"] = self._consumers_view()
         return s
 
@@ -747,13 +759,12 @@ class FileBroker:
         ``<root>/.vt.json`` and reloaded when its signature changes.
         """
         with self._ilock:
-            # merge-before-write: another instance may have persisted its
-            # own overrides since we last read the file; rewriting only our
-            # local view would silently drop theirs (a tiny read-modify-
-            # write window remains — overrides are rare, idempotent config)
             self._load_vtconf()
             self._vt_queue[queue] = float(timeout)
             self._recompute_sweep_interval()
+        # locked merge via jsonstore: concurrent writers from any process
+        # serialize on the .vt.json.lock sidecar instead of dropping each
+        # other's overrides (the old unlocked merge-before-write race)
         self._save_vtconf()
 
     def _vt_for(self, queue: str) -> float:
@@ -764,34 +775,15 @@ class FileBroker:
         self._sweep_interval = min(1.0, max(0.05, min_vt / 4.0))
 
     def _save_vtconf(self) -> None:
-        tmp = os.path.join(self.root, f".tmp-vt-{uuid.uuid4().hex}")
-        try:
-            with open(tmp, "w") as f:
-                json.dump(self._vt_queue, f)
-            os.rename(tmp, self._vtconf_path)
-        except OSError:
-            return
-        try:
-            st = os.stat(self._vtconf_path)
-            self._vtconf_sig = (st.st_mtime_ns, st.st_size)
-        except OSError:
-            pass
+        """Merge this instance's overrides into the shared file (locked)."""
+        ov = {q: float(t) for q, t in self._vt_queue.items()}
+        self._vtconf.update(lambda doc: doc.update(ov))
 
     def _load_vtconf(self) -> None:
-        try:
-            st = os.stat(self._vtconf_path)
-        except OSError:
+        doc = self._vtconf.load_if_changed()
+        if doc is None:
             return
-        sig = (st.st_mtime_ns, st.st_size)
-        if sig == self._vtconf_sig:
-            return
-        try:
-            with open(self._vtconf_path) as f:
-                conf = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            return
-        self._vtconf_sig = sig
-        self._vt_queue.update({q: float(t) for q, t in conf.items()})
+        self._vt_queue.update({q: float(t) for q, t in doc.items()})
         # a shorter timeout learned from another instance must also tighten
         # OUR sweep cadence, or its leases expire up to a full (stale)
         # sweep interval late
@@ -805,46 +797,24 @@ class FileBroker:
         directory pick it up: their sweeps reload eagerly, their put paths
         re-check the file signature at most twice a second (an override is
         rare, slowly-changing config — ops, not dataplane).  The
-        read-merge-write is serialized ACROSS processes by an fcntl lock
-        on ``.depth.lock`` — .vt.json-style unlocked merging would let two
-        processes' concurrent overrides silently drop one (and, because
-        loads REPLACE the local view, later erase the loser's own bound).
+        read-merge-write is serialized ACROSS processes by jsonstore's
+        fcntl lock sidecar — unlocked merging would let two processes'
+        concurrent overrides silently drop one (and, because loads REPLACE
+        the local view, later erase the loser's own bound).
         """
-        import fcntl
+        def _apply(doc: Dict[str, Any]) -> None:
+            if depth is None:
+                doc.pop(queue, None)
+            else:
+                doc[queue] = max(1, int(depth))
         with self._ilock:
-            try:
-                lf = open(os.path.join(self.root, ".depth.lock"), "w")
-            except OSError:
-                lf = None  # degraded: process-local serialization only
-            try:
-                if lf is not None:
-                    fcntl.flock(lf, fcntl.LOCK_EX)
-                self._load_depthconf(force=True)  # merge-before-write
-                if depth is None:
-                    self._depth_queue.pop(queue, None)
-                else:
-                    self._depth_queue[queue] = max(1, int(depth))
-                self._save_depthconf()
-            finally:
-                if lf is not None:
-                    lf.close()  # releases the flock
+            doc = self._depthconf.update(_apply)
+            # the file is authoritative (REPLACE, not update): clearing an
+            # override must propagate, not resurrect
+            self._depth_queue = {q: max(1, int(d)) for q, d in doc.items()}
 
     def _depth_for(self, queue: str) -> Optional[int]:
         return self._depth_queue.get(queue, self._max_depth)
-
-    def _save_depthconf(self) -> None:
-        tmp = os.path.join(self.root, f".tmp-depth-{uuid.uuid4().hex}")
-        try:
-            with open(tmp, "w") as f:
-                json.dump(self._depth_queue, f)
-            os.rename(tmp, self._depthconf_path)
-        except OSError:
-            return
-        try:
-            st = os.stat(self._depthconf_path)
-            self._depthconf_sig = (st.st_mtime_ns, st.st_size)
-        except OSError:
-            pass
 
     def _load_depthconf(self, force: bool = False) -> None:
         """Reload overrides when the file changed (throttled to 0.5s unless
@@ -853,22 +823,11 @@ class FileBroker:
         if not force and now - self._last_depth_check < 0.5:
             return
         self._last_depth_check = now
-        try:
-            st = os.stat(self._depthconf_path)
-        except OSError:
+        doc = self._depthconf.load_if_changed()
+        if doc is None:
             return
-        sig = (st.st_mtime_ns, st.st_size)
-        if sig == self._depthconf_sig:
-            return
-        try:
-            with open(self._depthconf_path) as f:
-                conf = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            return
-        self._depthconf_sig = sig
-        # the file is authoritative (REPLACE, not update): clearing an
-        # override must propagate to every instance, not resurrect
-        self._depth_queue = {q: max(1, int(d)) for q, d in conf.items()}
+        # REPLACE semantics (see set_max_queue_depth)
+        self._depth_queue = {q: max(1, int(d)) for q, d in doc.items()}
 
     # -- paths ---------------------------------------------------------------
     def _qdir(self, queue: str) -> str:
@@ -1156,8 +1115,16 @@ class FileBroker:
             os.unlink(tag)
         except OSError:
             return
+        # claim tags are "<ts>__<queue>__<name>": recover the queue for the
+        # per-queue ack counter without touching the (deleted) payload
+        try:
+            queue = os.path.basename(tag).split("__", 2)[1]
+        except IndexError:
+            queue = ""
         with self._ilock:
             self._stats["acked"] += 1
+            if queue:
+                self._acked_q[queue] = self._acked_q.get(queue, 0) + 1
 
     def ack_many(self, tags: Iterable[str]) -> None:
         for tag in tags:

@@ -1,36 +1,46 @@
-"""The Merlin producer-consumer runtime.
+"""The Merlin producer-consumer runtime, DAG edition.
 
-``MerlinRuntime.run(spec, samples)`` is ``merlin run``: it expands the DAG
-parameters, splits the steps into *stages* (maximal chains of sample-
-parallel steps, separated by funnel steps), and enqueues ONE root
-generation task per (parameter-combo × first stage) — the near-non-blocking
-producer of Sec. 2.3.  Workers (core/worker.py) expand the hierarchy,
-execute sample bundles, and — Celery-chord-like, fully decentralized —
-whichever worker completes a stage's last bundle enqueues the next stage.
-Stage completion is tracked through crash-safe file counters (flock), so
-workers in different processes / "batch allocations" coordinate without a
-central orchestrator, and a restarted run resumes from the journal.
+``MerlinRuntime.run(spec, samples)`` is ``merlin run``: it compiles the
+spec into a :class:`~repro.core.dag.TaskDag` (arbitrary fan-in/fan-out,
+chain-fused sample-parallel nodes), persists the study + initial DAG
+state, and enqueues ONE root task per source node instance — the
+near-non-blocking producer of Sec. 2.3.  Workers (core/worker.py) expand
+the hierarchy and execute sample bundles through pluggable
+:mod:`~repro.core.handlers`; and — Celery-chord-like, fully
+decentralized — whichever worker completes a node instance's LAST bundle
+walks that instance's out-edges and unlocks exactly the children whose
+fan-in is now satisfied.  All coordination lives in crash-safe file
+counters / once-markers (flock / O_EXCL), so workers in different
+processes / "batch allocations" agree without a central orchestrator;
+the persisted ``<study>.dag.json`` (via :mod:`~repro.core.jsonstore`) is
+the human/status-tool view of the same progress, and
+``attach(study, resume=True)`` re-arms an interrupted study mid-graph.
 
-Steps may call ``ctx.runtime.run(...)`` — dynamic workflow creation from
-inside a step, which is how the COVID cascade launches its second phase.
+Dynamic data flow between nodes rides on *named sample sets*: a step may
+call ``ctx.publish_samples("posterior", arr)`` and a downstream step
+with ``sample_set: posterior`` iterates exactly that array — how the
+COVID cascade's phase 2 became an ordinary graph edge instead of a
+nested ``runtime.run()`` call from inside a worker.
 """
 from __future__ import annotations
 
 import fcntl
 import json
 import os
-import subprocess
 import threading
 import time
 import uuid
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import hierarchy as H
+from repro.core import jsonstore
+from repro.core.dag import DagNode, TaskDag, compile_dag
+from repro.core.handlers import ExecutionHandler, default_handlers
 from repro.core.queue import (PRIORITY_GEN, PRIORITY_REAL, InMemoryBroker,
                               Lease, Task, new_task)
-from repro.core.spec import Step, StudySpec, expand_parameters, substitute, topo_order
+from repro.core.spec import Step, StudySpec, expand_parameters, substitute
 
 
 # ---------------------------------------------------------------------------
@@ -121,33 +131,6 @@ class Journal:
 
 
 # ---------------------------------------------------------------------------
-# stage planning
-# ---------------------------------------------------------------------------
-
-def plan_stages(spec: StudySpec) -> List[Dict[str, Any]]:
-    """Split topologically-ordered steps into stages.
-
-    A run of consecutive ``over_samples`` steps forms one parallel stage
-    (executed as a chain inside each sample-bundle task); each funnel step
-    (over_samples=False or a ``_*`` dependency) is its own single stage.
-    """
-    stages: List[Dict[str, Any]] = []
-    chain: List[Step] = []
-    for s in topo_order(spec):
-        funnel = (not s.over_samples) or any(d.endswith("_*") for d in s.depends)
-        if funnel:
-            if chain:
-                stages.append({"kind": "parallel", "steps": chain})
-                chain = []
-            stages.append({"kind": "single", "steps": [s]})
-        else:
-            chain.append(s)
-    if chain:
-        stages.append({"kind": "parallel", "steps": chain})
-    return stages
-
-
-# ---------------------------------------------------------------------------
 # runtime
 # ---------------------------------------------------------------------------
 
@@ -161,6 +144,10 @@ class Context:
     ensemble executor's bundle files) iterate ``sub_ranges`` so the on-disk
     layout is identical to per-task execution; steps that ignore it simply
     process the whole block at once.
+
+    ``publish_samples`` feeds downstream DAG nodes: the array becomes a
+    named sample set scoped to this context's parameter combo, and any
+    node with a matching ``sample_set`` iterates it.
     """
 
     def __init__(self, runtime: "MerlinRuntime", study: str, combo: Dict,
@@ -180,12 +167,18 @@ class Context:
     def sample_block(self) -> Optional[np.ndarray]:
         return None if self.samples is None else self.samples[self.lo:self.hi]
 
+    def publish_samples(self, name: str, arr) -> None:
+        """Publish ``arr`` as sample set ``name`` scoped to this combo, for
+        downstream nodes declaring ``sample_set: name``."""
+        self.runtime.publish_samples(self.study, name, arr, scope=self.combo)
+
 
 class MerlinRuntime:
     def __init__(self, broker=None, workspace: str = "/tmp/merlin",
                  fns: Optional[Dict[str, Callable]] = None,
                  hierarchy: H.HierarchyCfg = H.HierarchyCfg(),
-                 real_queue: str = "real", gen_queue: str = "gen"):
+                 real_queue: str = "real", gen_queue: str = "gen",
+                 handlers: Optional[Dict[str, ExecutionHandler]] = None):
         # broker may be a Broker instance or a URL: "tcp://host:port"
         # connects to a remote BrokerServer (no shared filesystem for the
         # queue — the paper's cross-allocation RabbitMQ model), "file://dir"
@@ -203,22 +196,32 @@ class MerlinRuntime:
         # Sec. 2.2 routing: simulation (real) tasks and task-generation
         # tasks live on separate named queues so workers can subscribe to
         # either stream; priority still drains real before gen globally.
+        # A node's spec-level `queue:` annotation overrides real_queue for
+        # that node's leaf tasks.
         self.real_queue = real_queue
         self.gen_queue = gen_queue
         self.counters = FileCounter(os.path.join(workspace, "_counters"))
         self.journal = Journal(os.path.join(workspace, "_journal.jsonl"))
+        self.handlers: Dict[str, ExecutionHandler] = \
+            dict(handlers) if handlers is not None else default_handlers()
         # one micro-batching ExecutionEngine per runtime (lazily created):
         # every WorkerPool attached to this runtime feeds the same
         # scheduler, so fused launches span pools as well as workers
         self._engine = None
         self._engine_lock = threading.Lock()
         self._specs: Dict[str, StudySpec] = {}
-        self._stages: Dict[str, List[Dict]] = {}
-        self._samples: Dict[str, Optional[np.ndarray]] = {}
-        self._combos: Dict[str, List[Dict]] = {}
+        self._dags: Dict[str, TaskDag] = {}
+        self._samples: Dict[str, Optional[np.ndarray]] = {}  # "default" set
+        self._meta_n: Dict[str, int] = {}
+        self._pub_cache: Dict[str, np.ndarray] = {}  # published .npy files
 
     def register(self, name: str, fn: Callable) -> None:
         self.fns[name] = fn
+
+    def register_handler(self, handler: ExecutionHandler) -> None:
+        """Install (or replace) an execution handler under ``handler.name``;
+        specs select it per step via ``run: {handler: <name>}``."""
+        self.handlers[handler.name] = handler
 
     def shared_engine(self, **cfg):
         """This runtime's shared :class:`~repro.core.engine.ExecutionEngine`
@@ -242,16 +245,35 @@ class MerlinRuntime:
                     # build a fresh engine on the next spin
                     self._engine = None
 
+    # -- study registration --------------------------------------------------
+    def register_study(self, spec: StudySpec,
+                       study_id: Optional[str] = None,
+                       samples: Optional[np.ndarray] = None) -> str:
+        """Compile ``spec`` and make the study executable by THIS runtime
+        (fills the dag/spec/sample tables workers consult).  ``run()`` and
+        ``attach()`` both route through here; tests and benchmarks that
+        enqueue hand-built tasks use it directly instead of poking at
+        private tables."""
+        dag = compile_dag(spec)
+        for node in dag.nodes:  # fail fast, not at worker-execute time
+            self._handler_for(node)
+        study = study_id or f"{spec.name}-{uuid.uuid4().hex[:8]}"
+        self._specs[study] = spec
+        self._dags[study] = dag
+        self._samples[study] = samples
+        self._meta_n[study] = (len(samples) if samples is not None
+                               else self.hcfg.bundle)
+        return study
+
+    def dag(self, study: str) -> TaskDag:
+        return self._dags[study]
+
     # -- producer ("merlin run") -------------------------------------------
     def run(self, spec: StudySpec, samples: Optional[np.ndarray] = None,
             study_id: Optional[str] = None) -> str:
-        spec.validate()
-        study = study_id or f"{spec.name}-{uuid.uuid4().hex[:8]}"
-        self._specs[study] = spec
-        self._stages[study] = plan_stages(spec)
-        self._samples[study] = samples
-        self._combos[study] = expand_parameters(spec)
-        n = len(samples) if samples is not None else self.hcfg.bundle
+        study = self.register_study(spec, study_id, samples)
+        dag = self._dags[study]
+        n = self._meta_n[study]
         # persist study metadata so cross-process workers can reconstruct it
         meta = {"study": study, "n_samples": n,
                 "spec": _spec_to_dict(spec)}
@@ -267,104 +289,262 @@ class MerlinRuntime:
         with open(mpath + ".tmp", "w") as f:
             json.dump(meta, f)
         os.rename(mpath + ".tmp", mpath)
+        self._state_init(study, dag)
         self.journal.append({"ev": "study_start", "study": study, "n": n})
-        for ci in range(len(self._combos[study])):
-            self._enqueue_stage(study, 0, ci, n)
+        for nidx, iidx in dag.roots():
+            # claim the enqueue marker so a later (buggy or racing) unlock
+            # cannot double-enqueue a root
+            self.counters.once(f"{study}/s{nidx}/c{iidx}/enqueue")
+            self._enqueue_node(study, nidx, iidx)
         return study
 
-    def _enqueue_stage(self, study: str, stage_idx: int, combo_idx: int,
-                       n_samples: int) -> None:
-        stages = self._stages[study]
-        if stage_idx >= len(stages):
-            if self.counters.once(f"{study}/done/{combo_idx}"):
-                self.journal.append({"ev": "combo_done", "study": study,
-                                     "combo": combo_idx})
-            return
-        st = stages[stage_idx]
-        extra = {"study": study, "stage": stage_idx, "combo": combo_idx,
-                 "n_samples": n_samples,
-                 "real_queue": self.real_queue, "gen_queue": self.gen_queue}
-        if st["kind"] == "single":
+    def _enqueue_node(self, study: str, nidx: int, iidx: int) -> None:
+        """Put the root task for one node instance on the broker."""
+        dag = self._dags[study]
+        node = dag.nodes[nidx]
+        extra = {"study": study, "stage": nidx, "combo": iidx,
+                 "real_queue": node.queue or self.real_queue,
+                 "gen_queue": self.gen_queue}
+        if node.kind == "single":
+            extra["n_samples"] = 1
             self.broker.put(new_task("real", {**extra, "samples": [0, 1],
                                               "fanout": self.hcfg.max_fanout,
                                               "bundle": 1},
                                      priority=PRIORITY_REAL,
-                                     queue=self.real_queue))
+                                     queue=extra["real_queue"]))
         else:
-            self.broker.put(H.root_task(study, str(stage_idx), n_samples,
-                                        self.hcfg, extra=extra))
+            _, n = self._resolve_samples(study, node, node.instances[iidx])
+            extra["n_samples"] = n
+            self.broker.put(H.root_task(study, str(nidx), n, self.hcfg,
+                                        extra=extra))
+        self._state_set(study, nidx, iidx, "running")
         self.journal.append({"ev": "stage_start", "study": study,
-                             "stage": stage_idx, "combo": combo_idx})
+                             "stage": nidx, "combo": iidx})
 
-    def attach(self, study: str) -> str:
+    def attach(self, study: str, resume: bool = False) -> str:
         """Load a study persisted by another runtime instance's ``run()``.
 
-        Reconstructs the spec/stages/combos/samples from the workspace's
+        Reconstructs the spec/dag/samples from the workspace's
         ``<study>.study.json`` + ``<study>.samples.npy`` so workers in a
         fresh process (a new "batch allocation", or a restart after a
-        crash) can execute and advance a study they did not start.  Stage
-        counters and once-markers live on disk, so progress made before the
-        crash is preserved.
+        crash) can execute and advance a study they did not start.  Node
+        counters and once-markers live on disk, so progress made before
+        the crash is preserved mid-graph.  ``resume=True`` additionally
+        re-enqueues every ready-but-incomplete node instance (see
+        :meth:`resume`) so the study completes even if the queued tasks
+        died with the previous broker/process.
         """
         mpath = os.path.join(self.workspace, f"{study}.study.json")
         with open(mpath) as f:
             meta = json.load(f)
         spec = _spec_from_dict(meta["spec"])
-        spec.validate()
-        self._specs[study] = spec
-        self._stages[study] = plan_stages(spec)
-        self._combos[study] = expand_parameters(spec)
         spath = os.path.join(self.workspace, f"{study}.samples.npy")
-        self._samples[study] = np.load(spath) if os.path.exists(spath) else None
+        samples = np.load(spath) if os.path.exists(spath) else None
+        self.register_study(spec, study_id=study, samples=samples)
+        self._meta_n[study] = int(meta.get("n_samples",
+                                           self._meta_n[study]))
+        if resume:
+            self.resume(study)
         return study
 
-    # -- stage bookkeeping (called by workers at bundle completion) ---------
+    def resume(self, study: str) -> List[Tuple[int, int]]:
+        """Re-enqueue every node instance that is ready (all parents done)
+        but not itself complete.  Safe against duplicates: execution is
+        idempotent (done-markers), completed bundles of a half-finished
+        instance no-op, and the advance/enqueue once-markers keep the
+        unlock accounting exactly-once.  Returns the re-armed (node,
+        instance) pairs."""
+        dag = self._dags[study]
+        requeued: List[Tuple[int, int]] = []
+        for nidx, iidx in dag.all_instances():
+            if self.counters.once_exists(f"{study}/s{nidx}/c{iidx}/advance"):
+                continue  # already complete
+            parents = dag.instance_parents(nidx, iidx)
+            if not all(self.counters.once_exists(f"{study}/s{p}/c{q}/advance")
+                       for p, q in parents):
+                continue  # not unlocked yet: its parent's completion will do it
+            self.counters.once(f"{study}/s{nidx}/c{iidx}/enqueue")
+            self._enqueue_node(study, nidx, iidx)
+            requeued.append((nidx, iidx))
+        self.journal.append({"ev": "study_resume", "study": study,
+                             "requeued": len(requeued)})
+        return requeued
+
+    # -- persisted DAG state (the status view; counters are the truth) ------
+    def _state_path(self, study: str) -> str:
+        return os.path.join(self.workspace, f"{study}.dag.json")
+
+    def _state_init(self, study: str, dag: TaskDag) -> None:
+        doc = dag.to_doc()
+        doc["state"] = {f"s{n}/c{i}": {"status": "pending"}
+                        for n, i in dag.all_instances()}
+        jsonstore.save_json(self._state_path(study), doc)
+
+    def _state_set(self, study: str, nidx: int, iidx: int, status: str,
+                   epoch: Optional[int] = None) -> None:
+        def upd(doc: Dict[str, Any]) -> None:
+            ent = doc.setdefault("state", {}).setdefault(
+                f"s{nidx}/c{iidx}", {})
+            # never regress a terminal status: a resume's "running" update
+            # racing a completer's "done" must lose
+            if ent.get("status") == "done" and status != "done":
+                return
+            ent["status"] = status
+            if epoch is not None:
+                ent["epoch"] = epoch
+        jsonstore.update_json(self._state_path(study), upd)
+
+    def dag_state(self, study: str) -> Dict[str, Any]:
+        """The persisted per-node status/epoch view (for status tooling)."""
+        return jsonstore.load_json(self._state_path(study), default={})
+
+    def note_failure(self, task: Task) -> None:
+        """Mark a node instance failed in the persisted state (called when
+        the retry policy gives a task up as poison).  Advisory: the
+        counters still hold, and a later successful retry/crawl flips the
+        instance back to done."""
+        p = task.payload
+        try:
+            study, nidx, iidx = p["study"], p["stage"], p["combo"]
+        except (KeyError, TypeError):
+            return
+        if study in self._dags:
+            self._state_set(study, nidx, iidx, "failed")
+
+    # -- named sample sets ---------------------------------------------------
+    def publish_samples(self, study: str, name: str, arr,
+                        scope: Optional[Dict[str, Any]] = None) -> None:
+        """Persist ``arr`` as sample set ``name`` scoped to parameter values
+        ``scope``; downstream nodes with ``sample_set: name`` whose combo
+        matches the scope iterate it.  Crash-safe: the .npy commits via
+        atomic rename before the locked index update, and re-publishing
+        the same scope (a retried producer) replaces the entry."""
+        arr = np.asarray(arr)
+        scope = dict(scope or {})
+        fname = f"{study}.samples.{name}.{uuid.uuid4().hex[:8]}.npy"
+        path = os.path.join(self.workspace, fname)
+        with open(path + ".tmp", "wb") as f:
+            np.save(f, arr)
+        os.rename(path + ".tmp", path)
+        idx_path = os.path.join(self.workspace,
+                                f"{study}.samples_index.json")
+
+        def upd(doc: Dict[str, Any]) -> None:
+            ents = doc.setdefault(name, [])
+            ents[:] = [e for e in ents if e.get("combo") != scope]
+            ents.append({"combo": scope, "n": int(len(arr)), "file": fname})
+        jsonstore.update_json(idx_path, upd)
+        self.journal.append({"ev": "samples_published", "study": study,
+                             "set": name, "n": int(len(arr)),
+                             "scope": scope})
+
+    def _resolve_samples(self, study: str, node: DagNode,
+                         inst: Dict[str, Any]):
+        """The (array, count) a node instance iterates.  ``default`` is the
+        study-level array passed to ``run()``; anything else must have
+        been published (by an upstream step, before it completed) with a
+        scope matching this instance — most-specific scope wins."""
+        if node.sample_set == "default":
+            arr = self._samples.get(study)
+            n = len(arr) if arr is not None \
+                else self._meta_n.get(study, self.hcfg.bundle)
+            return arr, n
+        idx_path = os.path.join(self.workspace,
+                                f"{study}.samples_index.json")
+        ents = jsonstore.load_json(idx_path, default={}).get(
+            node.sample_set, [])
+        best = None
+        for e in ents:
+            sc = e.get("combo", {})
+            if all(k in inst and inst[k] == v for k, v in sc.items()):
+                if best is None or len(sc) > len(best.get("combo", {})):
+                    best = e
+        if best is None:
+            raise RuntimeError(
+                f"study {study}: no published sample set "
+                f"'{node.sample_set}' matches node '{node.name}' instance "
+                f"{inst!r} — the producing step must call "
+                f"ctx.publish_samples(...) before it completes")
+        fname = best["file"]
+        if fname not in self._pub_cache:
+            self._pub_cache[fname] = np.load(
+                os.path.join(self.workspace, fname))
+        return self._pub_cache[fname], int(best["n"])
+
+    # -- node bookkeeping (called by workers at bundle completion) ----------
     def _bundle_done(self, task: Task) -> None:
         p = task.payload
-        study, stage, combo = p["study"], p["stage"], p["combo"]
-        n = p["n_samples"]
-        st = self._stages[study][stage]
-        if st["kind"] == "single":
+        study, nidx, iidx = p["study"], p["stage"], p["combo"]
+        node = self._dags[study].nodes[nidx]
+        if node.kind == "single":
             expected = 1
         else:
             # bundle size from the task payload, not this process's hcfg: a
             # runtime that attach()ed with a different config must still
-            # agree with the producer on how many bundles complete a stage
+            # agree with the producer on how many bundles complete a node
+            n = p["n_samples"]
             expected = -(-n // p.get("bundle", self.hcfg.bundle))
-        key = f"{study}/s{stage}/c{combo}"
+        key = f"{study}/s{nidx}/c{iidx}"
         done = self.counters.incr(key)
         self.journal.append({"ev": "bundle_done", "study": study,
-                             "stage": stage, "combo": combo,
+                             "stage": nidx, "combo": iidx,
                              "lo": p["samples"][0], "hi": p["samples"][1]})
         if done >= expected and self.counters.once(key + "/advance"):
             self.journal.append({"ev": "stage_done", "study": study,
-                                 "stage": stage, "combo": combo})
-            self._enqueue_stage(study, stage + 1, combo, n)
+                                 "stage": nidx, "combo": iidx})
+            # completion epoch: a per-study monotonic clock shared by every
+            # process via the flock'd counter — orders node completions for
+            # the persisted state and the resume audit
+            epoch = self.counters.incr(f"{study}/epoch")
+            self._state_set(study, nidx, iidx, "done", epoch=epoch)
+            self._unlock_children(study, nidx, iidx)
+            if self.study_done(study) and self.counters.once(f"{study}/done"):
+                self.journal.append({"ev": "study_done", "study": study})
+
+    def _unlock_children(self, study: str, nidx: int, iidx: int) -> None:
+        """The generalized chord: walk this instance's out-edges; each child
+        instance counts satisfied parents in a crash-safe counter and the
+        worker that supplies the LAST one enqueues it (exactly once, via
+        the enqueue marker)."""
+        dag = self._dags[study]
+        for m, j in dag.instance_children(nidx, iidx):
+            need = dag.indegree(m, j)
+            got = self.counters.incr(f"{study}/unlock/s{m}/c{j}")
+            if got >= need and self.counters.once(f"{study}/s{m}/c{j}/enqueue"):
+                self._enqueue_node(study, m, j)
 
     # -- execution of a real task -------------------------------------------
-    @staticmethod
-    def _stage_fusable(stage: Dict[str, Any]) -> bool:
+    def _node_fusable(self, node: DagNode) -> bool:
         """THE fusion predicate — the single definition both the worker's
         engine-routing decision (``coalescable``) and the grouping in
         ``execute_real_many`` consult, so they can never disagree about
-        what fuses."""
-        return stage["kind"] == "parallel" and \
-            all(s.fn is not None for s in stage["steps"])
+        what fuses: sample-parallel nodes whose handler runs in-process."""
+        h = self.handlers.get(node.handler)
+        return node.kind == "parallel" and h is not None and h.inprocess
+
+    def _handler_for(self, node: DagNode) -> ExecutionHandler:
+        try:
+            return self.handlers[node.handler]
+        except KeyError:
+            raise RuntimeError(
+                f"node '{node.name}' wants handler '{node.handler}' but only "
+                f"{sorted(self.handlers)} are registered "
+                f"(runtime.register_handler adds more)")
 
     def coalescable(self, task: Task) -> bool:
         """True when this real task can profit from fused execution: its
-        stage is a parallel run of fn-steps (the only thing
-        ``execute_real_many`` fuses).  Cmd-step and funnel-stage tasks —
-        and tasks for studies this runtime does not know — return False:
-        workers run those in their own threads, where N workers really do
-        mean N concurrent subprocesses, instead of serializing them behind
-        the engine's single dispatcher."""
+        node is sample-parallel with an in-process handler (the only thing
+        ``execute_real_many`` fuses).  Subprocess/scheduler and funnel-node
+        tasks — and tasks for studies this runtime does not know — return
+        False: workers run those in their own threads, where N workers
+        really do mean N concurrent subprocesses, instead of serializing
+        them behind the engine's single dispatcher."""
         try:
             p = task.payload
-            stage = self._stages[p["study"]][p["stage"]]
+            node = self._dags[p["study"]].nodes[p["stage"]]
         except (KeyError, IndexError, TypeError):
             return False
-        return self._stage_fusable(stage)
+        return self._node_fusable(node)
 
     @staticmethod
     def _done_key(task: Task) -> str:
@@ -374,7 +554,7 @@ class MerlinRuntime:
 
     def execute_real(self, task: Task) -> None:
         p = task.payload
-        study, stage_idx, combo_idx = p["study"], p["stage"], p["combo"]
+        study, nidx, iidx = p["study"], p["stage"], p["combo"]
         lo, hi = p["samples"]
         done_key = self._done_key(task)
         # idempotency: if a previous attempt *completed*, redelivered or
@@ -383,15 +563,17 @@ class MerlinRuntime:
         if self.counters.once_exists(done_key):
             return
         spec = self._specs[study]
-        stage = self._stages[study][stage_idx]
-        combo = self._combos[study][combo_idx]
-        samples = self._samples.get(study)
-        wdir = os.path.join(self.workspace, study, f"s{stage_idx}",
-                            f"c{combo_idx}", f"b{lo:09d}_{hi:09d}")
+        node = self._dags[study].nodes[nidx]
+        inst = node.instances[iidx]
+        samples, _ = self._resolve_samples(study, node, inst)
+        wdir = os.path.join(self.workspace, study, f"s{nidx}",
+                            f"c{iidx}", f"b{lo:09d}_{hi:09d}")
         os.makedirs(wdir, exist_ok=True)
-        ctx = Context(self, study, combo, samples, lo, hi, wdir, spec.variables)
-        for step in stage["steps"]:
-            self._run_step(step, ctx)
+        ctx = Context(self, study, inst, samples, lo, hi, wdir,
+                      spec.variables)
+        handler = self._handler_for(node)
+        for step in node.steps:
+            handler.execute(self, step, ctx)
         # first completer wins; concurrent duplicates are safe (atomic writes)
         if self.counters.once(done_key):
             self._bundle_done(task)
@@ -400,18 +582,19 @@ class MerlinRuntime:
     def execute_real_many(self, tasks: Sequence[Task]) -> None:
         """Execute a batch of real tasks, fusing contiguous sample ranges.
 
-        Coalescing policy: tasks from the same (study, stage, combo) whose
-        [lo, hi) ranges are contiguous — the common case when one
+        Coalescing policy: tasks from the same (study, node, instance)
+        whose [lo, hi) ranges are contiguous — the common case when one
         ``get_many`` drains a generator's leaf burst — execute as ONE step
         invocation over the union range (one fused vmap launch for ensemble
         steps) with ``ctx.sub_ranges`` carrying the original spans.  Only
-        parallel stages made of fn-steps coalesce; cmd steps and funnel
-        stages keep per-task execution (their workspace layout is per-task).
-        Idempotency is unchanged: every original task still gets its own
-        once-marker and ``_bundle_done`` accounting, and already-done tasks
-        are skipped before grouping.  If a fused execution fails, the whole
-        group falls back to per-task ``execute_real`` so one poison task
-        cannot take down its batch-mates' progress or retry accounting.
+        sample-parallel nodes with in-process handlers coalesce; subprocess
+        / scheduler steps and funnel nodes keep per-task execution (their
+        workspace layout is per-task).  Idempotency is unchanged: every
+        original task still gets its own once-marker and ``_bundle_done``
+        accounting, and already-done tasks are skipped before grouping.
+        If a fused execution fails, the whole group falls back to per-task
+        ``execute_real`` so one poison task cannot take down its
+        batch-mates' progress or retry accounting.
         """
         groups: Dict[tuple, List[Task]] = {}
         singles: List[Task] = []
@@ -419,8 +602,8 @@ class MerlinRuntime:
             if self.counters.once_exists(self._done_key(t)):
                 continue  # a previous attempt completed: no-op, no re-count
             p = t.payload
-            stage = self._stages[p["study"]][p["stage"]]
-            if self._stage_fusable(stage):
+            node = self._dags[p["study"]].nodes[p["stage"]]
+            if self._node_fusable(node):
                 groups.setdefault((p["study"], p["stage"], p["combo"]),
                                   []).append(t)
             else:
@@ -455,47 +638,32 @@ class MerlinRuntime:
     def _execute_coalesced(self, run: List[Task]) -> None:
         """One fused execution covering a contiguous run of leaf tasks."""
         p = run[0].payload
-        study, stage_idx, combo_idx = p["study"], p["stage"], p["combo"]
+        study, nidx, iidx = p["study"], p["stage"], p["combo"]
         lo = p["samples"][0]
         hi = run[-1].payload["samples"][1]
         spec = self._specs[study]
-        stage = self._stages[study][stage_idx]
-        combo = self._combos[study][combo_idx]
-        samples = self._samples.get(study)
-        wdir = os.path.join(self.workspace, study, f"s{stage_idx}",
-                            f"c{combo_idx}", f"b{lo:09d}_{hi:09d}")
+        node = self._dags[study].nodes[nidx]
+        inst = node.instances[iidx]
+        samples, _ = self._resolve_samples(study, node, inst)
+        wdir = os.path.join(self.workspace, study, f"s{nidx}",
+                            f"c{iidx}", f"b{lo:09d}_{hi:09d}")
         os.makedirs(wdir, exist_ok=True)
-        ctx = Context(self, study, combo, samples, lo, hi, wdir,
+        ctx = Context(self, study, inst, samples, lo, hi, wdir,
                       spec.variables,
                       sub_ranges=[tuple(t.payload["samples"]) for t in run])
-        for step in stage["steps"]:
-            self._run_step(step, ctx)
-        for t in run:  # per-sub-bundle markers + stage accounting, as before
+        handler = self._handler_for(node)
+        for step in node.steps:
+            handler.execute(self, step, ctx)
+        for t in run:  # per-sub-bundle markers + node accounting, as before
             if self.counters.once(self._done_key(t)):
                 self._bundle_done(t)
 
-    def _run_step(self, step: Step, ctx: Context) -> None:
-        if step.fn is not None:
-            self.fns[step.fn](ctx)
-            return
-        env = {**ctx.variables, **ctx.combo,
-               "SAMPLE_LO": ctx.lo, "SAMPLE_HI": ctx.hi,
-               "WORKSPACE": ctx.workspace, "MERLIN_STUDY": ctx.study}
-        cmd = substitute(step.cmd or "", env)
-        script = os.path.join(ctx.workspace, f"{step.name}.sh")
-        with open(script, "w") as f:
-            f.write(cmd if cmd.endswith("\n") else cmd + "\n")
-        res = subprocess.run([step.shell, script], cwd=ctx.workspace,
-                             capture_output=True, text=True, timeout=600)
-        if res.returncode != 0:
-            raise RuntimeError(
-                f"step {step.name} failed rc={res.returncode}: {res.stderr[-500:]}")
-
     # -- completion ----------------------------------------------------------
     def study_done(self, study: str) -> bool:
-        n_combos = len(self._combos[study])
-        return all(self.counters.once_exists(f"{study}/done/{ci}")
-                   for ci in range(n_combos))
+        dag = self._dags[study]
+        return all(
+            self.counters.once_exists(f"{study}/s{n}/c{i}/advance")
+            for n, i in dag.all_instances())
 
     def wait(self, study: str, timeout: float = 120.0, poll: float = 0.02) -> bool:
         deadline = time.monotonic() + timeout
@@ -514,8 +682,13 @@ def _spec_to_dict(spec: StudySpec) -> Dict:
 
 
 def _spec_from_dict(d: Dict) -> StudySpec:
-    steps = [Step(**{**s, "depends": tuple(s.get("depends", ()))})
-             for s in d["steps"]]
+    steps = []
+    for s in d["steps"]:
+        kw = dict(s)
+        kw["depends"] = tuple(kw.get("depends", ()))
+        if kw.get("params") is not None:
+            kw["params"] = tuple(kw["params"])
+        steps.append(Step(**kw))
     return StudySpec(name=d["name"], steps=steps,
                      parameters=d.get("parameters", {}),
                      variables=d.get("variables", {}))

@@ -43,15 +43,14 @@ scheme — ``shard://host1:p1,host2:p2`` — or hand ``make_broker`` /
 """
 from __future__ import annotations
 
-import fcntl
 import json
 import os
 import time
-import uuid
 import zlib
 from typing import (Any, Dict, Iterable, List, Optional, Sequence, Tuple,
                     Union)
 
+from repro.core import jsonstore
 from repro.core.queue import (Broker, BrokerUnavailable, Lease, Task,
                               _normalize_queues, validate_queue_name)
 
@@ -73,30 +72,21 @@ def shard_index(queue: str, n_shards: int) -> int:
 #
 # Keys are shard indices (from ``--shard-of I/N``, which also sets "n", the
 # expected federation size discovery waits for) or the URL itself for
-# unindexed servers.  Writers merge under an fcntl lock on a sidecar .lock
-# file and publish via atomic rename, so concurrent servers on a shared
+# unindexed servers.  Writers merge through jsonstore.update_json (fcntl
+# lock sidecar + atomic rename), so concurrent servers on a shared
 # filesystem cannot tear or drop each other's entries.
 
 def announce_endpoint(path: str, url: str, index: Optional[int] = None,
                       total: Optional[int] = None) -> None:
     """Merge ``url`` into the announce file at ``path`` (atomic, locked)."""
-    d = os.path.dirname(os.path.abspath(path))
-    os.makedirs(d, exist_ok=True)
-    with open(path + ".lock", "w") as lf:
-        fcntl.flock(lf, fcntl.LOCK_EX)
-        try:
-            with open(path) as f:
-                doc = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            doc = {}
+    def _apply(doc: Dict[str, Any]) -> None:
         eps = doc.setdefault("endpoints", {})
         eps[url if index is None else str(index)] = url
         if total is not None:
             doc["n"] = int(total)
-        tmp = os.path.join(d, f".tmp-announce-{uuid.uuid4().hex}")
-        with open(tmp, "w") as f:
-            json.dump(doc, f)
-        os.rename(tmp, path)
+    # strict: a server that cannot announce is invisible to discovery —
+    # better to fail its startup loudly than hang join_shards at the client
+    jsonstore.update_json(path, _apply, strict=True)
 
 
 def read_endpoints(path: str) -> Tuple[List[str], Optional[int]]:
@@ -385,7 +375,8 @@ class ShardedBroker:
     def stats(self) -> Dict[str, Any]:
         """Counters summed across shards; per-queue ``consumers`` views
         merged (max per queue — the same consumer heartbeats every shard
-        it subscribes on); raw per-shard dicts under ``"shards"``."""
+        it subscribes on); dict-of-number counters (``acked_by_queue``)
+        summed per key; raw per-shard dicts under ``"shards"``."""
         merged: Dict[str, Any] = {}
         consumers: Dict[str, int] = {}
         per_shard: List[Dict[str, Any]] = []
@@ -395,8 +386,17 @@ class ShardedBroker:
             for q, c in (st.get("consumers") or {}).items():
                 consumers[q] = max(consumers.get(q, 0), int(c))
             for k, v in st.items():
-                if k != "consumers" and isinstance(v, (int, float)):
+                if k == "consumers":
+                    continue
+                if isinstance(v, (int, float)):
                     merged[k] = merged.get(k, 0) + v
+                elif isinstance(v, dict):
+                    # per-queue counter maps: each queue lives on exactly
+                    # one shard, but sum anyway (robust to resharding)
+                    sub = merged.setdefault(k, {})
+                    for q, c in v.items():
+                        if isinstance(c, (int, float)):
+                            sub[q] = sub.get(q, 0) + c
         merged["consumers"] = consumers
         merged["shards"] = per_shard
         return merged

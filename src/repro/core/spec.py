@@ -5,19 +5,38 @@ callables (``fn``), DAG dependencies (``depends``), Maestro-style
 *parameters* (expanded combinatorially into the DAG) and Merlin's *samples*
 (huge embarrassingly-parallel index space, expanded lazily through the task
 hierarchy — Fig. 1's layering).  ``$(NAME)`` tokens in commands are
-substituted from parameters / sample columns / workspace variables; a
-``depends: ["step_*"]`` entry is a funnel (wait for every parameter/sample
-instance, like Maestro).  Steps may carry a per-step ``shell`` and may call
-``merlin run`` again via the runtime handle — that is how the COVID cascade
-(Sec. 3.3) launches phase 2 from inside phase 1.
+substituted from parameters / sample columns / workspace variables.
+
+Dependency edges come in two flavors (both Maestro idioms):
+
+* ``depends: ["step"]`` — a *matched* edge: each instance of the child
+  waits for the parent instances whose parameter values agree on the
+  keys both steps share (per-combo when they share all keys, a broadcast
+  fan-out/fan-in when they share only some, everything when they share
+  none).
+* ``depends: ["step_*"]`` — a *funnel*: every instance of the child waits
+  for **all** instances of the parent.
+
+Steps may restrict which parameters they expand over (``params``), pick a
+named sample set (``sample_set`` — producers publish extra sets at run
+time via ``ctx.publish_samples``), route to a dedicated queue (``queue``),
+and choose an execution handler (``handler``: ``fn`` / ``subprocess`` /
+``scheduler`` — see ``core/handlers.py``).  The spec is *compiled* into an
+explicit task-graph IR by ``core/dag.py``; nothing here executes.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import yaml
+
+ZIP_SUFFIX = "%zip"
+
+
+class SpecError(ValueError):
+    """A study spec failed validation; the message says which rule and where."""
 
 
 @dataclasses.dataclass
@@ -29,6 +48,17 @@ class Step:
     depends: Tuple[str, ...] = ()
     over_samples: bool = True          # runs per sample bundle vs once
     max_retries: int = 2
+    params: Optional[Tuple[str, ...]] = None  # None = expand over all params
+    sample_set: str = "default"        # which published sample set to iterate
+    queue: Optional[str] = None        # route to a dedicated broker queue
+    handler: Optional[str] = None      # execution handler; None = infer
+    resources: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def handler_name(self) -> str:
+        """The effective handler: explicit, else inferred from fn/cmd."""
+        if self.handler:
+            return self.handler
+        return "fn" if self.fn else "subprocess"
 
 
 @dataclasses.dataclass
@@ -45,22 +75,60 @@ class StudySpec:
         raise KeyError(name)
 
     def validate(self) -> None:
-        names = {s.name for s in self.steps}
-        assert len(names) == len(self.steps), "duplicate step names"
+        """Raise :class:`SpecError` with a pointed message on the first
+        violated rule (duplicate names, unknown deps/params, cycles...)."""
+        if not self.steps:
+            raise SpecError(f"study '{self.name}' has no steps")
+        names = [s.name for s in self.steps]
+        seen = set()
+        for n in names:
+            if n in seen:
+                raise SpecError(
+                    f"study '{self.name}': duplicate step name '{n}'")
+            seen.add(n)
+        param_keys = set(strip_zip(k) for k in self.parameters)
         for s in self.steps:
+            if s.cmd is None and s.fn is None:
+                raise SpecError(
+                    f"step '{s.name}': needs either 'cmd' or 'fn'")
             for d in s.depends:
                 base = d[:-2] if d.endswith("_*") else d
-                assert base in names, f"{s.name} depends on unknown step {base}"
-        # no cycles
+                if base not in seen:
+                    raise SpecError(
+                        f"step '{s.name}': depends on unknown step '{base}' "
+                        f"(known steps: {', '.join(names)})")
+                if base == s.name:
+                    raise SpecError(
+                        f"step '{s.name}': depends on itself")
+            if s.params is not None:
+                for p in s.params:
+                    if p not in param_keys:
+                        raise SpecError(
+                            f"step '{s.name}': params names unknown "
+                            f"parameter '{p}' (declared: "
+                            f"{', '.join(sorted(param_keys)) or 'none'})")
         order = topo_order(self)
-        assert len(order) == len(self.steps)
+        if len(order) != len(self.steps):
+            stuck = [n for n in names if n not in {s.name for s in order}]
+            raise SpecError(
+                f"study '{self.name}': dependency cycle involving step(s) "
+                f"{', '.join(stuck)}")
+        zip_lens = {k: len(v) for k, v in self.parameters.items()
+                    if k.endswith(ZIP_SUFFIX)}
+        if zip_lens and len(set(zip_lens.values())) > 1:
+            raise SpecError(
+                f"study '{self.name}': %zip parameter lists must have equal "
+                f"lengths, got { {strip_zip(k): n for k, n in zip_lens.items()} }")
 
     @staticmethod
     def from_yaml(text: str) -> "StudySpec":
         doc = yaml.safe_load(text)
+        if not isinstance(doc, dict):
+            raise SpecError("spec document is not a YAML mapping")
         steps = []
         for sd in doc.get("study", []):
             run = sd.get("run", {})
+            params = run.get("params")
             steps.append(Step(
                 name=sd["name"],
                 cmd=run.get("cmd"),
@@ -69,6 +137,11 @@ class StudySpec:
                 depends=tuple(run.get("depends", ())),
                 over_samples=bool(run.get("samples", True)),
                 max_retries=int(run.get("max_retries", 2)),
+                params=tuple(params) if params is not None else None,
+                sample_set=str(run.get("sample_set", "default")),
+                queue=run.get("queue"),
+                handler=run.get("handler"),
+                resources=dict(run.get("resources", {}) or {}),
             ))
         params = {k: v["values"] if isinstance(v, dict) else v
                   for k, v in (doc.get("global.parameters") or {}).items()}
@@ -76,6 +149,10 @@ class StudySpec:
             name=doc.get("description", {}).get("name", "study"),
             steps=steps, parameters=params,
             variables=(doc.get("env", {}) or {}).get("variables", {}) or {})
+
+
+def strip_zip(key: str) -> str:
+    return key[:-len(ZIP_SUFFIX)] if key.endswith(ZIP_SUFFIX) else key
 
 
 def topo_order(spec: StudySpec) -> List[Step]:
@@ -92,22 +169,39 @@ def topo_order(spec: StudySpec) -> List[Step]:
                 pending.remove(s)
                 progressed = True
         if not progressed:
-            break  # cycle; validate() reports via length mismatch
+            break  # cycle; validate() reports the stuck steps
     return done
 
 
 def expand_parameters(spec: StudySpec) -> List[Dict[str, Any]]:
-    """Cartesian expansion of the DAG parameters (Fig. 1's discrete values).
+    """Expansion of the DAG parameters (Fig. 1's discrete values).
 
-    Lists of equal length expand zipped when declared via a ``%zip`` suffix
-    convention; otherwise full product.
+    Keys declared with a ``%zip`` suffix expand *zipped* — position i of
+    every zipped list forms one combo slice (lists must have equal
+    lengths) — and the zipped slice is crossed with the full Cartesian
+    product of the remaining keys.  The suffix is stripped in the
+    resulting combo dicts.
     """
     if not spec.parameters:
         return [{}]
-    keys = sorted(spec.parameters)
+    zip_keys = sorted(k for k in spec.parameters if k.endswith(ZIP_SUFFIX))
+    prod_keys = sorted(k for k in spec.parameters if not k.endswith(ZIP_SUFFIX))
+    zip_slices: List[Dict[str, Any]] = [{}]
+    if zip_keys:
+        lens = {len(spec.parameters[k]) for k in zip_keys}
+        if len(lens) > 1:
+            raise SpecError(
+                f"%zip parameter lists must have equal lengths, got "
+                f"{ {strip_zip(k): len(spec.parameters[k]) for k in zip_keys} }")
+        n = lens.pop()
+        zip_slices = [{strip_zip(k): spec.parameters[k][i] for k in zip_keys}
+                      for i in range(n)]
     combos = []
-    for vals in itertools.product(*(spec.parameters[k] for k in keys)):
-        combos.append(dict(zip(keys, vals)))
+    for zs in zip_slices:
+        for vals in itertools.product(*(spec.parameters[k] for k in prod_keys)):
+            combo = dict(zs)
+            combo.update(zip(prod_keys, vals))
+            combos.append(combo)
     return combos
 
 

@@ -197,20 +197,25 @@ class Worker(threading.Thread):
     def _execute_reals(self, reals: List[Lease], broker) -> List[str]:
         """Run a lease batch's real tasks; returns the ackable tags.
 
-        Engine path (the default): fusable (parallel fn-step) tasks go to
-        the shared micro-batching scheduler and this thread waits for the
-        per-task outcomes — cross-worker fusion happens there, and a
-        failed task comes back as ITS handle's error while batch-mates
-        succeed.  Everything else — cmd steps, funnel stages, unknown
-        studies, or all tasks when ``engine=None`` — runs in-thread
-        (fusing within this lease batch only, per-lease fallback on
-        failure)."""
+        Engine path (the default): fusable tasks — sample-parallel nodes
+        whose :class:`~repro.core.handlers.ExecutionHandler` is
+        in-process — go to the shared micro-batching scheduler and this
+        thread waits for the per-task outcomes: cross-worker fusion
+        happens there, and a failed task comes back as ITS handle's error
+        while batch-mates succeed.  Everything else — subprocess and
+        scheduler-job handlers, funnel nodes, unknown studies, or all
+        tasks when ``engine=None`` — runs in-thread (fusing within this
+        lease batch only, per-lease fallback on failure).  The worker
+        never inspects fn vs cmd itself: ``runtime.coalescable`` consults
+        the node's handler, so new handlers slot in without touching
+        this dispatch."""
         acks: List[str] = []
         if self.engine is not None:
-            # only fusable work goes through the shared dispatcher; cmd
-            # steps and funnel stages stay in THIS thread, so a pool of N
-            # workers still runs N subprocess simulations concurrently and
-            # a slow cmd step cannot head-of-line-block fn-step batches
+            # only fusable work goes through the shared dispatcher;
+            # out-of-process handlers (subprocess, scheduler jobs) and
+            # funnel nodes stay in THIS thread, so a pool of N workers
+            # still runs N subprocess simulations concurrently and a slow
+            # command step cannot head-of-line-block fn-step batches
             fusable, direct = [], []
             for lease in reals:
                 (fusable if self.runtime.coalescable(lease.task)
@@ -277,6 +282,10 @@ class Worker(threading.Thread):
                 broker.nack(lease.tag)
             else:
                 broker.ack(lease.tag)  # poison: give up, leave to crawler
+                if lease.task.kind == "real":
+                    # surface the give-up in the persisted DAG state so
+                    # merlin-status shows the node as failed, not running
+                    self.runtime.note_failure(lease.task)
         except BrokerError:
             # lease expiry redelivers with retries bumped — same outcome
             self.stats["broker_retries"] += 1
@@ -396,14 +405,24 @@ class WorkerPool:
             try:
                 if self.runtime.broker.idle():
                     return True
-                # gate on the LOCAL buffer count first: the extra qsize
-                # round-trip (it fans out per shard on a federation) is
-                # only worth paying when there is something to flush
-                if self.engine is not None and self.engine.buffered() > 0 \
-                        and self.runtime.broker.qsize() == 0:
-                    # only leased (buffered) tasks remain: no fuller
-                    # batch can form, so dispatch what is there
-                    self.engine.flush()
+                # gate on the LOCAL buffer count first: the extra qsize/
+                # inflight round-trips (they fan out per shard on a
+                # federation) are only worth paying when there is
+                # something to flush
+                if self.engine is not None:
+                    buf = self.engine.buffered()
+                    # flush only when every outstanding lease has reached
+                    # the buffer (inflight == buffered): a worker that has
+                    # leased tasks (qsize already 0) but not yet submitted
+                    # them is about to make the batch FULLER — flushing
+                    # around it would shred the very micro-batch drain
+                    # exists to finish.  Leasing moves a task from ready
+                    # to in-flight atomically, so this check is race-free;
+                    # stale foreign leases merely defer to the engine's
+                    # own deadline flush.
+                    if buf > 0 and self.runtime.broker.qsize() == 0 \
+                            and self.runtime.broker.inflight() <= buf:
+                        self.engine.flush()
             except BrokerError:
                 pass  # server restarting/erroring: not idle, keep waiting
             time.sleep(poll)

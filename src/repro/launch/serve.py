@@ -28,10 +28,21 @@ discovery file: clients assemble the whole federation from it with
 ``make_broker("shard+file://PATH")`` instead of hand-building URL lists.
 
 Broker status (the ops view of any broker URL — per-queue depth, in-flight
-leases, and live consumers from the heartbeat registry):
+leases, and live consumers from the heartbeat registry).  With ``--watch``
+it keeps history between polls and derives per-queue throughput (acked
+tasks/s) from the ``acked_by_queue`` counter deltas; ``--json`` turns the
+watch into a machine-readable stream, one snapshot object per line:
 
   PYTHONPATH=src python -m repro.launch.serve merlin-status \
       --broker tcp://host:port [--watch S] [--json]
+
+Spec validation (load + compile every workflow spec into its task DAG,
+reporting the first structural error — cycles, unknown dependencies,
+unequal %zip lists, unsatisfiable edges; CI runs this over
+examples/specs/*.yaml):
+
+  PYTHONPATH=src python -m repro.launch.serve merlin-validate \
+      examples/specs/*.yaml [--json]
 """
 from __future__ import annotations
 
@@ -39,6 +50,7 @@ import argparse
 import json
 import os
 import sys
+from typing import Optional
 
 
 def broker_serve_main(argv=None):
@@ -180,32 +192,68 @@ def status_snapshot(broker) -> dict:
         "wildcard_consumers": consumers.get("*", 0),
         "counters": {k: v for k, v in stats.items()
                      if isinstance(v, (int, float))},
+        # per-queue ack totals: the watch loop differences consecutive
+        # snapshots into tasks/s
+        "acked_by_queue": {q: int(c) for q, c
+                           in (stats.get("acked_by_queue") or {}).items()
+                           if isinstance(c, (int, float))},
     }
 
 
 def _render_status(snap: dict, broker_url: str) -> str:
+    rates = (snap.get("rates") or {}).get("tasks_per_s")
     lines = [f"broker {broker_url}"]
     header = f"{'queue':<24} {'depth':>8} {'inflight':>9} {'consumers':>10}"
+    if rates is not None:
+        header += f" {'tasks/s':>9}"
     lines.append(header)
     lines.append("-" * len(header))
-    for q, r in snap["queues"].items():
-        lines.append(f"{q:<24} {r['depth']:>8} {r['inflight']:>9} "
-                     f"{r['consumers']:>10}")
-    if not snap["queues"]:
+    qnames = sorted(set(snap["queues"]) | set(rates or {}))
+    for q in qnames:
+        r = snap["queues"].get(q, {"depth": 0, "inflight": 0, "consumers": 0})
+        row = (f"{q:<24} {r['depth']:>8} {r['inflight']:>9} "
+               f"{r['consumers']:>10}")
+        if rates is not None:
+            row += f" {rates.get(q, 0.0):>9.1f}"
+        lines.append(row)
+    if not qnames:
         lines.append("(no queues)")
     t = snap["totals"]
-    lines.append(f"{'TOTAL':<24} {t['depth']:>8} {t['inflight']:>9} "
-                 f"{snap['wildcard_consumers']:>9}*")
+    total = (f"{'TOTAL':<24} {t['depth']:>8} {t['inflight']:>9} "
+             f"{snap['wildcard_consumers']:>9}*")
+    if rates is not None:
+        total += f" {snap['rates']['total_tasks_per_s']:>9.1f}"
+    lines.append(total)
     c = snap["counters"]
     lines.append("counters: " + ", ".join(
         f"{k}={c[k]}" for k in sorted(c)))
     return "\n".join(lines)
 
 
+def watch_rates(prev: Optional[dict], prev_t: float, snap: dict,
+                now: float) -> Optional[dict]:
+    """Per-queue throughput between two snapshots: difference the
+    ``acked_by_queue`` counters and divide by the wall-clock interval.
+    None on the first poll (no history yet).  Negative deltas (a broker
+    restart reset its counters) clamp to zero rather than reporting
+    nonsense."""
+    if prev is None:
+        return None
+    dt = max(now - prev_t, 1e-9)
+    cur = snap.get("acked_by_queue") or {}
+    old = prev.get("acked_by_queue") or {}
+    per_q = {q: max(0, cur.get(q, 0) - old.get(q, 0)) / dt
+             for q in sorted(set(cur) | set(old))}
+    return {"interval_s": round(dt, 3),
+            "tasks_per_s": {q: round(r, 2) for q, r in per_q.items()},
+            "total_tasks_per_s": round(sum(per_q.values()), 2)}
+
+
 def merlin_status_main(argv=None):
     """``merlin-status``: the ROADMAP's 'surface consumers in a CLI' item —
     one-shot (or --watch) per-queue depth/inflight/consumers against any
-    broker URL."""
+    broker URL.  --watch keeps history between polls and adds a per-queue
+    throughput column from the acked-counter deltas."""
     ap = argparse.ArgumentParser(
         prog="repro.launch.serve merlin-status",
         description="Show per-queue depth, in-flight leases, and live "
@@ -214,17 +262,26 @@ def merlin_status_main(argv=None):
                     help="broker URL: tcp://host:port, file://dir, "
                          "shard://h:p,h:p, or shard+file://announce-path")
     ap.add_argument("--watch", type=float, default=None, metavar="S",
-                    help="refresh every S seconds until interrupted")
+                    help="refresh every S seconds until interrupted; each "
+                         "refresh reports tasks/s per queue since the "
+                         "previous poll")
     ap.add_argument("--json", action="store_true",
-                    help="emit machine-readable JSON instead of the table")
+                    help="emit machine-readable JSON instead of the table "
+                         "(with --watch: a stream, one object per line)")
     args = ap.parse_args(argv)
 
     import time as _time
     from repro.core.netbroker import make_broker
     broker = make_broker(args.broker)
+    prev, prev_t = None, 0.0
     try:
         while True:
             snap = status_snapshot(broker)
+            now = _time.monotonic()
+            rates = watch_rates(prev, prev_t, snap, now)
+            if rates is not None:
+                snap["rates"] = rates
+            prev, prev_t = snap, now
             if args.json:
                 print(json.dumps({"broker": args.broker, **snap}),
                       flush=True)
@@ -243,12 +300,55 @@ def merlin_status_main(argv=None):
             close()
 
 
+def merlin_validate_main(argv=None):
+    """``merlin-validate``: load each workflow spec and compile it into its
+    task DAG, surfacing structural errors (cycles, unknown dependencies,
+    unequal %zip lists, unsatisfiable edges) without executing anything.
+    Exit status 1 if any spec fails — CI gates on it."""
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve merlin-validate",
+        description="Validate workflow spec files by compiling them into "
+                    "task DAGs.")
+    ap.add_argument("specs", nargs="+", metavar="SPEC.yaml",
+                    help="YAML workflow spec files to validate")
+    ap.add_argument("--json", action="store_true",
+                    help="one JSON result object per spec")
+    args = ap.parse_args(argv)
+
+    from repro.core.dag import compile_dag
+    from repro.core.spec import SpecError, StudySpec
+    failures = 0
+    for path in args.specs:
+        try:
+            with open(path) as f:
+                spec = StudySpec.from_yaml(f.read())
+            dag = compile_dag(spec)
+            info = {"spec": path, "ok": True, "name": spec.name,
+                    "nodes": [n.name for n in dag.nodes],
+                    "instances": len(list(dag.all_instances()))}
+        except (OSError, SpecError, ValueError) as e:
+            failures += 1
+            info = {"spec": path, "ok": False, "error": str(e)}
+        if args.json:
+            print(json.dumps(info), flush=True)
+        elif info["ok"]:
+            print(f"OK   {path}: {info['name']} — "
+                  f"{len(info['nodes'])} node(s) "
+                  f"[{', '.join(info['nodes'])}], "
+                  f"{info['instances']} instance(s)")
+        else:
+            print(f"FAIL {path}: {info['error']}")
+    return 1 if failures else 0
+
+
 def main(argv=None):
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "broker-serve":
         return broker_serve_main(argv[1:])
     if argv and argv[0] == "merlin-status":
         return merlin_status_main(argv[1:])
+    if argv and argv[0] == "merlin-validate":
+        return merlin_validate_main(argv[1:])
     return llm_serve_main(argv)
 
 
@@ -294,4 +394,4 @@ def llm_serve_main(argv=None):
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,224 @@
+"""Task-graph IR: compilation (fusion, edges, instance projection),
+validation errors, and DAG execution end-to-end — diamonds, per-combo vs
+funneled edges, per-node queue routing, all three execution handlers,
+persisted node state, and published sample sets."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.dag import compile_dag
+from repro.core.handlers import MockScheduler, SchedulerJobHandler
+from repro.core.runtime import MerlinRuntime
+from repro.core.spec import SpecError, Step, StudySpec
+from repro.core.worker import WorkerPool
+
+
+def _diamond_spec(**join_kw):
+    return StudySpec(name="dia", steps=[
+        Step(name="prep", fn="prep"),
+        Step(name="left", fn="left", depends=("prep",)),
+        Step(name="right", fn="right", depends=("prep",)),
+        Step(name="join", fn="join", depends=("left", "right"),
+             over_samples=False, **join_kw)])
+
+
+# ---------------------------------------------------------------------------
+# compilation
+# ---------------------------------------------------------------------------
+
+def test_diamond_compiles_with_fan_out_and_fan_in():
+    dag = compile_dag(_diamond_spec())
+    assert [n.name for n in dag.nodes] == ["prep", "left", "right", "join"]
+    assert dag.kinds() == ["parallel", "parallel", "parallel", "single"]
+    # prep fans out to both branches; join fans in from both
+    assert dag.instance_children(0, 0) == [(1, 0), (2, 0)]
+    assert sorted(dag.instance_parents(3, 0)) == [(1, 0), (2, 0)]
+    assert dag.indegree(3, 0) == 2
+    assert dag.roots() == [(0, 0)]
+
+
+def test_chain_fusion_stops_at_fan_out():
+    # prep cannot fuse into left: prep has out-degree 2
+    dag = compile_dag(_diamond_spec())
+    assert all(len(n.steps) == 1 for n in dag.nodes)
+
+
+def test_linear_chain_fuses_into_one_node():
+    spec = StudySpec(name="ch", steps=[
+        Step(name="a", fn="a"),
+        Step(name="b", fn="b", depends=("a",)),
+        Step(name="c", fn="c", depends=("b",))])
+    dag = compile_dag(spec)
+    assert len(dag.nodes) == 1
+    assert dag.nodes[0].name == "a+b+c"
+
+
+def test_fusion_respects_queue_and_handler_boundaries():
+    spec = StudySpec(name="q", steps=[
+        Step(name="a", fn="a"),
+        Step(name="b", fn="b", depends=("a",), queue="other")])
+    assert len(compile_dag(spec).nodes) == 2
+    spec2 = StudySpec(name="h", steps=[
+        Step(name="a", fn="a"),
+        Step(name="b", cmd="true", depends=("a",))])
+    assert len(compile_dag(spec2).nodes) == 2
+
+
+def test_instance_projection_and_matched_edges():
+    # parent varies over METRO only; child over METRO x SCEN: each child
+    # instance depends on exactly the parent instance sharing its METRO
+    spec = StudySpec(name="p", steps=[
+        Step(name="cal", fn="cal", params=("M",)),
+        Step(name="fc", fn="fc", depends=("cal",), params=("M", "S"))],
+        parameters={"M": ["a", "b"], "S": [1, 2, 3]})
+    dag = compile_dag(spec)
+    cal, fc = dag.nodes
+    assert len(cal.instances) == 2 and len(fc.instances) == 6
+    for j, inst in enumerate(fc.instances):
+        parents = dag.instance_parents(1, j)
+        assert len(parents) == 1
+        (pn, pi), = parents
+        assert cal.instances[pi]["M"] == inst["M"]
+
+
+def test_funnel_edge_collects_all_parent_instances():
+    spec = StudySpec(name="f", steps=[
+        Step(name="sim", fn="sim", params=("M",)),
+        Step(name="all", fn="all", depends=("sim_*",), over_samples=False)],
+        parameters={"M": ["a", "b", "c"]})
+    dag = compile_dag(spec)
+    assert dag.indegree(1, 0) == 3
+
+
+def test_self_dependency_rejected():
+    spec = StudySpec(name="s", steps=[
+        Step(name="a", fn="a", depends=("a",))])
+    with pytest.raises(SpecError):
+        compile_dag(spec)
+
+
+def test_duplicate_dependency_rejected():
+    spec = StudySpec(name="dup", steps=[
+        Step(name="a", fn="a"),
+        Step(name="b", fn="b", depends=("a", "a"))])
+    with pytest.raises(SpecError, match="duplicate"):
+        compile_dag(spec)
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+def test_diamond_runs_end_to_end_with_state_epochs(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    order = []
+    for name in ("prep", "left", "right", "join"):
+        rt.register(name, (lambda n: lambda ctx: order.append(n))(name))
+    study = None
+    with WorkerPool(rt, n_workers=2) as pool:
+        study = rt.run(_diamond_spec(), samples=np.zeros((4, 2), np.float32))
+        assert rt.wait(study, timeout=60)
+        pool.drain(timeout=30)
+    assert order[0] == "prep" and order[-1] == "join"
+    assert set(order) == {"prep", "left", "right", "join"}
+    state = rt.dag_state(study)["state"]
+    assert all(v["status"] == "done" for v in state.values())
+    # completion epochs respect the graph order
+    ep = {k: v["epoch"] for k, v in state.items()}
+    assert ep["s0/c0"] < ep["s1/c0"] < ep["s3/c0"]
+    assert ep["s0/c0"] < ep["s2/c0"] < ep["s3/c0"]
+
+
+def test_per_node_queue_routing(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    seen = []
+    rt.register("a", lambda ctx: seen.append("a"))
+    rt.register("b", lambda ctx: seen.append("b"))
+    spec = StudySpec(name="routed", steps=[
+        Step(name="a", fn="a", queue="sims"),
+        Step(name="b", fn="b", depends=("a_*",), over_samples=False,
+             queue="post")])
+    with WorkerPool(rt, n_workers=2) as pool:
+        study = rt.run(spec, samples=np.zeros((2, 1), np.float32))
+        assert rt.wait(study, timeout=60)
+        pool.drain(timeout=30)
+    assert seen == ["a", "b"]
+    acked = rt.broker.stats["acked_by_queue"]
+    assert acked.get("sims", 0) >= 1 and acked.get("post", 0) >= 1
+
+
+def test_all_three_handlers_in_one_graph(tmp_path):
+    """fn (in-process engine path) -> cmd (local subprocess) -> cmd via the
+    mock batch scheduler, chained so each handler's output gates the
+    next."""
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    rt.register_handler(SchedulerJobHandler(
+        scheduler=MockScheduler(hold_s=0.05), poll_s=0.01, timeout=30))
+    ran = []
+    rt.register("seed_fn", lambda ctx: ran.append((ctx.lo, ctx.hi)))
+    spec = StudySpec(name="tri", steps=[
+        Step(name="seed", fn="seed_fn"),
+        Step(name="local", cmd="echo local $(SAMPLE_LO) > local.txt",
+             depends=("seed_*",), over_samples=False),
+        Step(name="batch", cmd="echo batch > batch.txt",
+             depends=("local",), over_samples=False, handler="scheduler",
+             resources={"nodes": 1})])
+    with WorkerPool(rt, n_workers=2) as pool:
+        study = rt.run(spec, samples=np.zeros((4, 2), np.float32))
+        assert rt.wait(study, timeout=60)
+        pool.drain(timeout=30)
+    assert ran  # fn handler ran
+    # each cmd step wrote its artifact in its node workspace
+    found = {os.path.basename(p)
+             for root, _, files in os.walk(tmp_path) for p in files}
+    assert "local.txt" in found and "batch.txt" in found
+    assert rt.handlers["scheduler"].scheduler.submitted == 1
+
+
+def test_zip_parameters_run_per_combo(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    combos = []
+    rt.register("s", lambda ctx: combos.append(
+        (ctx.combo["CFG"], ctx.combo["SEED"])))
+    spec = StudySpec(name="z", steps=[Step(name="s", fn="s")],
+                     parameters={"CFG%zip": ["small", "large"],
+                                 "SEED%zip": [11, 17]})
+    with WorkerPool(rt, n_workers=2) as pool:
+        study = rt.run(spec, samples=np.zeros((2, 1), np.float32))
+        assert rt.wait(study, timeout=60)
+        pool.drain(timeout=30)
+    assert sorted(set(combos)) == [("large", 17), ("small", 11)]
+
+
+def test_published_sample_set_feeds_downstream_node(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    got = {}
+
+    def producer(ctx):
+        ctx.publish_samples("picked", np.full((3, 2), 7.0, np.float32))
+
+    def consumer(ctx):
+        got["block"] = np.array(ctx.sample_block)
+        got["n"] = ctx.hi - ctx.lo
+
+    rt.register("producer", producer)
+    rt.register("consumer", consumer)
+    spec = StudySpec(name="pub", steps=[
+        Step(name="produce", fn="producer", over_samples=False),
+        Step(name="consume", fn="consumer", depends=("produce",),
+             sample_set="picked")])
+    with WorkerPool(rt, n_workers=2) as pool:
+        study = rt.run(spec, samples=np.zeros((2, 1), np.float32))
+        assert rt.wait(study, timeout=60)
+        pool.drain(timeout=30)
+    # consumer iterated the PUBLISHED set (3 samples of 7s), not default
+    assert got and np.all(got["block"] == 7.0)
+
+
+def test_run_requires_registered_handler(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path), handlers={})
+    spec = StudySpec(name="nh", steps=[Step(name="a", fn="a")])
+    rt.register("a", lambda ctx: None)
+    with pytest.raises(RuntimeError, match="handler"):
+        rt.run(spec, samples=np.zeros((2, 1), np.float32))

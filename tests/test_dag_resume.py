@@ -1,0 +1,126 @@
+"""Crash-resume on a diamond DAG: a worker process dies mid-graph (after
+prep, during left), a FRESH process attaches to the persisted study and
+resumes it; completed nodes must not re-execute (exactly-once audit via
+the once-marker counters) and downstream unlock order must hold."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core.queue import FileBroker
+from repro.core.runtime import MerlinRuntime
+from repro.core.spec import Step, StudySpec
+from repro.core.worker import WorkerPool
+
+STUDY = "diacrash"
+
+# the crashing first allocation: left os._exit(17)s the whole process the
+# moment it runs — which is necessarily after prep's advance unlocked it
+CHILD = r"""
+import os, sys, time
+import numpy as np
+from repro.core.queue import FileBroker
+from repro.core.runtime import MerlinRuntime
+from repro.core.spec import Step, StudySpec
+from repro.core.worker import WorkerPool
+
+root, ws = sys.argv[1], sys.argv[2]
+
+def log(name, ctx):
+    with open(os.path.join(ws, "exec.log"), "a") as f:
+        f.write(f"{name} {ctx.lo} {ctx.hi}\n")
+
+rt = MerlinRuntime(broker=FileBroker(root, visibility_timeout=600),
+                   workspace=ws)
+rt.register("prep", lambda ctx: log("prep", ctx))
+
+def left(ctx):
+    log("left", ctx)
+    os._exit(17)
+
+rt.register("left", left)
+rt.register("right", lambda ctx: log("right", ctx))
+rt.register("join", lambda ctx: log("join", ctx))
+spec = StudySpec(name="dia", steps=[
+    Step(name="prep", fn="prep"),
+    Step(name="left", fn="left", depends=("prep",)),
+    Step(name="right", fn="right", depends=("prep",)),
+    Step(name="join", fn="join", depends=("left", "right"),
+         over_samples=False)])
+with WorkerPool(rt, n_workers=2):
+    rt.run(spec, samples=np.zeros((4, 2), np.float32), study_id=sys.argv[3])
+    time.sleep(120)  # killed from inside left long before this expires
+"""
+
+
+def _register_fns(rt, ws):
+    def log(name):
+        def fn(ctx):
+            with open(os.path.join(ws, "exec.log"), "a") as f:
+                f.write(f"{name} {ctx.lo} {ctx.hi}\n")
+        return fn
+    for name in ("prep", "left", "right", "join"):
+        rt.register(name, log(name))
+
+
+def test_crash_and_attach_resumes_exactly_once(tmp_path):
+    root, ws = str(tmp_path / "broker"), str(tmp_path / "ws")
+    os.makedirs(ws, exist_ok=True)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src")]
+        + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+    proc = subprocess.run([sys.executable, "-c", CHILD, root, ws, STUDY],
+                          capture_output=True, text=True, env=env,
+                          timeout=180)
+    assert proc.returncode == 17, proc.stderr[-1000:]
+
+    # -- fresh process (this one): attach, audit, resume -------------------
+    rt = MerlinRuntime(broker=FileBroker(root, visibility_timeout=600),
+                       workspace=ws)
+    _register_fns(rt, ws)
+    study = rt.attach(STUDY)
+    assert not rt.study_done(study)
+    # prep completed and advanced in the crashed allocation
+    assert rt.counters.once_exists(f"{STUDY}/s0/c0/advance")
+    # left started but never completed: no advance, so join never unlocked
+    assert not rt.counters.once_exists(f"{STUDY}/s1/c0/advance")
+    assert not rt.counters.once_exists(f"{STUDY}/s3/c0/enqueue")
+
+    log_path = os.path.join(ws, "exec.log")
+    pre = open(log_path).read().splitlines()
+
+    requeued = rt.resume(study)
+    assert (1, 0) in requeued  # left is ready (parent done) and incomplete
+    assert (0, 0) not in requeued  # prep must NOT be re-armed
+    # no pool.drain here: the crashed allocation's stale lease (600s
+    # visibility) keeps the broker non-idle; study completion is the
+    # signal that matters
+    with WorkerPool(rt, n_workers=2):
+        assert rt.wait(study, timeout=120)
+
+    # -- exactly-once audit: each bundle's done-marker was claimed exactly
+    # once across BOTH allocations, so the per-instance completion counter
+    # sits at precisely its expected bundle count (4 leaf bundles for the
+    # parallel nodes, 1 for the funnel join) — never double-counted
+    for n, expected in ((0, 4), (1, 4), (2, 4), (3, 1)):
+        assert rt.counters.get(f"{STUDY}/s{n}/c0") == expected
+        assert rt.counters.once_exists(f"{STUDY}/s{n}/c0/advance")
+    # the resumed allocation appended to the log, never re-ran prep
+    post = open(log_path).read().splitlines()
+    assert post[:len(pre)] == pre
+    new_steps = {ln.split()[0] for ln in post[len(pre):]}
+    assert "prep" not in new_steps  # done nodes are not re-executed
+    assert "join" in new_steps      # the blocked fan-in finally ran
+    assert "left" in new_steps      # the crashed node was re-executed
+
+    # -- downstream unlock order survives the crash boundary ---------------
+    state = rt.dag_state(study)["state"]
+    assert all(v["status"] == "done" for v in state.values())
+    ep = {k: v["epoch"] for k, v in state.items()}
+    assert ep["s0/c0"] < ep["s1/c0"] < ep["s3/c0"]
+    assert ep["s0/c0"] < ep["s2/c0"] < ep["s3/c0"]
+    events = [e["ev"] for e in rt.journal.replay()]
+    assert "study_resume" in events and "study_done" in events

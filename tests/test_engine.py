@@ -17,21 +17,19 @@ from repro.core.engine import EngineClosed, ExecutionEngine
 from repro.core.hierarchy import HierarchyCfg
 from repro.core.queue import PRIORITY_REAL, new_task
 from repro.core.resilience import RetryPolicy
-from repro.core.runtime import MerlinRuntime, plan_stages
-from repro.core.spec import Step, StudySpec, expand_parameters
+from repro.core.runtime import MerlinRuntime
+from repro.core.spec import Step, StudySpec
 from repro.core.worker import WorkerPool
 
 
 def _seed_study(rt: MerlinRuntime, study: str, spans, n_samples: int,
                 bundle: int, fn: str = "sim") -> None:
     """Register a study and enqueue its leaf tasks directly (the resubmit
-    path): the stage counter expects exactly len(spans) bundles."""
+    path): the node counter expects exactly len(spans) bundles."""
     spec = StudySpec(name=study, steps=[Step(name=fn, fn=fn)])
-    rt._specs[study] = spec
-    rt._stages[study] = plan_stages(spec)
-    rt._combos[study] = expand_parameters(spec)
-    rt._samples[study] = np.random.default_rng(0).random(
+    samples = np.random.default_rng(0).random(
         (n_samples, 3)).astype(np.float32)
+    rt.register_study(spec, study_id=study, samples=samples)
     rt.broker.put_many([
         new_task("real", {"study": study, "stage": 0, "combo": 0,
                           "n_samples": n_samples, "bundle": bundle,
@@ -56,8 +54,10 @@ def test_cross_worker_fusion_exceeds_per_worker_batch(tmp_path):
                                                          ctx.sub_ranges))))
     spans = [(i * 2, (i + 1) * 2) for i in range(16)]
     _seed_study(rt, "xw", spans, n_samples=32, bundle=2)
+    # max_wait well above scheduler jitter so the fused batch forms from
+    # a size or drain flush, not a deadline flush racing worker leases
     with WorkerPool(rt, n_workers=4, batch=4,
-                    engine_cfg={"max_batch": 16, "max_wait_ms": 100}) as p:
+                    engine_cfg={"max_batch": 16, "max_wait_ms": 2000}) as p:
         assert p.drain(timeout=60)
         eng_stats = p.stats()["engine"]
     covered = sorted(r for call in calls for r in call)
@@ -80,10 +80,8 @@ def test_engine_coalesces_across_queues(tmp_path):
     calls = []
     rt.register("sim", lambda ctx: calls.append(len(ctx.sub_ranges)))
     spec = StudySpec(name="q2", steps=[Step(name="sim", fn="sim")])
-    rt._specs["q2"] = spec
-    rt._stages["q2"] = plan_stages(spec)
-    rt._combos["q2"] = expand_parameters(spec)
-    rt._samples["q2"] = np.zeros((8, 2), np.float32)
+    rt.register_study(spec, study_id="q2",
+                      samples=np.zeros((8, 2), np.float32))
     tasks = []
     for i in range(4):  # alternate contiguous spans across two queues
         tasks.append(new_task(
@@ -92,8 +90,12 @@ def test_engine_coalesces_across_queues(tmp_path):
                      "real_queue": "real", "gen_queue": "gen"},
             priority=PRIORITY_REAL, queue="sims-a" if i % 2 else "sims-b"))
     rt.broker.put_many(tasks)
+    # max_wait well above scheduler jitter: the flush under test is the
+    # one drain() forces after every task is leased, not a deadline flush
+    # racing the second worker's lease (deadline flushes have their own
+    # tests below)
     with WorkerPool(rt, n_workers=2, batch=2, queues=("sims-a", "sims-b"),
-                    engine_cfg={"max_batch": 8, "max_wait_ms": 150}) as p:
+                    engine_cfg={"max_batch": 8, "max_wait_ms": 2000}) as p:
         assert p.drain(timeout=60)
     assert sum(calls) == 4
     assert max(calls) > 2  # spans from both queues fused into one launch
@@ -185,8 +187,7 @@ def test_cmd_and_funnel_tasks_bypass_engine(tmp_path):
         Step(name="sim", cmd="true"),
         Step(name="post", fn="post", depends=("sim_*",),
              over_samples=False)])
-    rt._specs["mix"] = spec
-    rt._stages["mix"] = plan_stages(spec)
+    rt.register_study(spec, study_id="mix")
     cmd_task = new_task("real", {"study": "mix", "stage": 0, "combo": 0,
                                  "n_samples": 4, "bundle": 2, "fanout": 4,
                                  "samples": [0, 2]})
@@ -201,8 +202,7 @@ def test_cmd_and_funnel_tasks_bypass_engine(tmp_path):
     rt2 = MerlinRuntime(workspace=str(tmp_path / "w2"))
     rt2.register("sim", lambda ctx: None)
     spec2 = StudySpec(name="fn", steps=[Step(name="sim", fn="sim")])
-    rt2._specs["fn"] = spec2
-    rt2._stages["fn"] = plan_stages(spec2)
+    rt2.register_study(spec2, study_id="fn")
     fn_task = new_task("real", {"study": "fn", "stage": 0, "combo": 0,
                                 "n_samples": 4, "bundle": 2, "fanout": 4,
                                 "samples": [0, 2]})

@@ -1,0 +1,122 @@
+"""Execution handlers: script rendering, the three built-in mechanisms,
+MockScheduler's submit->poll lifecycle, and failure surfaces."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.handlers import (FnStepHandler, HandlerError, MockScheduler,
+                                 SchedulerJobHandler, SubprocessHandler,
+                                 default_handlers, render_script)
+from repro.core.runtime import Context, MerlinRuntime
+from repro.core.spec import Step
+
+
+def _ctx(rt, tmp_path, combo=None, lo=0, hi=2):
+    ws = str(tmp_path / "wdir")
+    os.makedirs(ws, exist_ok=True)
+    return Context(rt, "t", combo or {}, np.zeros((4, 2), np.float32),
+                   lo, hi, ws, {"OUT": "/tmp/o"})
+
+
+def test_default_registry_names():
+    h = default_handlers()
+    assert set(h) == {"fn", "subprocess", "scheduler"}
+    assert h["fn"].inprocess and not h["subprocess"].inprocess
+    assert not h["scheduler"].inprocess
+
+
+def test_render_script_substitutes_env(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    ctx = _ctx(rt, tmp_path, combo={"METRO": "NYC"}, lo=3, hi=7)
+    step = Step(name="s", cmd="echo $(METRO) $(SAMPLE_LO)-$(SAMPLE_HI) "
+                               "$(OUT) $(MERLIN_STUDY)")
+    script = render_script(step, ctx)
+    body = open(script).read()
+    assert "NYC 3-7 /tmp/o t" in body
+    assert script.endswith("s.sh")
+
+
+def test_fn_handler_runs_registered_fn(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    seen = []
+    rt.register("go", lambda ctx: seen.append(ctx.lo))
+    FnStepHandler().execute(rt, Step(name="s", fn="go"), _ctx(rt, tmp_path))
+    assert seen == [0]
+
+
+def test_fn_handler_unregistered_fn_raises(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    with pytest.raises(HandlerError, match="not registered"):
+        FnStepHandler().execute(rt, Step(name="s", fn="missing"),
+                                _ctx(rt, tmp_path))
+    with pytest.raises(HandlerError, match="needs fn"):
+        FnStepHandler().execute(rt, Step(name="s", cmd="true"),
+                                _ctx(rt, tmp_path))
+
+
+def test_subprocess_handler_runs_and_fails(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    ctx = _ctx(rt, tmp_path)
+    SubprocessHandler().execute(rt, Step(name="ok", cmd="echo hi > out.txt"),
+                                ctx)
+    assert open(os.path.join(ctx.workspace, "out.txt")).read() == "hi\n"
+    with pytest.raises(HandlerError, match="rc=3"):
+        SubprocessHandler().execute(rt, Step(name="bad", cmd="exit 3"), ctx)
+
+
+def test_mock_scheduler_lifecycle(tmp_path):
+    sched = MockScheduler(hold_s=0.15)
+    script = str(tmp_path / "job.sh")
+    open(script, "w").write("echo done > marker\n")
+    jid = sched.submit(script, str(tmp_path), {"nodes": 2})
+    assert sched.status(jid) == "PENDING"  # held before launch
+    deadline = time.monotonic() + 10
+    while sched.status(jid) != "COMPLETED":
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+    assert (tmp_path / "marker").exists()
+    assert sched.submitted == 1
+    assert sched.jobs[jid]["resources"] == {"nodes": 2}
+    with pytest.raises(HandlerError, match="unknown job"):
+        sched.status("mock-nope")
+
+
+def test_scheduler_handler_polls_to_completion(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    h = SchedulerJobHandler(scheduler=MockScheduler(hold_s=0.05),
+                            poll_s=0.01, timeout=30)
+    ctx = _ctx(rt, tmp_path)
+    h.execute(rt, Step(name="j", cmd="echo x > res.txt"), ctx)
+    assert (tmp_path / "wdir" / "res.txt").exists()
+
+
+def test_scheduler_handler_failed_job_raises(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    h = SchedulerJobHandler(scheduler=MockScheduler(), poll_s=0.01,
+                            timeout=30)
+    with pytest.raises(HandlerError, match="FAILED"):
+        h.execute(rt, Step(name="j", cmd="exit 1"), _ctx(rt, tmp_path))
+
+
+def test_scheduler_handler_timeout_cancels(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    sched = MockScheduler()
+    h = SchedulerJobHandler(scheduler=sched, poll_s=0.01, timeout=0.2)
+    with pytest.raises(HandlerError, match="timed out"):
+        h.execute(rt, Step(name="j", cmd="sleep 30"), _ctx(rt, tmp_path))
+    # the runaway job was cancelled, not leaked
+    (job,) = sched.jobs.values()
+    deadline = time.monotonic() + 5
+    while job["proc"].poll() is None:
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+    assert job["proc"].poll() != 0
+
+
+def test_handler_name_resolution_via_step():
+    assert Step(name="a", fn="f").handler_name() == "fn"
+    assert Step(name="a", cmd="true").handler_name() == "subprocess"
+    assert Step(name="a", cmd="true",
+                handler="scheduler").handler_name() == "scheduler"

@@ -1,0 +1,84 @@
+"""jsonstore: the one shared-JSON-on-a-directory implementation (atomic
+save, tolerant load, locked read-modify-write, signature-cached reload)."""
+import json
+import os
+import threading
+
+import pytest
+
+from repro.core import jsonstore
+
+
+def test_save_and_load_roundtrip(tmp_path):
+    p = str(tmp_path / "doc.json")
+    assert jsonstore.save_json(p, {"a": 1})
+    assert jsonstore.load_json(p) == {"a": 1}
+    assert not any(n.startswith(".tmp-") for n in os.listdir(tmp_path))
+
+
+def test_load_missing_and_torn(tmp_path):
+    assert jsonstore.load_json(str(tmp_path / "nope.json")) is None
+    assert jsonstore.load_json(str(tmp_path / "nope.json"), default={}) == {}
+    torn = str(tmp_path / "torn.json")
+    open(torn, "w").write('{"a": ')
+    assert jsonstore.load_json(torn, default="d") == "d"
+
+
+def test_save_strict_raises(tmp_path):
+    bad = str(tmp_path / "f.json" / "nested.json")  # parent is a file
+    open(str(tmp_path / "f.json"), "w").write("{}")
+    assert jsonstore.save_json(bad, {}) is False
+    with pytest.raises(OSError):
+        jsonstore.save_json(bad, {}, strict=True)
+
+
+def test_update_json_merges_under_contention(tmp_path):
+    p = str(tmp_path / "shared.json")
+    n_threads, per_thread = 8, 25
+
+    def writer(tid):
+        for i in range(per_thread):
+            jsonstore.update_json(
+                p, lambda doc: doc.update({f"{tid}:{i}": 1}))
+
+    ts = [threading.Thread(target=writer, args=(t,)) for t in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    doc = jsonstore.load_json(p)
+    assert len(doc) == n_threads * per_thread  # no dropped merges
+
+
+def test_update_json_replacement_return(tmp_path):
+    p = str(tmp_path / "r.json")
+    jsonstore.save_json(p, {"old": 1})
+    out = jsonstore.update_json(p, lambda doc: {"new": 2})
+    assert out == {"new": 2}
+    assert jsonstore.load_json(p) == {"new": 2}
+
+
+def test_shared_config_signature_cache(tmp_path):
+    p = str(tmp_path / "cfg.json")
+    cfg = jsonstore.SharedJsonConfig(p)
+    assert cfg.load_if_changed() is None  # missing file
+    jsonstore.save_json(p, {"q": 5})
+    assert cfg.load_if_changed() == {"q": 5}
+    assert cfg.load_if_changed() is None  # unchanged -> one stat, no read
+    # an update through the same handle does not re-apply its own write
+    cfg.update(lambda doc: doc.update({"r": 6}))
+    assert cfg.load_if_changed() is None
+    # ...but a foreign write is picked up
+    other = jsonstore.SharedJsonConfig(p)
+    other.update(lambda doc: doc.update({"s": 7}))
+    assert cfg.load_if_changed() == {"q": 5, "r": 6, "s": 7}
+    cfg.forget()
+    assert cfg.load_if_changed() is not None  # forced re-read
+
+
+def test_file_signature(tmp_path):
+    p = str(tmp_path / "x.json")
+    assert jsonstore.file_signature(p) is None
+    jsonstore.save_json(p, {})
+    sig = jsonstore.file_signature(p)
+    assert sig is not None and len(sig) == 2

@@ -1,0 +1,69 @@
+"""Ops CLI helpers: merlin-status --watch throughput derivation and the
+merlin-validate spec gate."""
+import json
+import os
+
+from repro.core.queue import InMemoryBroker, new_task
+from repro.launch.serve import (main, merlin_validate_main, status_snapshot,
+                                watch_rates)
+
+SPEC_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "examples", "specs")
+
+
+def test_watch_rates_from_acked_deltas():
+    b = InMemoryBroker()
+    b.put_many([new_task("real", {}, queue="sims") for _ in range(3)])
+    b.put(new_task("real", {}, queue="post"))
+    s0 = status_snapshot(b)
+    assert watch_rates(None, 0.0, s0, 1.0) is None  # first poll: no history
+    for _ in range(2):
+        b.ack(b.get(timeout=1, queues=("sims",)).tag)
+    b.ack(b.get(timeout=1, queues=("post",)).tag)
+    s1 = status_snapshot(b)
+    r = watch_rates(s0, 10.0, s1, 12.0)
+    assert r["interval_s"] == 2.0
+    assert r["tasks_per_s"] == {"post": 0.5, "sims": 1.0}
+    assert r["total_tasks_per_s"] == 1.5
+
+
+def test_watch_rates_clamp_counter_reset():
+    # a broker restart zeroes its counters; the delta must clamp, not go
+    # negative
+    prev = {"acked_by_queue": {"sims": 50}}
+    cur = {"acked_by_queue": {"sims": 3}}
+    r = watch_rates(prev, 0.0, cur, 1.0)
+    assert r["tasks_per_s"]["sims"] == 0.0
+
+
+def test_validate_example_specs_all_pass(capsys):
+    specs = sorted(os.path.join(SPEC_DIR, n) for n in os.listdir(SPEC_DIR)
+                   if n.endswith(".yaml"))
+    assert specs, "no example specs found"
+    rc = merlin_validate_main(specs)
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert out.count("OK") == len(specs) and "FAIL" not in out
+
+
+def test_validate_reports_structural_errors(tmp_path, capsys):
+    bad = tmp_path / "bad.yaml"
+    bad.write_text("description:\n  name: bad\nstudy:\n"
+                   "  - name: a\n    run:\n      cmd: echo\n"
+                   "      depends: [a]\n")
+    rc = merlin_validate_main([str(bad)], )
+    assert rc == 1
+    assert "FAIL" in capsys.readouterr().out
+    rc = merlin_validate_main([str(bad), "--json"])
+    assert rc == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] is False and doc["spec"] == str(bad)
+
+
+def test_main_dispatches_merlin_validate(capsys):
+    rc = main(["merlin-validate",
+               os.path.join(SPEC_DIR, "diamond.yaml"), "--json"])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] is True and doc["name"] == "diamond-demo"
+    assert doc["nodes"] == ["prep", "left", "right", "join"]

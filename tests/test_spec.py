@@ -1,9 +1,9 @@
-"""Study spec: YAML parsing, DAG validation, parameter expansion."""
+"""Study spec: YAML parsing, validation, parameter expansion (%zip)."""
 import pytest
 
-from repro.core.runtime import plan_stages
-from repro.core.spec import (Step, StudySpec, expand_parameters, substitute,
-                             topo_order)
+from repro.core.dag import compile_dag
+from repro.core.spec import (SpecError, Step, StudySpec, expand_parameters,
+                             substitute, topo_order)
 
 YAML = """
 description:
@@ -48,21 +48,59 @@ def test_parameter_expansion_cartesian():
     assert {"A": 1, "B": "x"} in combos
 
 
+def test_parameter_expansion_zip():
+    spec = StudySpec(name="x", steps=[Step(name="a", cmd="echo")],
+                     parameters={"CFG%zip": ["small", "large"],
+                                 "SEED%zip": [11, 17]})
+    combos = expand_parameters(spec)
+    assert combos == [{"CFG": "small", "SEED": 11},
+                      {"CFG": "large", "SEED": 17}]
+
+
+def test_parameter_expansion_mixed_zip_product():
+    spec = StudySpec(name="x", steps=[Step(name="a", cmd="echo")],
+                     parameters={"CFG%zip": ["small", "large"],
+                                 "SEED%zip": [11, 17],
+                                 "MODE": ["fast", "slow"]})
+    combos = expand_parameters(spec)
+    # zipped pairs crossed with the plain Cartesian axis
+    assert len(combos) == 4
+    assert {"CFG": "small", "SEED": 11, "MODE": "fast"} in combos
+    assert {"CFG": "large", "SEED": 17, "MODE": "slow"} in combos
+    assert not any(c["CFG"] == "small" and c["SEED"] == 17 for c in combos)
+
+
+def test_zip_length_mismatch_rejected():
+    spec = StudySpec(name="x", steps=[Step(name="a", cmd="echo")],
+                     parameters={"A%zip": [1, 2, 3], "B%zip": [1, 2]})
+    with pytest.raises(SpecError, match="%zip"):
+        spec.validate()
+
+
 def test_topo_order_and_cycle_detection():
     spec = StudySpec(name="x", steps=[
-        Step(name="c", depends=("b",)),
-        Step(name="a"),
-        Step(name="b", depends=("a",))])
+        Step(name="c", cmd="echo", depends=("b",)),
+        Step(name="a", cmd="echo"),
+        Step(name="b", cmd="echo", depends=("a",))])
     assert [s.name for s in topo_order(spec)] == ["a", "b", "c"]
     bad = StudySpec(name="x", steps=[
-        Step(name="a", depends=("b",)), Step(name="b", depends=("a",))])
-    with pytest.raises(AssertionError):
+        Step(name="a", cmd="echo", depends=("b",)),
+        Step(name="b", cmd="echo", depends=("a",))])
+    with pytest.raises(SpecError, match="cycle"):
         bad.validate()
 
 
 def test_unknown_dependency_rejected():
-    spec = StudySpec(name="x", steps=[Step(name="a", depends=("nope",))])
-    with pytest.raises(AssertionError):
+    spec = StudySpec(name="x", steps=[Step(name="a", cmd="echo", depends=("nope",))])
+    with pytest.raises(SpecError, match="unknown step"):
+        spec.validate()
+
+
+def test_unknown_param_name_rejected():
+    spec = StudySpec(name="x",
+                     steps=[Step(name="a", cmd="echo", params=("NOPE",))],
+                     parameters={"A": [1]})
+    with pytest.raises(SpecError, match="NOPE"):
         spec.validate()
 
 
@@ -71,18 +109,22 @@ def test_substitution():
     assert out == "run 3 on /w"
 
 
-def test_stage_planning_chains_and_funnels():
+def test_dag_compile_chains_and_funnels():
+    # the linear-chain shape: sim -> post fuse into one parallel node,
+    # the funnel collect stays its own single node
     spec = StudySpec.from_yaml(YAML)
-    stages = plan_stages(spec)
-    assert [st["kind"] for st in stages] == ["parallel", "single"]
-    assert [s.name for s in stages[0]["steps"]] == ["sim", "post"]
+    dag = compile_dag(spec)
+    assert dag.kinds() == ["parallel", "single"]
+    assert [s.name for s in dag.nodes[0].steps] == ["sim", "post"]
+    assert dag.nodes[1].name == "collect"
 
 
-def test_stage_planning_interleaved():
+def test_dag_compile_interleaved():
     spec = StudySpec(name="x", steps=[
-        Step(name="a"),
-        Step(name="barrier", depends=("a_*",), over_samples=False),
-        Step(name="b", depends=("barrier",)),
+        Step(name="a", cmd="echo"),
+        Step(name="barrier", cmd="echo", depends=("a_*",),
+             over_samples=False),
+        Step(name="b", cmd="echo", depends=("barrier",)),
     ])
-    stages = plan_stages(spec)
-    assert [st["kind"] for st in stages] == ["parallel", "single", "parallel"]
+    dag = compile_dag(spec)
+    assert dag.kinds() == ["parallel", "single", "parallel"]
