@@ -3,8 +3,10 @@
 # parameter x sample DAG layering, device-fused ensemble execution,
 # bundling/aggregation, and crawl-resubmit resilience.
 from repro.core.queue import (Broker, BrokerError, BrokerFull,  # noqa
-                              BrokerUnavailable, InMemoryBroker, FileBroker,
-                              Task, new_task, PRIORITY_REAL, PRIORITY_GEN)
+                              BrokerUnavailable, StaleEpochError,
+                              InMemoryBroker, FileBroker, Task, new_task,
+                              PRIORITY_REAL, PRIORITY_GEN,
+                              dlq_queue_name, is_dlq, original_queue)
 from repro.core.netbroker import BrokerServer, NetBroker, make_broker  # noqa
 from repro.core.shardbroker import ShardedBroker  # noqa
 from repro.core.hierarchy import HierarchyCfg, root_task, expand  # noqa
@@ -17,3 +19,6 @@ from repro.core.runtime import MerlinRuntime  # noqa
 from repro.core.worker import Worker, WorkerPool  # noqa
 from repro.core.bundler import Bundler, missing_samples  # noqa
 from repro.core.ensemble import EnsembleExecutor  # noqa
+from repro.core.resilience import (RetryPolicy, BackoffPolicy,  # noqa
+                                   CircuitBreaker)
+from repro.core.chaos import ChaosBroker, FlakyFn  # noqa

@@ -53,6 +53,8 @@ class DagNode:
     handler: str
     max_retries: int
     resources: Dict[str, Any]
+    timeout: Optional[float] = None        # per-execution wall clock
+    on_failure: str = "retry"              # action at retry exhaustion
     instances: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
     in_edges: List[DagEdge] = dataclasses.field(default_factory=list)
     out_edges: List[DagEdge] = dataclasses.field(default_factory=list)
@@ -135,6 +137,9 @@ class TaskDag:
                 "handler": n.handler,
                 "queue": n.queue,
                 "sample_set": n.sample_set,
+                "max_retries": n.max_retries,
+                "timeout": n.timeout,
+                "on_failure": n.on_failure,
                 "n_instances": len(n.instances),
                 "in": [[e.src, e.funnel] for e in n.in_edges],
                 "out": [[e.dst, e.funnel] for e in n.out_edges],
@@ -159,8 +164,11 @@ def _project(combos: List[Dict[str, Any]],
 
 
 def _fuse_key(s: Step) -> Tuple:
+    # timeout/on_failure are part of the key: steps with different failure
+    # policies must not chain-fuse into one node (a fused node has exactly
+    # one policy).
     return (s.queue, s.handler_name(), s.sample_set, s.params,
-            tuple(sorted(s.resources.items())))
+            tuple(sorted(s.resources.items())), s.timeout, s.on_failure)
 
 
 def compile_dag(spec: StudySpec,
@@ -221,6 +229,8 @@ def compile_dag(spec: StudySpec,
                 handler=s.handler_name(),
                 max_retries=s.max_retries,
                 resources=dict(s.resources),
+                timeout=s.timeout,
+                on_failure=s.on_failure,
             ))
             node_of_step[s.name] = nodes[-1].idx
 

@@ -49,6 +49,16 @@ chance to be fused.  Keep it well below the broker visibility timeout
 and in the order of one device launch (a few ms on CPU); raise it when
 many slow pumps feed one engine, lower it toward zero to approximate
 per-batch execution.
+
+With ``adaptive=True`` (the default) the engine also tracks an EMA of
+submission inter-arrival gaps.  When arrivals are *slower* than
+``max_wait_ms`` — i.e. waiting out the full deadline cannot buy extra
+fusion because the next task will not arrive in time — the dispatcher
+flushes early once the buffer has sat idle for a short grace period
+(``max_wait / 4``).  Bursty pumps (gaps well under the window) are
+unaffected, so fusion behaviour under load is identical; only the
+lone-straggler latency improves.  Such flushes are counted in
+``stats()["adaptive_flushes"]``.
 """
 from __future__ import annotations
 
@@ -91,11 +101,15 @@ class PendingTask:
 class ExecutionEngine:
     """Shared size-or-deadline micro-batching scheduler over one runtime."""
 
+    _GAP_ALPHA = 0.4  # EMA smoothing for submission inter-arrival gaps
+
     def __init__(self, runtime, max_batch: int = 32,
-                 max_wait_ms: float = 8.0):
+                 max_wait_ms: float = 8.0, adaptive: bool = True):
         self.runtime = runtime
         self.max_batch = max(1, int(max_batch))
         self.max_wait = max(0.0, float(max_wait_ms) / 1000.0)
+        self.adaptive = bool(adaptive)
+        self._idle_grace = self.max_wait * 0.25
         self._cv = threading.Condition()
         self._buf: List[PendingTask] = []
         self._deadline: Optional[float] = None
@@ -104,10 +118,12 @@ class ExecutionEngine:
         self._refs = 0
         self._thread: Optional[threading.Thread] = None
         self._t0: Optional[float] = None  # first submission (uptime clock)
+        self._last_submit: Optional[float] = None
+        self._ema_gap: Optional[float] = None
         self._stats: Dict[str, object] = {
             "submitted": 0, "executed": 0, "failed_tasks": 0,
             "batches": 0, "size_flushes": 0, "deadline_flushes": 0,
-            "forced_flushes": 0, "max_batch_seen": 0,
+            "forced_flushes": 0, "adaptive_flushes": 0, "max_batch_seen": 0,
             "exec_s": 0.0, "batch_hist": {},
         }
 
@@ -186,6 +202,12 @@ class ExecutionEngine:
             now = time.monotonic()
             if self._t0 is None:
                 self._t0 = now
+            if self._last_submit is not None:
+                gap = now - self._last_submit
+                self._ema_gap = gap if self._ema_gap is None else (
+                    self._GAP_ALPHA * gap
+                    + (1.0 - self._GAP_ALPHA) * self._ema_gap)
+            self._last_submit = now
             if not self._buf:
                 self._deadline = now + self.max_wait
             self._buf.extend(pendings)
@@ -195,11 +217,18 @@ class ExecutionEngine:
 
     def flush(self) -> None:
         """Dispatch the current partial buffer without waiting for the
-        deadline (drain/shutdown path).  No-op when the buffer is empty."""
+        deadline (drain/shutdown path).
+
+        The request is STICKY when the buffer is empty: a worker may hold
+        leased-but-not-yet-submitted tasks at the instant shutdown calls
+        this (the lease->submit window), and dropping the request would
+        strand that batch — the worker parks on its handles for the full
+        deadline while shutdown's join times out.  Persisting the flag
+        makes the next submitted batch dispatch immediately; it is
+        cleared the moment a dispatch empties the buffer."""
         with self._cv:
-            if self._buf:
-                self._flush_asked = True
-                self._cv.notify_all()
+            self._flush_asked = True
+            self._cv.notify_all()
 
     # -- dispatcher ----------------------------------------------------------
     def _loop(self) -> None:
@@ -209,10 +238,18 @@ class ExecutionEngine:
                     self._cv.wait()
                 if not self._buf and self._closed:
                     return
-                # size-or-deadline wait (closed/flush cut it short)
+                # size-or-deadline wait (closed/flush cut it short); with
+                # adaptation, a buffer whose feed has gone quiet flushes
+                # after a short idle grace instead of the full window
                 while (len(self._buf) < self.max_batch and not self._closed
                        and not self._flush_asked):
-                    remaining = self._deadline - time.monotonic()
+                    cutoff = self._deadline
+                    if (self.adaptive and self._ema_gap is not None
+                            and self._ema_gap > self.max_wait
+                            and self._last_submit is not None):
+                        cutoff = min(cutoff,
+                                     self._last_submit + self._idle_grace)
+                    remaining = cutoff - time.monotonic()
                     if remaining <= 0:
                         break
                     self._cv.wait(remaining)
@@ -220,6 +257,8 @@ class ExecutionEngine:
                     reason = "size_flushes"
                 elif self._flush_asked or self._closed:
                     reason = "forced_flushes"
+                elif time.monotonic() < self._deadline:
+                    reason = "adaptive_flushes"
                 else:
                     reason = "deadline_flushes"
                 batch = self._buf[:self.max_batch]
@@ -279,6 +318,8 @@ class ExecutionEngine:
             s = dict(self._stats)
             s["batch_hist"] = dict(s["batch_hist"])
             s["buffered"] = len(self._buf)
+            s["ema_gap_ms"] = (self._ema_gap * 1000.0
+                               if self._ema_gap is not None else None)
             t0 = self._t0
         s["avg_batch"] = (s["executed"] / s["batches"]) if s["batches"] else 0.0
         up = (time.monotonic() - t0) if t0 is not None else 0.0

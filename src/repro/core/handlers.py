@@ -98,9 +98,17 @@ class SubprocessHandler:
             raise HandlerError(
                 f"step '{step.name}': handler 'subprocess' needs cmd")
         script = render_script(step, ctx)
-        res = subprocess.run([step.shell, script], cwd=ctx.workspace,
-                             capture_output=True, text=True,
-                             timeout=self.timeout)
+        # per-step `timeout:` overrides the handler default; subprocess.run
+        # kills the child at the deadline (the wall-clock kill), and the
+        # typed HandlerError routes into the normal retry/on_failure path
+        timeout = step.timeout if step.timeout is not None else self.timeout
+        try:
+            res = subprocess.run([step.shell, script], cwd=ctx.workspace,
+                                 capture_output=True, text=True,
+                                 timeout=timeout)
+        except subprocess.TimeoutExpired:
+            raise HandlerError(
+                f"step {step.name} timed out after {timeout}s (killed)")
         if res.returncode != 0:
             raise HandlerError(
                 f"step {step.name} failed rc={res.returncode}: "
@@ -204,7 +212,8 @@ class SchedulerJobHandler:
         script = render_script(step, ctx)
         job_id = self.scheduler.submit(script, ctx.workspace,
                                        step.resources)
-        deadline = time.monotonic() + self.timeout
+        timeout = step.timeout if step.timeout is not None else self.timeout
+        deadline = time.monotonic() + timeout
         while True:
             st = self.scheduler.status(job_id)
             if st == "COMPLETED":

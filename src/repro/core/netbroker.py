@@ -58,13 +58,16 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.queue import (Broker, BrokerError, BrokerFull,
                               BrokerUnavailable, FileBroker, InMemoryBroker,
-                              Lease, Task, _normalize_queues)
+                              Lease, StaleEpochError, Task,
+                              _normalize_queues)
+from repro.core.resilience import BackoffPolicy, CircuitBreaker
 
 # structured server errors carry the exception class name; the client maps
 # it back to the right BrokerError subclass so e.g. backpressure
 # (BrokerFull) is catchable as BrokerFull on the producer's side of the
 # wire, not as a generic failure
-_ERROR_TYPES = {"BrokerFull": BrokerFull}
+_ERROR_TYPES = {"BrokerFull": BrokerFull,
+                "StaleEpochError": StaleEpochError}
 
 # one frame = one request or response; big enough for a 32-task lease batch
 # of fat payloads, small enough to reject garbage (e.g. an HTTP client)
@@ -345,12 +348,22 @@ class NetBroker:
 
     def __init__(self, address: str, connect_timeout: float = 5.0,
                  reconnect_timeout: float = 10.0,
-                 request_grace: float = 10.0, block_chunk: float = 5.0):
+                 request_grace: float = 10.0, block_chunk: float = 5.0,
+                 breaker: Optional[CircuitBreaker] = None):
         self.host, self.port = parse_address(address)
         self.connect_timeout = connect_timeout
         self.reconnect_timeout = reconnect_timeout
         self.request_grace = request_grace
         self.block_chunk = block_chunk
+        # per-endpoint circuit breaker: once a few calls have each burned a
+        # full reconnect window, later calls fail fast (the endpoint is
+        # DOWN) until a half-open probe heals it.  reset_timeout is short
+        # so a restarted server is re-adopted within ~0.5 s, preserving the
+        # pre-breaker restart-survival behavior.  Transient blips that
+        # recover *within* a reconnect window never count as failures.
+        self.breaker = breaker or CircuitBreaker(failure_threshold=3,
+                                                 reset_timeout=0.5)
+        self._backoff = BackoffPolicy(base=0.05, cap=1.0)
         self._tls = threading.local()
         # sock -> owning thread; pruned when that thread exits, else a
         # long-lived client shared by successive WorkerPools would pin one
@@ -424,8 +437,13 @@ class NetBroker:
         server-side, acks are idempotent, puts are at-least-once."""
         if self._closed:
             raise BrokerError("NetBroker is closed")
+        if not self.breaker.allow():
+            # endpoint known-dead: fail fast instead of burning another
+            # caller's full reconnect window (half-open probes re-test it)
+            raise BrokerUnavailable(
+                f"broker at {self.address}: circuit open (failing fast)")
         deadline = time.monotonic() + self.reconnect_timeout
-        delay = 0.05
+        attempt = 0
         while True:
             try:
                 sock = self._connected()
@@ -437,11 +455,16 @@ class NetBroker:
                 self._drop_conn()
                 now = time.monotonic()
                 if now >= deadline or self._closed:
+                    self.breaker.record_failure()
                     raise BrokerUnavailable(
                         f"broker at {self.address} unreachable: {e}") from e
-                time.sleep(min(delay, max(0.0, deadline - now)))
-                delay = min(delay * 2, 1.0)
+                time.sleep(min(self._backoff.delay(attempt),
+                               max(0.0, deadline - now)))
+                attempt += 1
                 continue
+            # any response — success or a structured error like BrokerFull
+            # — proves the endpoint is alive
+            self.breaker.record_success()
             if not resp.get("ok"):
                 exc = _ERROR_TYPES.get(resp.get("error_type"), BrokerError)
                 raise exc(resp.get("error", "remote broker error"))
@@ -550,6 +573,7 @@ class NetBroker:
     def stats(self) -> Dict[str, int]:
         s = dict(self._call("stats")["stats"])
         s["net_reconnects"] = self._reconnects
+        s["circuit"] = self.breaker.state
         return s
 
 
@@ -564,7 +588,9 @@ def make_broker(url, **kwargs) -> Broker:
     * ``file:///shared/dir``   FileBroker on a shared directory
     * ``tcp://host:port``      NetBroker client to a BrokerServer
     * ``shard://h1:p1,h2:p2``  ShardedBroker federating N endpoints
-      (comma-separated; entries without a scheme default to ``tcp://``)
+      (comma-separated; entries without a scheme default to ``tcp://``;
+      ``|``-separated replicas per shard — ``shard://h1:p1|h1r:p1r,...``
+      — fail over under a fenced per-shard epoch when a primary dies)
     * ``shard+file://<path>``  ShardedBroker assembled from an endpoint
       discovery file published by ``broker-serve --announce <path>``
       (waits for the declared federation size; ``expect=`` overrides it,
@@ -591,8 +617,18 @@ def make_broker(url, **kwargs) -> Broker:
                                **kwargs)
     if url.startswith("shard://"):
         from repro.core.shardbroker import ShardedBroker
-        endpoints = [e if "://" in e else f"tcp://{e}"
-                     for e in url[len("shard://"):].split(",") if e]
+        # each comma-separated shard entry may carry |-separated replica
+        # endpoints: "shard://h1:p1|h1r:p1r,h2:p2" — the first endpoint is
+        # the initial primary, the rest are failover candidates
+        endpoints = []
+        for entry in url[len("shard://"):].split(","):
+            if not entry:
+                continue
+            cands = [e if "://" in e else f"tcp://{e}"
+                     for e in entry.split("|") if e]
+            if not cands:
+                continue
+            endpoints.append(cands[0] if len(cands) == 1 else cands)
         if not endpoints:
             raise ValueError("shard:// broker URL needs at least one "
                              "comma-separated endpoint")

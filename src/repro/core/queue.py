@@ -115,6 +115,13 @@ class BrokerFull(BrokerError):
     throttle and retry, never treat this as fatal."""
 
 
+class StaleEpochError(BrokerError):
+    """An ack/nack carried a lease tag minted under a superseded shard
+    epoch (the tag's primary died and ownership failed over).  The old
+    primary's leases are fenced: the operation is rejected so a zombie
+    cannot complete work the new primary has already redelivered."""
+
+
 def validate_queue_name(queue: str) -> str:
     """The ONE queue-name rule, enforced at Task creation for every backend.
 
@@ -134,6 +141,27 @@ def validate_queue_name(queue: str) -> str:
 PRIORITY_REAL = 0
 PRIORITY_GEN = 1
 PRIORITY_LOW = 2
+
+# --- dead-letter queues ------------------------------------------------------
+# A task whose step policy is ``on_failure: dead_letter`` moves, at retry
+# exhaustion, to ``dlq.<original queue>`` on the SAME broker.  DLQ queues are
+# ordinary queues for explicit addressing (merlin-dlq lists/inspects/requeues
+# them over any broker URL) but are EXCLUDED from wildcard subscriptions,
+# wildcard qsize, and idle() — otherwise any ``queues=None`` worker would
+# re-execute dead letters forever and a drain would wedge on them.
+DLQ_PREFIX = "dlq."
+
+
+def dlq_queue_name(queue: str) -> str:
+    return queue if is_dlq(queue) else DLQ_PREFIX + queue
+
+
+def is_dlq(queue: str) -> bool:
+    return queue.startswith(DLQ_PREFIX)
+
+
+def original_queue(queue: str) -> str:
+    return queue[len(DLQ_PREFIX):] if is_dlq(queue) else queue
 
 
 @dataclasses.dataclass
@@ -451,7 +479,10 @@ class InMemoryBroker:
 
     # -- consumer side ------------------------------------------------------
     def _pop_best_locked(self, queues: Optional[Tuple[str, ...]]) -> Optional[Task]:
-        names = self._heaps.keys() if queues is None else queues
+        # wildcard subscribers never see dead-letter queues; dlq.* must be
+        # addressed explicitly (merlin-dlq) or its tasks would re-execute
+        names = ([q for q in self._heaps if not is_dlq(q)]
+                 if queues is None else queues)
         best_q = None
         best_key: Optional[Tuple[int, int]] = None
         nonempty: List[str] = []
@@ -571,7 +602,8 @@ class InMemoryBroker:
     def qsize(self, queues: Optional[Sequence[str]] = None) -> int:
         qsel = _normalize_queues(queues)
         with self._lock:
-            names = self._heaps.keys() if qsel is None else qsel
+            names = ([q for q in self._heaps if not is_dlq(q)]
+                     if qsel is None else qsel)
             return sum(len(self._heaps.get(q, ())) for q in names)
 
     def queue_names(self) -> List[str]:
@@ -592,7 +624,10 @@ class InMemoryBroker:
     def idle(self) -> bool:
         with self._lock:
             self._requeue_expired_locked()
-            return not any(self._heaps.values()) and not self._leased
+            # dead-lettered tasks don't keep a drain alive
+            return (not any(h for q, h in self._heaps.items()
+                            if not is_dlq(q))
+                    and not self._leased)
 
 
 class FileBroker:
@@ -1004,7 +1039,9 @@ class FileBroker:
 
     def _pop_best(self, queues: Optional[Tuple[str, ...]]) -> Optional[Tuple[str, str]]:
         with self._ilock:
-            names = list(self._index) if queues is None else queues
+            # wildcard consumers skip dead-letter queues (see DLQ_PREFIX)
+            names = ([q for q in self._index if not is_dlq(q)]
+                     if queues is None else queues)
             best_q = None
             nonempty = []
             for q in names:
@@ -1214,8 +1251,10 @@ class FileBroker:
     def qsize(self, queues: Optional[Sequence[str]] = None) -> int:
         qsel = _normalize_queues(queues)
         if qsel is None:
+            # wildcard size mirrors wildcard consumption: no dlq.* queues
             try:
-                qsel = tuple(os.listdir(self.qroot))
+                qsel = tuple(q for q in os.listdir(self.qroot)
+                             if not is_dlq(q))
             except OSError:
                 return 0
         total = 0

@@ -26,6 +26,9 @@ re-walk + decompress of the tree.
 from __future__ import annotations
 
 import dataclasses
+import random
+import threading
+import time
 from typing import Dict, Optional, Set, Tuple
 
 from repro.core.bundler import Bundler, missing_samples
@@ -40,6 +43,88 @@ class RetryPolicy:
 
     def should_retry(self, task: Task) -> bool:
         return task.retries < self.max_retries
+
+
+@dataclasses.dataclass
+class BackoffPolicy:
+    """Jittered exponential backoff: ``delay(attempt)`` for attempt 0, 1, ...
+
+    ``base * multiplier**attempt`` capped at ``cap``, then multiplied by a
+    uniform factor in ``[1 - jitter, 1]`` so a fleet of workers that failed
+    together doesn't retry in lockstep.  The one home for retry cadence —
+    worker broker-error loops and NetBroker reconnects both use it instead
+    of hand-rolled constants.
+    """
+    base: float = 0.05
+    cap: float = 1.0
+    multiplier: float = 2.0
+    jitter: float = 0.25
+    rng: Optional[random.Random] = None
+
+    def delay(self, attempt: int) -> float:
+        d = min(self.cap, self.base * self.multiplier ** max(0, attempt))
+        if self.jitter > 0:
+            r = self.rng.random() if self.rng is not None else random.random()
+            d *= 1.0 - self.jitter * r
+        return d
+
+
+class CircuitBreaker:
+    """Per-endpoint circuit breaker: closed → open → half-open.
+
+    ``failure_threshold`` consecutive hard failures open the circuit;
+    while open, ``allow()`` returns False (callers fail fast instead of
+    burning their full reconnect window against a dead endpoint).  After
+    ``reset_timeout`` seconds one probe call is let through (half-open):
+    its ``record_success`` closes the circuit, its ``record_failure``
+    re-opens it for another window.  Thread-safe.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, failure_threshold: int = 3,
+                 reset_timeout: float = 1.0):
+        self.failure_threshold = max(1, failure_threshold)
+        self.reset_timeout = reset_timeout
+        self._lock = threading.Lock()
+        self._state = self.CLOSED
+        self._failures = 0
+        self._opened_at = 0.0
+
+    @property
+    def state(self) -> str:
+        with self._lock:
+            self._maybe_half_open()
+            return self._state
+
+    def _maybe_half_open(self) -> None:
+        if self._state == self.OPEN and \
+                time.monotonic() - self._opened_at >= self.reset_timeout:
+            self._state = self.HALF_OPEN
+
+    def allow(self) -> bool:
+        """May a call proceed right now?  In half-open, lets probes through
+        (their outcome decides whether the circuit closes or re-opens)."""
+        with self._lock:
+            self._maybe_half_open()
+            return self._state != self.OPEN
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._state = self.CLOSED
+            self._failures = 0
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self._maybe_half_open()
+            if self._state == self.HALF_OPEN:
+                self._state = self.OPEN
+                self._opened_at = time.monotonic()
+                return
+            self._failures += 1
+            if self._failures >= self.failure_threshold:
+                self._state = self.OPEN
+                self._opened_at = time.monotonic()
 
 
 def crawl_and_resubmit(bundler: Bundler, expected_n: int, broker,

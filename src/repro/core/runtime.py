@@ -38,8 +38,9 @@ from repro.core import hierarchy as H
 from repro.core import jsonstore
 from repro.core.dag import DagNode, TaskDag, compile_dag
 from repro.core.handlers import ExecutionHandler, default_handlers
-from repro.core.queue import (PRIORITY_GEN, PRIORITY_REAL, InMemoryBroker,
-                              Lease, Task, new_task)
+from repro.core.queue import (PRIORITY_GEN, PRIORITY_REAL, BrokerError,
+                              InMemoryBroker, Lease, Task, new_task)
+from repro.core.resilience import BackoffPolicy
 from repro.core.spec import Step, StudySpec, expand_parameters, substitute
 
 
@@ -298,8 +299,26 @@ class MerlinRuntime:
             self._enqueue_node(study, nidx, iidx)
         return study
 
+    def _put_resilient(self, task: Task, attempts: int = 8) -> None:
+        """Enqueue with bounded backoff retry.  ``_enqueue_node`` runs
+        behind an already-consumed once(enqueue) marker — a transient
+        broker error here is the study's ONLY chance to enqueue that
+        instance, so it must ride out short outages instead of wedging
+        the graph."""
+        backoff = BackoffPolicy(base=0.05, cap=1.0)
+        for attempt in range(attempts):
+            try:
+                self.broker.put(task)
+                return
+            except BrokerError:
+                if attempt == attempts - 1:
+                    raise
+                time.sleep(backoff.delay(attempt))
+
     def _enqueue_node(self, study: str, nidx: int, iidx: int) -> None:
         """Put the root task for one node instance on the broker."""
+        if self.study_halted(study):
+            return  # halted studies grow no new work
         dag = self._dags[study]
         node = dag.nodes[nidx]
         extra = {"study": study, "stage": nidx, "combo": iidx,
@@ -307,16 +326,17 @@ class MerlinRuntime:
                  "gen_queue": self.gen_queue}
         if node.kind == "single":
             extra["n_samples"] = 1
-            self.broker.put(new_task("real", {**extra, "samples": [0, 1],
-                                              "fanout": self.hcfg.max_fanout,
-                                              "bundle": 1},
-                                     priority=PRIORITY_REAL,
-                                     queue=extra["real_queue"]))
+            self._put_resilient(new_task("real",
+                                         {**extra, "samples": [0, 1],
+                                          "fanout": self.hcfg.max_fanout,
+                                          "bundle": 1},
+                                         priority=PRIORITY_REAL,
+                                         queue=extra["real_queue"]))
         else:
             _, n = self._resolve_samples(study, node, node.instances[iidx])
             extra["n_samples"] = n
-            self.broker.put(H.root_task(study, str(nidx), n, self.hcfg,
-                                        extra=extra))
+            self._put_resilient(H.root_task(study, str(nidx), n, self.hcfg,
+                                            extra=extra))
         self._state_set(study, nidx, iidx, "running")
         self.journal.append({"ev": "stage_start", "study": study,
                              "stage": nidx, "combo": iidx})
@@ -410,6 +430,68 @@ class MerlinRuntime:
             return
         if study in self._dags:
             self._state_set(study, nidx, iidx, "failed")
+
+    # -- per-step failure policy (ISSUE 7 tentpole) -------------------------
+    def node_for(self, task: Task) -> Optional[DagNode]:
+        """The DAG node a task belongs to, or None when this runtime does
+        not know the study (a foreign task: fall back to worker defaults)."""
+        try:
+            p = task.payload
+            return self._dags[p["study"]].nodes[p["stage"]]
+        except (KeyError, IndexError, TypeError):
+            return None
+
+    def failure_policy(self, task: Task) -> Optional[Tuple[str, int]]:
+        """``(on_failure, max_retries)`` for a task's node — the per-step
+        policy the worker enforces at retry exhaustion.  None for tasks of
+        unknown studies (the worker's own RetryPolicy applies)."""
+        node = self.node_for(task)
+        if node is None:
+            return None
+        return node.on_failure, node.max_retries
+
+    def complete_skipped(self, task: Task) -> None:
+        """``on_failure: skip``: record the bundle as complete WITHOUT
+        executing it, so the node's counter advances and children unlock.
+        The once-marker keeps this idempotent against redelivered copies
+        racing a real completion."""
+        if self.counters.once(self._done_key(task)):
+            p = task.payload
+            self.journal.append({"ev": "task_skipped", "study": p["study"],
+                                 "stage": p["stage"], "combo": p["combo"],
+                                 "lo": p["samples"][0],
+                                 "hi": p["samples"][1]})
+            self._bundle_done(task)
+
+    def halt_study(self, study: str, reason: str = "") -> bool:
+        """``on_failure: halt_study``: stop the whole study.  The halt is a
+        crash-safe once-marker every process sees; workers drain the
+        study's remaining tasks by acking them unexecuted, and no new node
+        instance is enqueued or unlocked.  Returns True for the caller
+        that actually performed the halt."""
+        if not self.counters.once(f"{study}/halt"):
+            return False
+        self.journal.append({"ev": "study_halt", "study": study,
+                             "reason": reason})
+
+        def upd(doc: Dict[str, Any]) -> None:
+            for ent in doc.get("state", {}).values():
+                if ent.get("status") != "done":
+                    ent["status"] = "halted"
+        jsonstore.update_json(self._state_path(study), upd)
+        return True
+
+    def study_halted(self, study: str) -> bool:
+        return self.counters.once_exists(f"{study}/halt")
+
+    def task_halted(self, task: Task) -> bool:
+        """True when this task belongs to a halted study (workers ack-drop
+        such tasks instead of executing them — the passive drain)."""
+        try:
+            study = task.payload["study"]
+        except (KeyError, TypeError):
+            return False
+        return isinstance(study, str) and self.study_halted(study)
 
     # -- named sample sets ---------------------------------------------------
     def publish_samples(self, study: str, name: str, arr,
@@ -506,6 +588,8 @@ class MerlinRuntime:
         instance counts satisfied parents in a crash-safe counter and the
         worker that supplies the LAST one enqueues it (exactly once, via
         the enqueue marker)."""
+        if self.study_halted(study):
+            return
         dag = self._dags[study]
         for m, j in dag.instance_children(nidx, iidx):
             need = dag.indegree(m, j)
@@ -670,6 +754,8 @@ class MerlinRuntime:
         while time.monotonic() < deadline:
             if self.study_done(study):
                 return True
+            if self.study_halted(study):
+                return False  # halt is terminal: don't poll out the timeout
             time.sleep(poll)
         return False
 

@@ -24,11 +24,16 @@ Routing model (why by queue, not by task):
   queues; a subscription that lives entirely on one shard degenerates to
   a single pass-through call (no fan-out tax for pinned workers).
 
-Lease tags are wrapped as ``"<shard-idx>:<backend-tag>"`` so ``ack``,
-``ack_many`` (grouped per shard: one call each), and ``nack`` route back
-to the owning shard without keeping client-side lease state — a
-ShardedBroker is as stateless as a NetBroker, so any instance (any
-process) can ack any other instance's tags.
+Lease tags are wrapped as ``"<shard-idx>:<epoch>:<backend-tag>"`` so
+``ack``, ``ack_many`` (grouped per shard: one call each), and ``nack``
+route back to the owning shard without keeping client-side lease state —
+a ShardedBroker is as stateless as a NetBroker, so any instance (any
+process) can ack any other instance's tags.  The epoch fences failover:
+when a shard's primary dies and a replica takes over, the epoch bumps
+and tags minted against the old primary are rejected
+(:class:`~repro.core.queue.StaleEpochError` for single ack/nack;
+silently dropped and counted for ``ack_many``) instead of completing
+work the new primary has already redelivered.
 
 Introspection merges the shard views: ``qsize``/``inflight`` sum,
 ``queue_names`` unions, ``stats`` sums the counters, merges the
@@ -50,9 +55,12 @@ import zlib
 from typing import (Any, Dict, Iterable, List, Optional, Sequence, Tuple,
                     Union)
 
+import threading
+
 from repro.core import jsonstore
-from repro.core.queue import (Broker, BrokerUnavailable, Lease, Task,
-                              _normalize_queues, validate_queue_name)
+from repro.core.queue import (Broker, BrokerUnavailable, Lease,
+                              StaleEpochError, Task, _normalize_queues,
+                              validate_queue_name)
 
 
 def shard_index(queue: str, n_shards: int) -> int:
@@ -192,18 +200,42 @@ class ShardedBroker:
     non-blocking each rotation).
     """
 
-    def __init__(self, shards: Sequence[Union[Broker, str]],
+    def __init__(self, shards: Sequence[Union[Broker, str, Sequence]],
                  queue_shards: Optional[Dict[str, int]] = None,
                  poll_slice: float = 0.05, **endpoint_kwargs):
         if not shards:
             raise ValueError("ShardedBroker needs at least one shard")
-        resolved: List[Broker] = []
+        self._endpoint_kwargs = dict(endpoint_kwargs)
+        # each shard entry may name REPLICA candidates: a list of
+        # brokers/URLs, or a "url1|url2" pipe-string.  The first candidate
+        # is the initial primary; on primary death queue ownership fails
+        # over to the next live candidate under a bumped per-shard epoch.
+        self._candidates: List[List[Union[Broker, str]]] = []
         for s in shards:
-            if isinstance(s, str):
-                from repro.core.netbroker import make_broker
-                s = make_broker(s, **endpoint_kwargs)
-            resolved.append(s)
+            if isinstance(s, str) and "|" in s:
+                cands: List[Union[Broker, str]] = \
+                    [c for c in s.split("|") if c]
+            elif isinstance(s, (list, tuple)):
+                cands = list(s)
+            else:
+                cands = [s]
+            if not cands:
+                raise ValueError("shard entry names no endpoints")
+            self._candidates.append(cands)
+        resolved: List[Broker] = []
+        for cands in self._candidates:
+            primary = self._resolve(cands[0])
+            if primary is None:
+                raise BrokerUnavailable(
+                    f"cannot construct primary endpoint {cands[0]!r}")
+            cands[0] = primary  # resolve once; failover reuses the instance
+            resolved.append(primary)
         self.shards: List[Broker] = resolved
+        self._active_cand = [0] * len(resolved)
+        self._epochs = [0] * len(resolved)
+        self._fo_lock = threading.Lock()
+        self._failovers = 0
+        self._stale_acks_rejected = 0
         self.queue_shards = dict(queue_shards or {})
         for q, i in self.queue_shards.items():
             validate_queue_name(q)
@@ -212,6 +244,81 @@ class ShardedBroker:
                                  f"for {len(self.shards)} shards")
         self.poll_slice = poll_slice
         self._rr_offset = 0  # rotates blocking waits across shards
+
+    def _resolve(self, cand: Union[Broker, str]) -> Optional[Broker]:
+        if not isinstance(cand, str):
+            return cand
+        from repro.core.netbroker import make_broker
+        try:
+            return make_broker(cand, **self._endpoint_kwargs)
+        except (ValueError, OSError, BrokerUnavailable):
+            return None
+
+    # -- failover ------------------------------------------------------------
+    def _failover(self, idx: int, seen_epoch: int) -> bool:
+        """Swap shard ``idx`` to its next live replica candidate and bump
+        the shard epoch (fencing every lease tag minted before the swap).
+        Returns True when the shard now points at a (possibly new) live
+        endpoint; False when no candidate answered."""
+        with self._fo_lock:
+            if self._epochs[idx] != seen_epoch:
+                return True  # a concurrent caller already failed over
+            cands = self._candidates[idx]
+            start = self._active_cand[idx]
+            for off in range(1, len(cands) + 1):
+                j = (start + off) % len(cands)
+                cand = cands[j]
+                if isinstance(cand, str) and not _endpoint_alive(cand):
+                    continue
+                broker = self._resolve(cand)
+                if broker is None:
+                    continue
+                if isinstance(cand, str):
+                    cands[j] = broker  # cache the client for future cycles
+                old = self.shards[idx]
+                self.shards[idx] = broker
+                self._active_cand[idx] = j
+                self._epochs[idx] += 1
+                self._failovers += 1
+                if old is not broker:
+                    close = getattr(old, "close", None)
+                    if close is not None:
+                        try:
+                            close()
+                        except Exception:
+                            pass
+                return True
+            return False
+
+    def _call_shard(self, idx: int, fn):
+        """Run ``fn(shard)`` with one failover-and-retry on endpoint death."""
+        seen = self._epochs[idx]
+        try:
+            return fn(self.shards[idx])
+        except BrokerUnavailable:
+            if not self._failover(idx, seen):
+                raise
+        return fn(self.shards[idx])
+
+    def shard_health(self) -> List[Dict[str, Any]]:
+        """Per-shard view for merlin-status: active endpoint, epoch, and a
+        liveness probe of every replica candidate."""
+        out: List[Dict[str, Any]] = []
+        for i, cands in enumerate(self._candidates):
+            ents = []
+            for j, c in enumerate(cands):
+                url = c if isinstance(c, str) else \
+                    getattr(c, "address", type(c).__name__)
+                ents.append({"endpoint": url,
+                             "alive": _endpoint_alive(url)
+                             if isinstance(url, str) else True,
+                             "active": j == self._active_cand[i]})
+            active = self.shards[i]
+            out.append({"shard": i, "epoch": self._epochs[i],
+                        "endpoint": getattr(active, "address",
+                                            type(active).__name__),
+                        "candidates": ents})
+        return out
 
     # -- routing -------------------------------------------------------------
     def shard_for(self, queue: str) -> int:
@@ -231,23 +338,38 @@ class ShardedBroker:
             sel.setdefault(self.shard_for(q), []).append(q)
         return sel
 
-    @staticmethod
-    def _wrap(idx: int, lease: Lease) -> Lease:
-        return Lease(lease.task, f"{idx}:{lease.tag}")
+    def _wrap(self, idx: int, lease: Lease) -> Lease:
+        # the shard epoch rides in the tag: after a failover bumps the
+        # epoch, tags minted against the dead primary are FENCED — their
+        # ack/nack raises StaleEpochError instead of silently completing
+        # against a broker that no longer owns the queue
+        return Lease(lease.task, f"{idx}:{self._epochs[idx]}:{lease.tag}")
 
-    def _unwrap(self, tag: str) -> Tuple[int, str]:
-        idx_s, _, inner = tag.partition(":")
+    def _unwrap(self, tag: str) -> Tuple[int, int, str]:
+        idx_s, _, rest = tag.partition(":")
+        epoch_s, _, inner = rest.partition(":")
         try:
             idx = int(idx_s)
+            epoch = int(epoch_s)
             if not 0 <= idx < len(self.shards):
                 raise ValueError(tag)
         except ValueError:
             raise ValueError(f"not a sharded lease tag: {tag!r}") from None
-        return idx, inner
+        return idx, epoch, inner
+
+    def _check_epoch(self, idx: int, epoch: int, tag: str) -> None:
+        if epoch != self._epochs[idx]:
+            with self._fo_lock:
+                self._stale_acks_rejected += 1
+            raise StaleEpochError(
+                f"lease tag {tag!r} was minted under shard {idx} epoch "
+                f"{epoch}; the shard is now at epoch {self._epochs[idx]} "
+                f"(primary failed over) — the task redelivers on the new "
+                f"primary")
 
     # -- producer side -------------------------------------------------------
     def put(self, task: Task) -> None:
-        self.shards[self.shard_for(task.queue)].put(task)
+        self._call_shard(self.shard_for(task.queue), lambda b: b.put(task))
 
     def put_many(self, tasks: List[Task]) -> None:
         by_shard: Dict[int, List[Task]] = {}
@@ -257,7 +379,7 @@ class ShardedBroker:
         # shard propagates after earlier shards were fed — at-least-once
         # delivery makes retrying the whole batch safe
         for idx, ts in by_shard.items():
-            self.shards[idx].put_many(ts)
+            self._call_shard(idx, lambda b, ts=ts: b.put_many(ts))
 
     # -- consumer side -------------------------------------------------------
     def get(self, timeout: Optional[float] = 0.0,
@@ -280,7 +402,8 @@ class ShardedBroker:
         sel = self._shard_selectors(qsel)
         if len(sel) == 1:
             idx, qs = next(iter(sel.items()))
-            leases = self.shards[idx].get_many(n, timeout=timeout, queues=qs)
+            leases = self._call_shard(
+                idx, lambda b: b.get_many(n, timeout=timeout, queues=qs))
             return [self._wrap(idx, l) for l in leases]
         deadline = None if timeout is None else time.monotonic() + timeout
         order = sorted(sel)
@@ -291,8 +414,10 @@ class ShardedBroker:
             self._rr_offset = (self._rr_offset + 1) % len(order)
             for k in range(len(order)):
                 idx = order[(self._rr_offset + k) % len(order)]
-                got = self.shards[idx].get_many(n - len(out), timeout=0.0,
-                                                queues=sel[idx])
+                want = n - len(out)
+                got = self._call_shard(
+                    idx, lambda b, want=want, qs=sel[idx]:
+                    b.get_many(want, timeout=0.0, queues=qs))
                 out.extend(self._wrap(idx, l) for l in got)
                 if len(out) >= n:
                     return out
@@ -307,60 +432,78 @@ class ShardedBroker:
                 slice_t = self.poll_slice
             # blocking slice on one shard; next rotation polls the rest
             idx = order[self._rr_offset % len(order)]
-            got = self.shards[idx].get_many(n, timeout=slice_t,
-                                            queues=sel[idx])
+            got = self._call_shard(
+                idx, lambda b, qs=sel[idx]:
+                b.get_many(n, timeout=slice_t, queues=qs))
             out.extend(self._wrap(idx, l) for l in got)
             if out:
                 return out
 
     def ack(self, tag: str) -> None:
-        idx, inner = self._unwrap(tag)
-        self.shards[idx].ack(inner)
+        idx, epoch, inner = self._unwrap(tag)
+        self._check_epoch(idx, epoch, tag)
+        self._call_shard(idx, lambda b: b.ack(inner))
 
     def ack_many(self, tags: Iterable[str]) -> None:
+        """Batch ack with epoch fencing.  Unlike single ``ack``, stale tags
+        are silently DROPPED (and counted in ``stale_acks_rejected``) —
+        ack_many is the worker's retried-forever flush path, and a raise
+        would wedge every fresh tag in the batch behind one zombie."""
         by_shard: Dict[int, List[str]] = {}
+        stale = 0
         for tag in tags:
-            idx, inner = self._unwrap(tag)
+            idx, epoch, inner = self._unwrap(tag)
+            if epoch != self._epochs[idx]:
+                stale += 1
+                continue
             by_shard.setdefault(idx, []).append(inner)
+        if stale:
+            with self._fo_lock:
+                self._stale_acks_rejected += stale
         for idx, inner_tags in by_shard.items():
-            self.shards[idx].ack_many(inner_tags)
+            self._call_shard(
+                idx, lambda b, ts=inner_tags: b.ack_many(ts))
 
     def nack(self, tag: str) -> None:
-        idx, inner = self._unwrap(tag)
-        self.shards[idx].nack(inner)
+        idx, epoch, inner = self._unwrap(tag)
+        self._check_epoch(idx, epoch, tag)
+        self._call_shard(idx, lambda b: b.nack(inner))
 
     # -- introspection (merged views) ----------------------------------------
     def qsize(self, queues: Optional[Sequence[str]] = None) -> int:
         qsel = _normalize_queues(queues)
-        return sum(self.shards[idx].qsize(qs)
+        return sum(self._call_shard(idx, lambda b, qs=qs: b.qsize(qs))
                    for idx, qs in self._shard_selectors(qsel).items())
 
     def queue_names(self) -> List[str]:
         names = set()
-        for s in self.shards:
-            names.update(s.queue_names())
+        for idx in range(len(self.shards)):
+            names.update(self._call_shard(idx, lambda b: b.queue_names()))
         return sorted(names)
 
     def inflight(self) -> int:
-        return sum(s.inflight() for s in self.shards)
+        return sum(self._call_shard(idx, lambda b: b.inflight())
+                   for idx in range(len(self.shards)))
 
     def inflight_tasks(self) -> List[Tuple[Task, float]]:
         out: List[Tuple[Task, float]] = []
-        for s in self.shards:
-            out.extend(s.inflight_tasks())
+        for idx in range(len(self.shards)):
+            out.extend(self._call_shard(idx, lambda b: b.inflight_tasks()))
         return out
 
     def idle(self) -> bool:
-        return all(s.idle() for s in self.shards)
+        return all(self._call_shard(idx, lambda b: b.idle())
+                   for idx in range(len(self.shards)))
 
     def set_visibility_timeout(self, queue: str, timeout: float) -> None:
-        self.shards[self.shard_for(queue)].set_visibility_timeout(
-            queue, timeout)
+        self._call_shard(self.shard_for(queue),
+                         lambda b: b.set_visibility_timeout(queue, timeout))
 
     def set_max_queue_depth(self, queue: str, depth: Optional[int]) -> None:
         """Per-queue backpressure bound, applied on the queue's owning
         shard (queues never span shards, so one shard is enough)."""
-        self.shards[self.shard_for(queue)].set_max_queue_depth(queue, depth)
+        self._call_shard(self.shard_for(queue),
+                         lambda b: b.set_max_queue_depth(queue, depth))
 
     def heartbeat(self, consumer_id: str,
                   queues: Optional[Sequence[str]] = None) -> None:
@@ -369,7 +512,8 @@ class ShardedBroker:
         reflects the consumers that can actually drain it."""
         qsel = _normalize_queues(queues)
         for idx, qs in self._shard_selectors(qsel).items():
-            self.shards[idx].heartbeat(consumer_id, qs)
+            self._call_shard(
+                idx, lambda b, qs=qs: b.heartbeat(consumer_id, qs))
 
     @property
     def stats(self) -> Dict[str, Any]:
@@ -380,8 +524,8 @@ class ShardedBroker:
         merged: Dict[str, Any] = {}
         consumers: Dict[str, int] = {}
         per_shard: List[Dict[str, Any]] = []
-        for s in self.shards:
-            st = dict(s.stats)
+        for idx in range(len(self.shards)):
+            st = dict(self._call_shard(idx, lambda b: b.stats))
             per_shard.append(st)
             for q, c in (st.get("consumers") or {}).items():
                 consumers[q] = max(consumers.get(q, 0), int(c))
@@ -399,10 +543,19 @@ class ShardedBroker:
                             sub[q] = sub.get(q, 0) + c
         merged["consumers"] = consumers
         merged["shards"] = per_shard
+        merged["epochs"] = list(self._epochs)
+        merged["failovers"] = self._failovers
+        merged["stale_acks_rejected"] = self._stale_acks_rejected
         return merged
 
     def close(self) -> None:
-        for s in self.shards:
+        seen = set()
+        for s in list(self.shards) + [c for cands in self._candidates
+                                      for c in cands
+                                      if not isinstance(c, str)]:
+            if id(s) in seen:
+                continue
+            seen.add(id(s))
             close = getattr(s, "close", None)
             if close is not None:
                 close()

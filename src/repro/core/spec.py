@@ -34,6 +34,13 @@ import yaml
 
 ZIP_SUFFIX = "%zip"
 
+#: Legal per-step ``on_failure`` actions (applied once the retry budget is
+#: exhausted): re-queue and eventually poison (``retry``, the default),
+#: move to the step's ``dlq.<queue>`` dead-letter queue (``dead_letter``),
+#: mark the instance complete so children unlock (``skip``), or halt the
+#: whole study and drain its pending instances (``halt_study``).
+ON_FAILURE_MODES = ("retry", "dead_letter", "skip", "halt_study")
+
 
 class SpecError(ValueError):
     """A study spec failed validation; the message says which rule and where."""
@@ -53,6 +60,8 @@ class Step:
     queue: Optional[str] = None        # route to a dedicated broker queue
     handler: Optional[str] = None      # execution handler; None = infer
     resources: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    timeout: Optional[float] = None    # wall-clock seconds per execution
+    on_failure: str = "retry"          # action once retries are exhausted
 
     def handler_name(self) -> str:
         """The effective handler: explicit, else inferred from fn/cmd."""
@@ -100,6 +109,18 @@ class StudySpec:
                 if base == s.name:
                     raise SpecError(
                         f"step '{s.name}': depends on itself")
+            if s.on_failure not in ON_FAILURE_MODES:
+                raise SpecError(
+                    f"step '{s.name}': on_failure must be one of "
+                    f"{', '.join(ON_FAILURE_MODES)}, got '{s.on_failure}'")
+            if s.timeout is not None and s.timeout <= 0:
+                raise SpecError(
+                    f"step '{s.name}': timeout must be positive, "
+                    f"got {s.timeout}")
+            if s.max_retries < 0:
+                raise SpecError(
+                    f"step '{s.name}': retries must be >= 0, "
+                    f"got {s.max_retries}")
             if s.params is not None:
                 for p in s.params:
                     if p not in param_keys:
@@ -136,12 +157,16 @@ class StudySpec:
                 shell=run.get("shell", "/bin/bash"),
                 depends=tuple(run.get("depends", ())),
                 over_samples=bool(run.get("samples", True)),
-                max_retries=int(run.get("max_retries", 2)),
+                max_retries=int(run.get("retries",
+                                        run.get("max_retries", 2))),
                 params=tuple(params) if params is not None else None,
                 sample_set=str(run.get("sample_set", "default")),
                 queue=run.get("queue"),
                 handler=run.get("handler"),
                 resources=dict(run.get("resources", {}) or {}),
+                timeout=(float(run["timeout"])
+                         if run.get("timeout") is not None else None),
+                on_failure=str(run.get("on_failure", "retry")),
             ))
         params = {k: v["values"] if isinstance(v, dict) else v
                   for k, v in (doc.get("global.parameters") or {}).items()}

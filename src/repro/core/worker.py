@@ -63,8 +63,9 @@ from typing import List, Optional, Sequence
 
 from repro.core import hierarchy as H
 from repro.core.engine import EngineClosed, ExecutionEngine
-from repro.core.queue import BrokerError, BrokerFull, Lease, Task
-from repro.core.resilience import RetryPolicy
+from repro.core.queue import (BrokerError, BrokerFull, Lease, Task,
+                              dlq_queue_name)
+from repro.core.resilience import BackoffPolicy, RetryPolicy
 from repro.core.runtime import MerlinRuntime
 
 
@@ -81,7 +82,8 @@ class Worker(threading.Thread):
                  heartbeat_interval: float = 2.0,
                  throttle_backoff: float = 0.2,
                  max_throttle_retries: int = 50,
-                 engine: Optional[ExecutionEngine] = None):
+                 engine: Optional[ExecutionEngine] = None,
+                 broker_backoff: Optional[BackoffPolicy] = None):
         super().__init__(daemon=True, name=f"merlin-worker-{worker_id}")
         self.runtime = runtime
         self.worker_id = worker_id
@@ -101,9 +103,18 @@ class Worker(threading.Thread):
         # stats["consumers"] undercounts the fleet
         self.consumer_id = f"{socket.gethostname()}:{os.getpid()}:{self.name}"
         self.stats = {"gen": 0, "real": 0, "failed": 0, "broker_retries": 0,
-                      "acks_retried": 0, "throttled": 0}
+                      "acks_retried": 0, "throttled": 0, "acks_dropped": 0,
+                      "dead_lettered": 0, "skipped": 0, "halted_drained": 0}
         self.first_real_at: Optional[float] = None
         self._last_hb = 0.0
+        # jittered-exponential backoff for broker outages (replaces the old
+        # fixed 0.2 s sleep); the streak resets on any successful lease call
+        self.broker_backoff = broker_backoff or BackoffPolicy(
+            base=0.05, cap=1.0, rng=self.rng)
+        self._broker_err_streak = 0
+        # studies known halted: positive cache so the drain check is one
+        # set lookup per task instead of a counter stat
+        self._halted_studies: set = set()
         # acks that hit a broker blip: retried on later iterations instead
         # of being dropped (satellite: a transient error after a successful
         # batch must not force N lease-expiry re-executions)
@@ -142,8 +153,18 @@ class Worker(threading.Thread):
         except BrokerError:
             self.stats["broker_retries"] += 1
             # keep them for the next iteration; cap the backlog — anything
-            # old enough to overflow it has already expired server-side
-            del self._pending_acks[:-self._MAX_PENDING_ACKS]
+            # old enough to overflow it has already expired server-side.
+            # The drop is journaled, never silent: operators auditing a
+            # long outage can see exactly which leases were abandoned to
+            # visibility-timeout redelivery.
+            overflow = len(self._pending_acks) - self._MAX_PENDING_ACKS
+            if overflow > 0:
+                dropped = self._pending_acks[:overflow]
+                self.stats["acks_dropped"] += overflow
+                self.runtime.journal.append(
+                    {"ev": "acks_dropped", "worker": self.worker_id,
+                     "n": overflow, "tags": dropped[:100]})
+                del self._pending_acks[:overflow]
         else:
             self.stats["acks_retried"] += retried
             self._pending_acks.clear()
@@ -165,8 +186,14 @@ class Worker(threading.Thread):
                 # the broker heals we lease again (reconnect-and-resubscribe;
                 # the subscription is stateless, it rides on every get_many)
                 self.stats["broker_retries"] += 1
-                self.stop_event.wait(0.2)
+                self.stop_event.wait(
+                    self.broker_backoff.delay(self._broker_err_streak))
+                self._broker_err_streak += 1
                 continue
+            self._broker_err_streak = 0
+            if not leases:
+                continue
+            leases = self._drop_halted(leases, broker)
             if not leases:
                 continue
             acks: List[str] = []
@@ -193,6 +220,27 @@ class Worker(threading.Thread):
                 acks.extend(self._execute_reals(reals, broker))
             if acks:
                 self._flush_acks(broker, acks)
+
+    def _drop_halted(self, leases: List[Lease], broker) -> List[Lease]:
+        """The passive drain for ``on_failure: halt_study``: tasks of a
+        halted study are acked away unexecuted.  Positives are cached so
+        steady-state drain costs one set lookup per task."""
+        keep: List[Lease] = []
+        drained: List[str] = []
+        for lease in leases:
+            study = lease.task.payload.get("study") \
+                if isinstance(lease.task.payload, dict) else None
+            if isinstance(study, str) and (
+                    study in self._halted_studies
+                    or self.runtime.study_halted(study)):
+                self._halted_studies.add(study)
+                drained.append(lease.tag)
+            else:
+                keep.append(lease)
+        if drained:
+            self.stats["halted_drained"] += len(drained)
+            self._flush_acks(broker, drained)
+        return keep
 
     def _execute_reals(self, reals: List[Lease], broker) -> List[str]:
         """Run a lease batch's real tasks; returns the ackable tags.
@@ -271,24 +319,73 @@ class Worker(threading.Thread):
         return True
 
     def _record_failure(self, lease: Lease, broker) -> None:
+        """Failure bookkeeping + the per-step ``on_failure`` policy.
+
+        Every mode first consumes the retry budget — the step's
+        ``retries:`` when the runtime knows the study, else this worker's
+        RetryPolicy — and the mode's action applies only at exhaustion:
+        ``retry`` acks the poison away (the crawler's job from then on),
+        ``dead_letter`` moves it to ``dlq.<queue>``, ``skip`` marks the
+        bundle complete so children unlock, ``halt_study`` stops the whole
+        study and the fleet drains its tasks."""
         self.stats["failed"] += 1
+        task = lease.task
         self.runtime.journal.append(
-            {"ev": "task_failed", "task": lease.task.id,
-             "kind": lease.task.kind,
-             "payload": {k: v for k, v in lease.task.payload.items()
+            {"ev": "task_failed", "task": task.id, "kind": task.kind,
+             "payload": {k: v for k, v in task.payload.items()
                          if k != "spec"}})
+        policy = self.runtime.failure_policy(task)
+        if policy is None:
+            mode, retry_ok = "retry", self.retry_policy.should_retry(task)
+        else:
+            mode, retry_ok = policy[0], task.retries < policy[1]
         try:
-            if self.retry_policy.should_retry(lease.task):
+            if retry_ok:
                 broker.nack(lease.tag)
-            else:
-                broker.ack(lease.tag)  # poison: give up, leave to crawler
-                if lease.task.kind == "real":
+                return
+            if mode == "dead_letter":
+                self._dead_letter(lease, broker)
+            elif mode == "skip" and task.kind == "real":
+                # gen tasks can't skip-complete (no bundle of their own);
+                # they fall through to the poison path below
+                self.runtime.complete_skipped(task)
+                broker.ack(lease.tag)
+                self.stats["skipped"] += 1
+            elif mode == "halt_study":
+                study = task.payload.get("study") \
+                    if isinstance(task.payload, dict) else None
+                if isinstance(study, str):
+                    self.runtime.halt_study(
+                        study, reason=f"task {task.id} exhausted retries")
+                    self._halted_studies.add(study)
+                broker.ack(lease.tag)
+                self.runtime.note_failure(task)
+            else:  # "retry" exhausted: poison, give up, leave to crawler
+                broker.ack(lease.tag)
+                if task.kind == "real":
                     # surface the give-up in the persisted DAG state so
                     # merlin-status shows the node as failed, not running
-                    self.runtime.note_failure(lease.task)
+                    self.runtime.note_failure(task)
         except BrokerError:
             # lease expiry redelivers with retries bumped — same outcome
             self.stats["broker_retries"] += 1
+
+    def _dead_letter(self, lease: Lease, broker) -> None:
+        """Move an exhausted task to its queue's ``dlq.`` twin.  The clone
+        is put BEFORE the original is acked: a crash in between leaves a
+        duplicate (at-least-once, harmless), never a lost task."""
+        task = lease.task
+        broker.put(Task(id=task.id, kind=task.kind,
+                        payload=dict(task.payload), priority=task.priority,
+                        queue=dlq_queue_name(task.queue),
+                        retries=task.retries))
+        broker.ack(lease.tag)
+        self.stats["dead_lettered"] += 1
+        self.runtime.journal.append(
+            {"ev": "task_dead_lettered", "task": task.id,
+             "queue": task.queue, "dlq": dlq_queue_name(task.queue)})
+        if task.kind == "real":
+            self.runtime.note_failure(task)
 
     def _dispatch(self, task: Task) -> None:
         # injected failure: worker "dies" on this task (no ack, no effect)
@@ -448,7 +545,8 @@ class WorkerPool:
 
     def stats(self) -> dict:
         agg = {"gen": 0, "real": 0, "failed": 0, "broker_retries": 0,
-               "acks_retried": 0, "throttled": 0}
+               "acks_retried": 0, "throttled": 0, "acks_dropped": 0,
+               "dead_lettered": 0, "skipped": 0, "halted_drained": 0}
         for w in self.workers:
             for k in agg:
                 agg[k] += w.stats[k]

@@ -36,6 +36,13 @@ watch into a machine-readable stream, one snapshot object per line:
   PYTHONPATH=src python -m repro.launch.serve merlin-status \
       --broker tcp://host:port [--watch S] [--json]
 
+Dead-letter queue operations (the operator's side of ``on_failure:
+dead_letter`` — inspect what was parked and feed it back after fixing
+the cause; works against any broker URL):
+
+  PYTHONPATH=src python -m repro.launch.serve merlin-dlq \
+      --broker URL list|show|requeue [--queue Q] [--json]
+
 Spec validation (load + compile every workflow spec into its task DAG,
 reporting the first structural error — cycles, unknown dependencies,
 unequal %zip lists, unsatisfiable edges; CI runs this over
@@ -184,7 +191,7 @@ def status_snapshot(broker) -> dict:
     rows = {q: {"depth": broker.qsize((q,)),
                 "inflight": inflight_by_q.get(q, 0),
                 "consumers": consumers.get(q, 0)} for q in queues}
-    return {
+    snap = {
         "queues": rows,
         "totals": {"depth": sum(r["depth"] for r in rows.values()),
                    "inflight": sum(r["inflight"] for r in rows.values())},
@@ -198,6 +205,11 @@ def status_snapshot(broker) -> dict:
                            in (stats.get("acked_by_queue") or {}).items()
                            if isinstance(c, (int, float))},
     }
+    # federation health: per-shard epoch + replica liveness (failover view)
+    shard_health = getattr(broker, "shard_health", None)
+    if shard_health is not None:
+        snap["shards"] = shard_health()
+    return snap
 
 
 def _render_status(snap: dict, broker_url: str) -> str:
@@ -227,6 +239,12 @@ def _render_status(snap: dict, broker_url: str) -> str:
     c = snap["counters"]
     lines.append("counters: " + ", ".join(
         f"{k}={c[k]}" for k in sorted(c)))
+    for sh in snap.get("shards", ()):
+        cands = ", ".join(
+            f"{'*' if ce['active'] else ''}{ce['endpoint']}"
+            f"[{'up' if ce['alive'] else 'DOWN'}]"
+            for ce in sh["candidates"])
+        lines.append(f"shard {sh['shard']} epoch {sh['epoch']}: {cands}")
     return "\n".join(lines)
 
 
@@ -300,6 +318,102 @@ def merlin_status_main(argv=None):
             close()
 
 
+def merlin_dlq_main(argv=None):
+    """``merlin-dlq``: inspect and drain dead-letter queues.
+
+    ``list`` shows every ``dlq.*`` queue with its depth; ``show`` leases
+    the parked tasks, prints them, and releases them back (their
+    redelivery count ticks up — the broker protocol has no peek);
+    ``requeue`` feeds each task back to its original queue with a fresh
+    retry budget, putting BEFORE acking the DLQ lease so a crash
+    mid-requeue duplicates (harmless, once-markers) instead of losing."""
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve merlin-dlq",
+        description="List, inspect, or requeue dead-lettered tasks.")
+    ap.add_argument("--broker", required=True,
+                    help="broker URL: tcp://host:port, file://dir, "
+                         "shard://..., or shard+file://announce-path")
+    ap.add_argument("action", choices=("list", "show", "requeue"))
+    ap.add_argument("--queue", default=None,
+                    help="operate on one original queue (its dlq.<queue>); "
+                         "default: every dlq.* queue the broker reports")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output, one object per line")
+    args = ap.parse_args(argv)
+
+    from repro.core.netbroker import make_broker
+    from repro.core.queue import (Task, dlq_queue_name, is_dlq,
+                                  original_queue)
+    broker = make_broker(args.broker)
+    try:
+        if args.queue is not None:
+            dlqs = [dlq_queue_name(args.queue)]
+        else:
+            dlqs = sorted(q for q in broker.queue_names() if is_dlq(q))
+
+        if args.action == "list":
+            rows = [{"queue": q, "original": original_queue(q),
+                     "depth": broker.qsize((q,))} for q in dlqs]
+            if args.json:
+                for r in rows:
+                    print(json.dumps(r), flush=True)
+            elif not rows:
+                print("(no dead-letter queues)")
+            else:
+                for r in rows:
+                    print(f"{r['queue']:<28} {r['depth']:>6} task(s) "
+                          f"-> {r['original']}")
+            return 0
+
+        n_seen = 0
+        for q in dlqs:
+            # hold every lease until the queue is drained — nacking
+            # mid-drain would make the same task visible again and spin
+            held = []
+            while True:
+                leases = broker.get_many(64, timeout=0.2, queues=(q,))
+                if not leases:
+                    break
+                for lease in leases:
+                    t = lease.task
+                    n_seen += 1
+                    if args.action == "requeue":
+                        # fresh retry budget; put-then-ack so a crash here
+                        # duplicates instead of losing the task
+                        broker.put(Task(id=t.id, kind=t.kind,
+                                        payload=dict(t.payload),
+                                        priority=t.priority,
+                                        queue=original_queue(t.queue)))
+                        broker.ack(lease.tag)
+                    else:
+                        held.append(lease)
+                    info = {"queue": q, "id": t.id, "kind": t.kind,
+                            "retries": t.retries,
+                            "study": t.payload.get("study")
+                            if isinstance(t.payload, dict) else None,
+                            "requeued": args.action == "requeue"}
+                    if args.json:
+                        print(json.dumps(info), flush=True)
+                    else:
+                        verb = "requeued" if args.action == "requeue" \
+                            else "parked"
+                        print(f"{verb} {t.id} ({t.kind}, retries="
+                              f"{t.retries}) {q} -> "
+                              f"{original_queue(q)}")
+            # release the inspection leases (no peek in the protocol;
+            # their redelivery count ticks up)
+            for lease in held:
+                broker.nack(lease.tag)
+        if not args.json:
+            verb = "requeued" if args.action == "requeue" else "shown"
+            print(f"{n_seen} task(s) {verb}")
+        return 0
+    finally:
+        close = getattr(broker, "close", None)
+        if close is not None:
+            close()
+
+
 def merlin_validate_main(argv=None):
     """``merlin-validate``: load each workflow spec and compile it into its
     task DAG, surfacing structural errors (cycles, unknown dependencies,
@@ -349,6 +463,8 @@ def main(argv=None):
         return merlin_status_main(argv[1:])
     if argv and argv[0] == "merlin-validate":
         return merlin_validate_main(argv[1:])
+    if argv and argv[0] == "merlin-dlq":
+        return merlin_dlq_main(argv[1:])
     return llm_serve_main(argv)
 
 

@@ -1,0 +1,137 @@
+"""Chaos suite: the diamond DAG end-to-end under seeded broker fault
+injection (errors, delays, lost leases, dropped acks) with an
+exactly-once completion audit.
+
+The audit rule: raw execution counts may legally exceed one (redelivery
+after a lost ack re-runs work; once-markers make it a no-op), so the
+assertions target COMPLETION accounting — persisted node state, the
+bundle/stage counters, and the journal — which must be exactly-once no
+matter what the broker did.
+"""
+import numpy as np
+import pytest
+
+from repro.core.chaos import ChaosBroker, FlakyFn
+from repro.core.hierarchy import HierarchyCfg
+from repro.core.queue import InMemoryBroker
+from repro.core.runtime import MerlinRuntime
+from repro.core.spec import Step, StudySpec
+from repro.core.worker import WorkerPool
+
+pytestmark = pytest.mark.chaos
+
+N_SAMPLES = 16
+BUNDLE = 4  # -> 4 bundles per parallel stage instance
+
+
+def _diamond_spec():
+    # generous retry budgets: visibility-timeout redeliveries (lost
+    # leases, dropped acks) increment task.retries, and this suite tests
+    # exactly-once completion, not retry exhaustion (test_worker_policy)
+    kw = dict(max_retries=50)
+    return StudySpec(name="dia", steps=[
+        Step(name="prep", fn="prep", **kw),
+        Step(name="left", fn="left", depends=("prep",), **kw),
+        Step(name="right", fn="right", depends=("prep",), **kw),
+        Step(name="join", fn="join", depends=("left", "right"),
+             over_samples=False, **kw)])
+
+
+def _register(rt):
+    for name in ("prep", "left", "right", "join"):
+        rt.register(name, lambda ctx: None)
+
+
+def _run_chaotic(tmp_path, chaos):
+    rt = MerlinRuntime(broker=chaos, workspace=str(tmp_path),
+                       hierarchy=HierarchyCfg(max_fanout=4, bundle=BUNDLE))
+    _register(rt)
+    with WorkerPool(rt, n_workers=3, batch=2) as pool:
+        study = rt.run(_diamond_spec(),
+                       samples=np.zeros((N_SAMPLES, 2), np.float32))
+        assert rt.wait(study, timeout=120)
+        pool.drain(timeout=60)
+    return rt, study
+
+
+def _audit_exactly_once(rt, study):
+    """Completion must be exactly-once regardless of duplicate delivery."""
+    state = rt.dag_state(study)["state"]
+    assert len(state) == 4
+    assert all(v["status"] == "done" for v in state.values())
+
+    events = [e for e in rt.journal.replay() if e.get("study") == study]
+
+    # exactly one stage_done per node instance
+    stage_done = [(e["stage"], e["combo"]) for e in events
+                  if e["ev"] == "stage_done"]
+    assert sorted(stage_done) == [(0, 0), (1, 0), (2, 0), (3, 0)]
+
+    # bundle_done: no duplicates, and each parallel stage's ranges tile
+    # [0, N_SAMPLES) exactly; the single join stage completes once
+    for stage in (0, 1, 2):
+        ranges = sorted((e["lo"], e["hi"]) for e in events
+                        if e["ev"] == "bundle_done" and e["stage"] == stage)
+        assert len(ranges) == len(set(ranges)), f"duplicate bundle s{stage}"
+        assert ranges[0][0] == 0 and ranges[-1][1] == N_SAMPLES
+        for (_, hi), (lo, _) in zip(ranges, ranges[1:]):
+            assert hi == lo, f"gap/overlap in stage {stage}: {ranges}"
+        # the crash-safe counter agrees with the journal
+        assert rt.counters.get(f"{study}/s{stage}/c0") == len(ranges) \
+            == N_SAMPLES // BUNDLE
+    assert rt.counters.get(f"{study}/s3/c0") == 1
+    assert len([e for e in events if e["ev"] == "study_done"]) == 1
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3, 4, 5])
+def test_diamond_survives_broker_chaos(tmp_path, seed):
+    chaos = ChaosBroker(InMemoryBroker(visibility_timeout=1.0), seed=seed,
+                        p_error=0.05, p_delay=0.10, max_delay_s=0.02,
+                        p_lose_lease=0.05)
+    rt, study = _run_chaotic(tmp_path, chaos)
+    # the run must actually have suffered for the audit to mean anything
+    assert chaos.faults["errors"] + chaos.faults["delays"] \
+        + chaos.faults["lost_leases"] > 0
+    _audit_exactly_once(rt, study)
+
+
+def test_diamond_survives_dropped_acks(tmp_path):
+    chaos = ChaosBroker(InMemoryBroker(visibility_timeout=1.0), seed=99,
+                        p_drop_ack=0.35)
+    rt, study = _run_chaotic(tmp_path, chaos)
+    assert chaos.faults["dropped_acks"] > 0
+    _audit_exactly_once(rt, study)
+    # chaos counters surface through the proxied stats
+    assert chaos.stats["chaos"]["dropped_acks"] > 0
+
+
+def test_diamond_survives_partition_window(tmp_path):
+    chaos = ChaosBroker(InMemoryBroker(visibility_timeout=1.0), seed=7)
+    rt = MerlinRuntime(broker=chaos, workspace=str(tmp_path),
+                       hierarchy=HierarchyCfg(max_fanout=4, bundle=BUNDLE))
+    _register(rt)
+    with WorkerPool(rt, n_workers=3, batch=2) as pool:
+        study = rt.run(_diamond_spec(),
+                       samples=np.zeros((N_SAMPLES, 2), np.float32))
+        chaos.partition(0.5)  # total outage mid-study; workers back off
+        assert rt.wait(study, timeout=120)
+        pool.drain(timeout=60)
+    assert chaos.faults["partition_rejections"] > 0
+    _audit_exactly_once(rt, study)
+
+
+def test_diamond_survives_flaky_fn_plus_broker_chaos(tmp_path):
+    chaos = ChaosBroker(InMemoryBroker(visibility_timeout=1.0), seed=11,
+                        p_error=0.03, p_lose_lease=0.03)
+    rt = MerlinRuntime(broker=chaos, workspace=str(tmp_path),
+                       hierarchy=HierarchyCfg(max_fanout=4, bundle=BUNDLE))
+    flaky = FlakyFn(lambda ctx: None, p_fail=0.5, max_failures=2, seed=11)
+    for name in ("prep", "left", "right", "join"):
+        rt.register(name, flaky)
+    with WorkerPool(rt, n_workers=3, batch=2) as pool:
+        study = rt.run(_diamond_spec(),
+                       samples=np.zeros((N_SAMPLES, 2), np.float32))
+        assert rt.wait(study, timeout=120)
+        pool.drain(timeout=60)
+    assert flaky.injected > 0  # handler-level faults actually fired
+    _audit_exactly_once(rt, study)

@@ -40,6 +40,61 @@ def _seed_study(rt: MerlinRuntime, study: str, spans, n_samples: int,
 
 
 # ---------------------------------------------------------------------------
+# adaptive deadline (EMA of submission inter-arrival gaps)
+# ---------------------------------------------------------------------------
+
+class _StubRuntime:
+    """Execution sink for engine-only unit tests."""
+
+    def execute_real_many(self, tasks):
+        pass
+
+    def execute_real(self, task):
+        pass
+
+
+def test_adaptive_flush_cuts_lone_straggler_latency():
+    """When arrivals are slower than the batching window, waiting out the
+    full deadline cannot buy fusion — the engine flushes after the idle
+    grace (max_wait / 4) instead."""
+    eng = ExecutionEngine(_StubRuntime(), max_batch=64, max_wait_ms=400.0,
+                          adaptive=True)
+    try:
+        # first submission: no EMA yet -> full deadline applies
+        p0 = eng.submit(new_task("real", {"i": 0}))
+        time.sleep(0.8)  # a slow feed: gap (0.8s) >> max_wait (0.4s)
+        assert p0.done()  # flushed by its deadline long ago
+        t0 = time.monotonic()
+        p1 = eng.submit(new_task("real", {"i": 1}))
+        assert p1.wait(5.0)
+        waited = time.monotonic() - t0
+        # idle grace is 100ms; the full window would be 400ms
+        assert waited < 0.35, f"adaptive flush too slow: {waited:.3f}s"
+        s = eng.stats()
+        assert s["adaptive_flushes"] >= 1
+        assert s["ema_gap_ms"] > 400.0
+    finally:
+        eng.close()
+
+
+def test_adaptive_engine_leaves_bursts_alone():
+    """Back-to-back submissions (gap << max_wait) must batch exactly as
+    before: no adaptive flush fires, the size rule still wins."""
+    eng = ExecutionEngine(_StubRuntime(), max_batch=8, max_wait_ms=300.0,
+                          adaptive=True)
+    try:
+        pendings = eng.submit_many([new_task("real", {"i": i})
+                                    for i in range(8)])
+        assert all(p.wait(5.0) for p in pendings)
+        s = eng.stats()
+        assert s["size_flushes"] == 1
+        assert s["adaptive_flushes"] == 0
+        assert s["max_batch_seen"] == 8
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
 # cross-worker coalescing
 # ---------------------------------------------------------------------------
 

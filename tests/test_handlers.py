@@ -115,6 +115,33 @@ def test_scheduler_handler_timeout_cancels(tmp_path):
     assert job["proc"].poll() != 0
 
 
+def test_subprocess_per_step_timeout_kills_child(tmp_path):
+    """A step-level ``timeout:`` overrides the handler default and the
+    child is killed at the wall-clock deadline, not left running."""
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    h = SubprocessHandler(timeout=600.0)  # generous default, tight step
+    t0 = time.monotonic()
+    with pytest.raises(HandlerError, match=r"timed out after 0.3s"):
+        h.execute(rt, Step(name="slow", cmd="sleep 30", timeout=0.3),
+                  _ctx(rt, tmp_path))
+    assert time.monotonic() - t0 < 10  # the 600s default did NOT apply
+
+
+def test_scheduler_per_step_timeout_cancels_job(tmp_path):
+    rt = MerlinRuntime(workspace=str(tmp_path))
+    sched = MockScheduler()
+    h = SchedulerJobHandler(scheduler=sched, poll_s=0.01, timeout=600.0)
+    with pytest.raises(HandlerError, match="timed out"):
+        h.execute(rt, Step(name="j", cmd="sleep 30", timeout=0.2),
+                  _ctx(rt, tmp_path))
+    (job,) = sched.jobs.values()
+    deadline = time.monotonic() + 5
+    while job["proc"].poll() is None:
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+    assert job["proc"].poll() != 0  # cancelled at the step deadline
+
+
 def test_handler_name_resolution_via_step():
     assert Step(name="a", fn="f").handler_name() == "fn"
     assert Step(name="a", cmd="true").handler_name() == "subprocess"

@@ -5,7 +5,8 @@ import time
 import pytest
 
 from repro.core.queue import (PRIORITY_GEN, PRIORITY_REAL, FileBroker,
-                              InMemoryBroker, new_task)
+                              InMemoryBroker, dlq_queue_name, is_dlq,
+                              new_task, original_queue)
 
 
 @pytest.fixture(params=["mem", "file"])
@@ -13,6 +14,37 @@ def broker(request, tmp_path):
     if request.param == "mem":
         return InMemoryBroker(visibility_timeout=0.2)
     return FileBroker(str(tmp_path / "q"), visibility_timeout=0.2)
+
+
+def test_dlq_name_helpers():
+    assert dlq_queue_name("sims") == "dlq.sims"
+    assert dlq_queue_name("dlq.sims") == "dlq.sims"  # idempotent
+    assert is_dlq("dlq.sims") and not is_dlq("sims")
+    assert original_queue("dlq.sims") == "sims"
+    assert original_queue("sims") == "sims"
+
+
+def test_dlq_excluded_from_wildcard_but_reachable_by_name(broker):
+    """dlq.* queues are parking lots: wildcard consumption, qsize(None)
+    and idle() all ignore them, while explicit addressing still works —
+    a dead-lettered task can never be re-delivered by accident."""
+    broker.put(new_task("real", {"dead": 1}, queue="dlq.sims"))
+    # wildcard consumers never see it
+    assert broker.get(timeout=0.05) is None
+    assert broker.qsize() == 0
+    assert broker.qsize(["dlq.sims"]) == 1
+    # nothing in the mainline and nothing leased -> the broker is idle
+    # even though the DLQ is non-empty (drain loops must terminate)
+    assert broker.idle()
+    # the operator's explicit fetch (merlin-dlq) still reaches it
+    lease = broker.get(timeout=0.5, queues=["dlq.sims"])
+    assert lease is not None and lease.task.payload == {"dead": 1}
+    broker.ack(lease.tag)
+    # queue_names() keeps reporting it for discovery
+    broker.put(new_task("real", {}, queue="dlq.sims"))
+    broker.put(new_task("real", {}, queue="sims"))
+    assert set(broker.queue_names()) == {"dlq.sims", "sims"}
+    assert broker.qsize() == 1  # only the mainline task counts
 
 
 def test_fifo_within_priority(broker):

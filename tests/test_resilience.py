@@ -6,7 +6,8 @@ import numpy as np
 from repro.core import Bundler, MerlinRuntime, Step, StudySpec, WorkerPool
 from repro.core.hierarchy import HierarchyCfg
 from repro.core.queue import InMemoryBroker, new_task
-from repro.core.resilience import (CursorCrawler, RetryPolicy,
+from repro.core.resilience import (BackoffPolicy, CircuitBreaker,
+                                   CursorCrawler, RetryPolicy,
                                    SpeculativeReissuer, crawl_and_resubmit)
 
 
@@ -16,6 +17,45 @@ def test_retry_policy():
     assert p.should_retry(t)
     t.retries = 2
     assert not p.should_retry(t)
+
+
+def test_backoff_policy_exponential_capped_and_jittered():
+    import random
+    p = BackoffPolicy(base=0.1, cap=1.0, multiplier=2.0, jitter=0.0)
+    assert p.delay(0) == 0.1
+    assert p.delay(1) == 0.2
+    assert p.delay(2) == 0.4
+    assert p.delay(10) == 1.0  # capped
+    assert p.delay(-3) == 0.1  # negative attempts clamp to the base
+    # jitter only ever SHORTENS the delay (within [1-jitter, 1] x nominal)
+    pj = BackoffPolicy(base=0.1, cap=1.0, jitter=0.5,
+                       rng=random.Random(42))
+    for a in range(8):
+        nominal = BackoffPolicy(base=0.1, cap=1.0, jitter=0.0).delay(a)
+        assert 0.5 * nominal <= pj.delay(a) <= nominal
+    # seeded rng makes the schedule reproducible
+    p1 = BackoffPolicy(jitter=0.25, rng=random.Random(7))
+    p2 = BackoffPolicy(jitter=0.25, rng=random.Random(7))
+    assert [p1.delay(a) for a in range(5)] == [p2.delay(a) for a in range(5)]
+
+
+def test_circuit_breaker_state_machine():
+    cb = CircuitBreaker(failure_threshold=2, reset_timeout=0.1)
+    assert cb.state == CircuitBreaker.CLOSED and cb.allow()
+    cb.record_failure()
+    assert cb.state == CircuitBreaker.CLOSED  # below threshold
+    cb.record_failure()
+    assert cb.state == CircuitBreaker.OPEN and not cb.allow()
+    time.sleep(0.12)  # reset window elapses -> half-open probe allowed
+    assert cb.state == CircuitBreaker.HALF_OPEN and cb.allow()
+    cb.record_failure()  # probe failed: straight back to open
+    assert cb.state == CircuitBreaker.OPEN and not cb.allow()
+    time.sleep(0.12)
+    assert cb.allow()
+    cb.record_success()  # probe succeeded: closed, counters cleared
+    assert cb.state == CircuitBreaker.CLOSED
+    cb.record_failure()
+    assert cb.state == CircuitBreaker.CLOSED  # threshold counts from zero
 
 
 def test_failed_attempt_retries_and_succeeds(tmp_path):

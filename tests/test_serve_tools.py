@@ -67,3 +67,63 @@ def test_main_dispatches_merlin_validate(capsys):
     doc = json.loads(capsys.readouterr().out)
     assert doc["ok"] is True and doc["name"] == "diamond-demo"
     assert doc["nodes"] == ["prep", "left", "right", "join"]
+
+
+def test_merlin_dlq_list_show_requeue(tmp_path, capsys):
+    """The merlin-dlq CLI drains dead-letter queues over a broker URL:
+    list depths, show parked tasks (and put them back), requeue them to
+    their original queue with a fresh retry budget."""
+    from repro.core.queue import FileBroker, Task
+    url = f"file://{tmp_path}"
+    seed = FileBroker(str(tmp_path))
+    seed.put(Task(id="t-live", kind="real", payload={}, queue="sims"))
+    for i in range(2):
+        seed.put(Task(id=f"t-dead{i}", kind="real",
+                      payload={"study": "s1"}, queue="dlq.sims",
+                      retries=3))
+
+    assert main(["merlin-dlq", "--broker", url, "list"]) == 0
+    out = capsys.readouterr().out
+    assert "dlq.sims" in out and "2" in out and "-> sims" in out
+
+    assert main(["merlin-dlq", "--broker", url, "list", "--json"]) == 0
+    rows = [json.loads(l) for l in capsys.readouterr().out.splitlines()]
+    assert rows == [{"queue": "dlq.sims", "original": "sims", "depth": 2}]
+
+    # show leases + nacks back: tasks stay parked
+    assert main(["merlin-dlq", "--broker", url, "show"]) == 0
+    out = capsys.readouterr().out
+    assert out.count("parked t-dead") == 2 and "2 task(s) shown" in out
+    assert FileBroker(str(tmp_path)).qsize(("dlq.sims",)) == 2
+
+    # requeue: dlq empties, tasks land back on sims with retries reset
+    assert main(["merlin-dlq", "--broker", url, "requeue",
+                 "--queue", "sims"]) == 0
+    assert "2 task(s) requeued" in capsys.readouterr().out
+    check = FileBroker(str(tmp_path))
+    assert check.qsize(("dlq.sims",)) == 0
+    assert check.qsize(("sims",)) == 3  # the live task + 2 requeued
+    seen = {}
+    while True:
+        lease = check.get(timeout=0.2, queues=("sims",))
+        if lease is None:
+            break
+        seen[lease.task.id] = lease.task.retries
+        check.ack(lease.tag)
+    assert set(seen) == {"t-live", "t-dead0", "t-dead1"}
+    assert seen["t-dead0"] == 0 and seen["t-dead1"] == 0
+
+
+def test_status_snapshot_surfaces_shard_health():
+    """status_snapshot forwards per-shard failover health when the broker
+    exposes it (duck-typed on shard_health)."""
+    class _FakeSharded(InMemoryBroker):
+        def shard_health(self):
+            return [{"shard": 0, "epoch": 1, "candidates": [
+                {"endpoint": "tcp://a:1", "alive": False, "active": False},
+                {"endpoint": "tcp://b:1", "alive": True, "active": True}]}]
+
+    snap = status_snapshot(_FakeSharded())
+    assert snap["shards"][0]["epoch"] == 1
+    assert snap["shards"][0]["candidates"][1]["active"] is True
+    assert "shards" not in status_snapshot(InMemoryBroker())

@@ -12,8 +12,8 @@ import pytest
 
 from repro.core import (Broker, BrokerError, BrokerFull, BrokerServer,
                         Bundler, FileBroker, InMemoryBroker, MerlinRuntime,
-                        NetBroker, ShardedBroker, Step, StudySpec, Task,
-                        WorkerPool, make_broker, new_task)
+                        NetBroker, ShardedBroker, StaleEpochError, Step,
+                        StudySpec, Task, WorkerPool, make_broker, new_task)
 from repro.core.hierarchy import HierarchyCfg
 from repro.core.shardbroker import shard_index
 
@@ -217,6 +217,101 @@ def test_make_broker_shard_url_and_list(tmp_path):
     assert isinstance(sb, ShardedBroker) and len(sb.shards) == 2
     with pytest.raises(ValueError):
         make_broker("shard://")
+
+
+# ---------------------------------------------------------------------------
+# replica failover + epoch fencing
+# ---------------------------------------------------------------------------
+
+@SHARD
+@NET
+def test_make_broker_shard_url_with_replica_pipes():
+    """shard://h1:p1|h1r:p1r,h2:p2 — '|' names replica candidates within
+    one shard, ',' separates shards."""
+    servers = [BrokerServer(InMemoryBroker()).start() for _ in range(3)]
+    try:
+        hp = [s.address[len("tcp://"):] for s in servers]
+        sb = make_broker(f"shard://{hp[0]}|{hp[1]},{hp[2]}")
+        assert isinstance(sb, ShardedBroker)
+        assert len(sb.shards) == 2  # replicas don't add shards
+        assert len(sb._candidates[0]) == 2
+        assert len(sb._candidates[1]) == 1
+        sb.put(new_task("real", {"x": 1}, queue="sims"))
+        lease = sb.get(timeout=1, queues=("sims",))
+        assert lease.task.payload == {"x": 1}
+        sb.ack(lease.tag)
+        sb.close()
+    finally:
+        for s in servers:
+            s.stop()
+
+
+@SHARD
+@NET
+def test_primary_death_fails_over_and_fences_stale_acks(tmp_path):
+    """Kill a primary mid-study: ownership moves to the shard's replica
+    under a bumped epoch, acks minted against the dead primary are
+    rejected as stale, resume() restores the tasks that died with the
+    primary, and the study still completes exactly once."""
+    prim = [BrokerServer(InMemoryBroker()).start() for _ in range(2)]
+    repl = [BrokerServer(InMemoryBroker()).start() for _ in range(2)]
+    results = Bundler(str(tmp_path / "res"))
+    sb = ShardedBroker(
+        [[prim[0].address, repl[0].address],
+         [prim[1].address, repl[1].address]],
+        reconnect_timeout=0.5)
+    try:
+        rt = MerlinRuntime(broker=sb, workspace=str(tmp_path / "ws"),
+                           hierarchy=HierarchyCfg(max_fanout=4, bundle=8))
+        rt.register("sim", lambda ctx: results.write_bundle(
+            ctx.lo, ctx.hi, {"y": ctx.sample_block[:, 0]}))
+        spec = StudySpec(name="fo", steps=[Step(name="sim", fn="sim")])
+        # enqueue with no workers running: the root gen task sits on the
+        # gen queue's owning primary, and dies with it below
+        sid = rt.run(spec, np.arange(64, dtype=np.float32).reshape(64, 1))
+        kidx = sb.shard_for("gen")
+        # a lease minted under epoch 0 of the soon-to-die primary
+        lease = sb.get(timeout=2, queues=("gen",))
+        assert lease is not None and lease.tag.startswith(f"{kidx}:0:")
+        prim[kidx].stop()
+        # any call touching the dead shard triggers the failover
+        sb.qsize()
+        assert sb._epochs[kidx] == 1
+        assert sb._failovers >= 1
+        # the pre-failover lease is fenced: its ack must NOT land on the
+        # replica (same inner tag could alias a fresh lease there)
+        with pytest.raises(StaleEpochError):
+            sb.ack(lease.tag)
+        # ...but the batched flush path drops stale tags silently so a
+        # worker's retried-forever ack flush can never wedge
+        sb.ack_many([lease.tag])
+        assert sb.stats["stale_acks_rejected"] >= 2
+        # health view: the dead primary shows dead, the replica is active
+        health = sb.shard_health()
+        assert health[kidx]["epoch"] == 1
+        cands = health[kidx]["candidates"]
+        assert cands[0]["alive"] is False and cands[0]["active"] is False
+        assert cands[1]["alive"] is True and cands[1]["active"] is True
+        # replicas are warm standbys, not content replicas: the queued
+        # root task died with the primary — resume() re-enqueues it from
+        # the filesystem truth, now landing on the replica
+        rt.resume(sid)
+        with WorkerPool(rt, n_workers=3, batch=2) as pool:
+            assert rt.wait(sid, timeout=90)
+            assert pool.drain(timeout=30)
+        assert np.allclose(np.sort(results.load_all()["y"]), np.arange(64))
+        # exactly-once: one stage_done, one study_done, 8 distinct bundles
+        evs = [e for e in rt.journal.replay()
+               if e.get("study") == sid]
+        assert len([e for e in evs if e["ev"] == "stage_done"]) == 1
+        assert len([e for e in evs if e["ev"] == "study_done"]) == 1
+        ranges = sorted((e["lo"], e["hi"]) for e in evs
+                        if e["ev"] == "bundle_done")
+        assert ranges == [(i, i + 8) for i in range(0, 64, 8)]
+    finally:
+        sb.close()
+        for s in prim + repl:
+            s.stop()
 
 
 # ---------------------------------------------------------------------------

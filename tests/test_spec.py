@@ -40,6 +40,68 @@ def test_yaml_roundtrip():
     assert spec.variables["OUTPUT_ROOT"] == "/tmp/out"
 
 
+FAILURE_YAML = """
+description:
+  name: policy_demo
+study:
+  - name: sim
+    run:
+      cmd: "echo sim"
+      retries: 5
+      timeout: 30
+      on_failure: dead_letter
+  - name: post
+    run:
+      cmd: "echo post"
+      depends: [sim]
+"""
+
+
+def test_yaml_parses_failure_policy_fields():
+    spec = StudySpec.from_yaml(FAILURE_YAML)
+    spec.validate()
+    sim, post = spec.steps
+    assert sim.max_retries == 5          # `retries:` alias
+    assert sim.timeout == 30.0
+    assert sim.on_failure == "dead_letter"
+    # defaults: retry twice, no deadline, nack-to-retry at exhaustion
+    assert post.max_retries == 2
+    assert post.timeout is None
+    assert post.on_failure == "retry"
+
+
+def test_validate_rejects_bad_failure_policy():
+    with pytest.raises(SpecError, match="on_failure"):
+        StudySpec(name="x", steps=[
+            Step(name="a", cmd="true", on_failure="explode")]).validate()
+    with pytest.raises(SpecError, match="timeout"):
+        StudySpec(name="x", steps=[
+            Step(name="a", cmd="true", timeout=0.0)]).validate()
+    with pytest.raises(SpecError, match="timeout"):
+        StudySpec(name="x", steps=[
+            Step(name="a", cmd="true", timeout=-5)]).validate()
+    with pytest.raises(SpecError, match="retries"):
+        StudySpec(name="x", steps=[
+            Step(name="a", cmd="true", max_retries=-1)]).validate()
+
+
+def test_dag_nodes_carry_failure_policy_and_do_not_fuse_across_it():
+    spec = StudySpec(name="pol", steps=[
+        Step(name="a", fn="a", timeout=10, on_failure="skip"),
+        Step(name="b", fn="b", depends=("a",), timeout=20,
+             on_failure="skip")])
+    dag = compile_dag(spec)
+    # differing timeouts must not chain-fuse (one wall-clock budget per
+    # fused execution would silently widen the tighter step's deadline)
+    assert len(dag.nodes) == 2
+    assert dag.nodes[0].timeout == 10 and dag.nodes[0].on_failure == "skip"
+    same = StudySpec(name="pol2", steps=[
+        Step(name="a", fn="a", timeout=10, on_failure="skip"),
+        Step(name="b", fn="b", depends=("a",), timeout=10,
+             on_failure="skip")])
+    assert len(compile_dag(same).nodes) == 1  # identical policies fuse
+
+
 def test_parameter_expansion_cartesian():
     spec = StudySpec(name="x", steps=[Step(name="a")],
                      parameters={"A": [1, 2], "B": ["x", "y", "z"]})
