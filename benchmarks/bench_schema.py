@@ -101,16 +101,42 @@ ENSEMBLE_SPEC: Dict[str, Any] = {
                    "pass": bool},
 }
 
+# the codec A/B pair and the same-host transport scenarios must be
+# present by name: a refactor that silently drops one would leave the
+# wire-codec acceptance unmeasured while the artifact still "passes"
+_REQUIRED_BROKER_SCENARIOS = ("net_mem_arr_w1_b32_bin1",
+                              "net_mem_arr_w1_b32_json",
+                              "net_mem_procs4_b8", "shm_w4_b8")
+
+
+def _broker_scenarios(d: Any) -> Optional[str]:
+    if not (isinstance(d, dict) and d):
+        return "expected a non-empty scenarios object"
+    bad = [k for k, v in d.items()
+           if not (isinstance(v, dict) and _finite(v.get("tasks_per_s"))
+                   and _finite(v.get("wall_s")))]
+    if bad:
+        return f"scenarios need finite tasks_per_s and wall_s: {bad}"
+    missing = [k for k in _REQUIRED_BROKER_SCENARIOS if k not in d]
+    if missing:
+        return f"required scenarios missing: {missing}"
+    return None
+
+
 BROKER_SPEC: Dict[str, Any] = {
-    "meta": {"bench": str, "tasks": _NUM, "quick": bool, "unix_time": _NUM},
-    "scenarios": lambda d: None if (
-        isinstance(d, dict) and d and all(
-            isinstance(v, dict) and _finite(v.get("tasks_per_s"))
-            and _finite(v.get("wall_s")) for v in d.values())
-    ) else "every scenario needs finite tasks_per_s and wall_s",
+    # meta.codec = the wire codec the scenarios were measured under;
+    # meta.env = the applied runtime environment (repro/env.py snapshot)
+    # — perf numbers are only comparable when both are recorded
+    "meta": {"bench": str, "tasks": _NUM, "quick": bool, "unix_time": _NUM,
+             "codec": str, "env": dict,
+             "study_wall": {"bin1_s": _NUM, "json_s": _NUM,
+                            "delta_s": _NUM}},
+    "scenarios": _broker_scenarios,
     "file_index_speedup_vs_seed": _NUM,
     "acceptance": {"net_batched_vs_file_w1_b1": _NUM, "pass_net": bool,
                    "shard2_vs_net_mem_b8": _NUM, "pass_shard": bool,
+                   "bin1_vs_json_arr_b32": _NUM, "pass_codec": bool,
+                   "shm_vs_net_mem_procs4_b8": _NUM, "pass_shm": bool,
                    "pass": bool},
 }
 

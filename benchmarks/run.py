@@ -23,6 +23,9 @@ def main() -> None:
                          "schemas (benchmarks/README.md); exit 1 on errors")
     args = ap.parse_args()
 
+    from repro import env as repro_env
+    repro_env.configure()  # every figure runs on tuned, recorded defaults
+
     from benchmarks import figures as F
 
     rows = []
@@ -98,7 +101,17 @@ def main() -> None:
         rows.append(("broker_shard2_mem_procs4_b8",
                      1e6 / shard["tasks_per_s"],
                      f"{bt['acceptance']['shard2_vs_net_mem_b8']:.2f}x vs "
-                     f"one server, same consumer fleet (bar >= 1.3x)"))
+                     f"one server, same consumer fleet (bar >= "
+                     f"{bt['acceptance']['shard_bar']}x)"))
+        rows.append(("broker_bin1_vs_json_arr_b32",
+                     1e6 / bt["scenarios"][
+                         "net_mem_arr_w1_b32_bin1"]["tasks_per_s"],
+                     f"{bt['acceptance']['bin1_vs_json_arr_b32']:.2f}x vs "
+                     f"JSON on array payloads (bar >= 3x)"))
+        rows.append(("broker_shm_w4_b8",
+                     1e6 / bt["scenarios"]["shm_w4_b8"]["tasks_per_s"],
+                     f"{bt['acceptance']['shm_vs_net_mem_procs4_b8']:.2f}x "
+                     f"vs tcp, same-host fleet (bar > 1x)"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

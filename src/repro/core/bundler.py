@@ -38,13 +38,23 @@ Sig = Tuple[int, int, int]
 
 
 class Bundler:
-    def __init__(self, root: str, files_per_leaf: int = 100):
+    def __init__(self, root: str, files_per_leaf: int = 100, sink=None):
         self.root = root
         self.files_per_leaf = files_per_leaf
+        # optional same-host fast path: any object with
+        # ``push_bundle(lo, hi, results) -> bool`` (e.g.
+        # core/shmring.BundleRing).  Fed AFTER the durable file write —
+        # the npz tree stays the source of truth and of load_since
+        # cursors; a full/broken sink only costs the latency shortcut.
+        self.sink = sink
         os.makedirs(root, exist_ok=True)
         self._file_cache: Dict[str, Tuple[Sig, Dict[str, np.ndarray]]] = {}
         self._all_cache: Optional[Tuple[Dict[str, Sig],
                                         Dict[str, np.ndarray]]] = None
+
+    def attach_sink(self, sink) -> None:
+        """Install/replace the write sink (None detaches)."""
+        self.sink = sink
 
     # -- writing -------------------------------------------------------------
     def leaf_dir(self, bundle_lo: int, bundle_size: int) -> str:
@@ -62,6 +72,11 @@ class Bundler:
         ids = np.arange(lo, hi)
         np.savez_compressed(tmp, _sample_ids=ids, **results)
         os.rename(tmp, path)  # atomic publish
+        if self.sink is not None:
+            try:
+                self.sink.push_bundle(lo, hi, results)
+            except Exception:
+                pass  # the file above is the durable record; sink is best-effort
         return path
 
     # -- aggregation ----------------------------------------------------------

@@ -42,6 +42,20 @@ class name, so typed conditions — notably
 (Keep backends' ``put_timeout`` below the client's ``request_grace``,
 default 10 s, or a blocking put times the socket out first.)
 
+Wire codec negotiation (core/wirecodec.py): every connection starts in
+JSON — the compatibility floor.  A client that prefers the binary codec
+sends ``{"op": "hello", "codecs": ["bin1", "json"]}`` as its first
+request; a codec-aware server replies ``{"ok": true, "codec": "bin1",
+"codecs": [...]}`` and both sides switch for the rest of the
+connection.  An old server answers hello with its normal unknown-op
+error — the client just stays on JSON — and an old client never sends
+hello, so mixed-codec fleets interoperate and a rolling upgrade never
+bricks a federation.  A frame that arrives intact but fails to decode
+is *quarantined*: the server replies with a typed ``CodecError``
+instead of killing the connection thread (transport-level garbage —
+truncated length prefix, oversized frame — still drops the
+connection).
+
 Deployment: ``python -m repro.launch.serve broker-serve`` runs a
 BrokerServer as a standalone process (see examples/quickstart.py
 ``--two-process``).
@@ -49,7 +63,6 @@ BrokerServer as a standalone process (see examples/quickstart.py
 from __future__ import annotations
 
 import dataclasses
-import json
 import socket
 import struct
 import threading
@@ -59,15 +72,19 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 from repro.core.queue import (Broker, BrokerError, BrokerFull,
                               BrokerUnavailable, FileBroker, InMemoryBroker,
                               Lease, StaleEpochError, Task,
-                              _normalize_queues)
+                              _normalize_queues, task_to_wire)
 from repro.core.resilience import BackoffPolicy, CircuitBreaker
+from repro.core.wirecodec import (CodecError, DEFAULT_PREFERENCE, JSON_CODEC,
+                                  get_codec, negotiate_codec)
 
 # structured server errors carry the exception class name; the client maps
 # it back to the right BrokerError subclass so e.g. backpressure
 # (BrokerFull) is catchable as BrokerFull on the producer's side of the
-# wire, not as a generic failure
+# wire, not as a generic failure.  CodecError rides along so a
+# quarantined frame surfaces typed on the sender's side too.
 _ERROR_TYPES = {"BrokerFull": BrokerFull,
-                "StaleEpochError": StaleEpochError}
+                "StaleEpochError": StaleEpochError,
+                "CodecError": CodecError}
 
 # one frame = one request or response; big enough for a 32-task lease batch
 # of fat payloads, small enough to reject garbage (e.g. an HTTP client)
@@ -78,8 +95,14 @@ _MAX_FRAME = 32 * 1024 * 1024
 # framing
 # ---------------------------------------------------------------------------
 
-def _send_frame(sock: socket.socket, obj: dict) -> None:
-    data = json.dumps(obj).encode("utf-8")
+def _send_frame(sock: socket.socket, obj: dict, codec=JSON_CODEC) -> None:
+    # encode failures raise BrokerError, NOT CodecError: an unencodable
+    # object is a local bug, and BrokerError is outside the client's
+    # retry-on-transport-failure set, so it surfaces instead of looping
+    try:
+        data = codec.encode(obj)
+    except (TypeError, ValueError) as e:
+        raise BrokerError(f"unencodable {codec.name} frame: {e}") from e
     if len(data) > _MAX_FRAME:
         raise BrokerError(f"frame of {len(data)} bytes exceeds {_MAX_FRAME}")
     sock.sendall(struct.pack(">I", len(data)) + data)
@@ -95,11 +118,22 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     return bytes(buf)
 
 
-def _recv_frame(sock: socket.socket) -> dict:
+def _recv_raw(sock: socket.socket) -> bytes:
+    """One intact length-prefixed frame, codec-agnostic.
+
+    Transport-level garbage (truncated prefix, oversized length — e.g.
+    an HTTP client) raises ConnectionError: the stream itself is
+    unusable.  Whether the *payload* decodes is the caller's problem —
+    that split is what lets the server quarantine a corrupt frame
+    without dropping the connection."""
     (n,) = struct.unpack(">I", _recv_exact(sock, 4))
     if n > _MAX_FRAME:
         raise ConnectionError(f"oversized frame ({n} bytes)")
-    return json.loads(_recv_exact(sock, n).decode("utf-8"))
+    return _recv_exact(sock, n)
+
+
+def _recv_frame(sock: socket.socket, codec=JSON_CODEC) -> dict:
+    return codec.decode(_recv_raw(sock))
 
 
 def parse_address(address: str) -> Tuple[str, int]:
@@ -125,6 +159,12 @@ class BrokerServer:
     request — clients chunk longer timeouts into successive requests, which
     bounds how long a handler thread can be parked and lets ``stop()``
     return promptly.
+
+    ``codecs`` is the preference-ordered list of wire codecs this server
+    is willing to speak (advertised in the hello reply); ``("json",)``
+    emulates a binary-unaware server for rolling-upgrade testing.  The
+    ``shm_path`` option additionally serves the same backend over a
+    same-host shared-memory registry (see core/shmring.py).
     """
 
     MAX_BLOCK_S = 10.0
@@ -135,8 +175,14 @@ class BrokerServer:
     MAX_PUT_BLOCK_S = 5.0
 
     def __init__(self, backend: Broker, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, codecs: Sequence[str] = DEFAULT_PREFERENCE,
+                 shm_path: Optional[str] = None):
         self.backend = backend
+        self.codecs = tuple(codecs)
+        for name in self.codecs:
+            get_codec(name)  # fail fast on a typo'd codec name
+        self.shm_path = shm_path
+        self._shm_listener = None
         # clamp the backend's backpressure window like MAX_BLOCK_S clamps
         # gets: a put blocking past the clients' request_grace would make
         # them time out mid-put, reconnect, and re-send the batch —
@@ -153,7 +199,9 @@ class BrokerServer:
         self._stopping = threading.Event()
         self._conns: set = set()
         self._conns_lock = threading.Lock()
-        self.stats = {"connections": 0, "requests": 0, "errors": 0}
+        self.stats = {"connections": 0, "requests": 0, "errors": 0,
+                      "codec_errors": 0,
+                      "codecs": {name: 0 for name in self.codecs}}
 
     @property
     def address(self) -> str:
@@ -170,6 +218,11 @@ class BrokerServer:
             target=self._accept_loop, daemon=True,
             name=f"netbroker-accept-{self.port}")
         self._accept_thread.start()
+        if self.shm_path is not None:
+            from repro.core.shmring import ShmListener
+            self._shm_listener = ShmListener(
+                self.shm_path, self._dispatch,
+                max_block_s=self.MAX_BLOCK_S).start()
         return self
 
     def stop(self) -> None:
@@ -183,6 +236,9 @@ class BrokerServer:
         re-ack).  Handler threads parked in a backend wait finish their
         (bounded) wait, fail to write to the closed socket, and exit."""
         self._stopping.set()
+        if self._shm_listener is not None:
+            self._shm_listener.stop()
+            self._shm_listener = None
         if self._lsock is not None:
             # shutdown() first: close() alone does NOT wake a thread blocked
             # in accept()/recv(), and the in-flight syscall would keep the
@@ -241,13 +297,52 @@ class BrokerServer:
                              daemon=True, name="netbroker-conn").start()
 
     def _serve_conn(self, conn: socket.socket) -> None:
+        codec = JSON_CODEC  # every connection starts on the floor
+        counted = False  # stats["codecs"]: one bump per connection
         try:
             while not self._stopping.is_set():
                 try:
-                    req = _recv_frame(conn)
-                except (ConnectionError, OSError, struct.error,
-                        json.JSONDecodeError, UnicodeDecodeError):
-                    return  # client went away / spoke garbage: drop conn
+                    raw = _recv_raw(conn)
+                except (ConnectionError, OSError, struct.error):
+                    return  # client went away / stream unusable: drop conn
+                try:
+                    req = codec.decode(raw)
+                    if not isinstance(req, dict):
+                        raise CodecError("frame is not a request object")
+                except CodecError as e:
+                    # quarantine: the frame arrived intact but does not
+                    # decode in the negotiated codec — reply typed and keep
+                    # the connection (and its handler thread) alive
+                    self.stats["codec_errors"] += 1
+                    try:
+                        _send_frame(conn, {"ok": False,
+                                           "error_type": "CodecError",
+                                           "error": f"CodecError: {e}"},
+                                    codec)
+                    except OSError:
+                        return
+                    continue
+                if req.get("op") == "hello":
+                    chosen = negotiate_codec(self.codecs,
+                                             req.get("codecs") or ())
+                    try:
+                        _send_frame(conn, {"ok": True, "codec": chosen,
+                                           "codecs": list(self.codecs)},
+                                    codec)
+                    except OSError:
+                        return
+                    codec = get_codec(chosen)  # switch AFTER the reply
+                    counts = self.stats["codecs"]
+                    counts[chosen] = counts.get(chosen, 0) + 1
+                    counted = True
+                    continue
+                if not counted:
+                    # a pre-negotiation client never sends hello: count its
+                    # connection under the JSON floor so stats["codecs"]
+                    # reflects the whole mixed fleet, not just upgraders
+                    counts = self.stats["codecs"]
+                    counts["json"] = counts.get("json", 0) + 1
+                    counted = True
                 try:
                     resp = {"ok": True, **(self._dispatch(req) or {})}
                 except Exception as e:  # backend error -> structured reply
@@ -256,7 +351,16 @@ class BrokerServer:
                             "error_type": type(e).__name__,
                             "error": f"{type(e).__name__}: {e}"}
                 try:
-                    _send_frame(conn, resp)
+                    _send_frame(conn, resp, codec)
+                except BrokerError as e:  # reply unencodable / oversized
+                    self.stats["errors"] += 1
+                    try:
+                        _send_frame(conn, {"ok": False,
+                                           "error_type": "BrokerError",
+                                           "error": f"BrokerError: {e}"},
+                                    codec)
+                    except OSError:
+                        return
                 except OSError:
                     return
         finally:
@@ -287,7 +391,7 @@ class BrokerServer:
             leases = b.get_many(
                 int(req["n"]), timeout=float(timeout),
                 queues=tuple(queues) if queues is not None else None)
-            return {"leases": [{"task": dataclasses.asdict(l.task),
+            return {"leases": [{"task": task_to_wire(l.task),
                                 "tag": l.tag} for l in leases]}
         if op == "ack":
             b.ack(req["tag"])
@@ -319,7 +423,7 @@ class BrokerServer:
                                   None if depth is None else int(depth))
             return {}
         if op == "inflight_tasks":
-            return {"tasks": [[dataclasses.asdict(t), age]
+            return {"tasks": [[task_to_wire(t), age]
                               for t, age in b.inflight_tasks()]}
         if op == "heartbeat":
             queues = req.get("queues")
@@ -344,13 +448,29 @@ class NetBroker:
     backend's condition variable); the client chunks timeouts longer than
     ``block_chunk`` into successive requests so a dead server is detected
     within ``block_chunk + request_grace`` rather than the full timeout.
+
+    ``codec="auto"`` (default) opens every connection with a JSON hello
+    preferring the binary codec and transparently falls back to JSON
+    when the server predates negotiation; ``"json"`` skips the hello
+    entirely (byte-identical to the legacy client); ``"bin1"`` insists
+    on offering only bin1 (still lands on JSON against an old server —
+    JSON is the floor, never an error).
     """
 
     def __init__(self, address: str, connect_timeout: float = 5.0,
                  reconnect_timeout: float = 10.0,
                  request_grace: float = 10.0, block_chunk: float = 5.0,
-                 breaker: Optional[CircuitBreaker] = None):
+                 breaker: Optional[CircuitBreaker] = None,
+                 codec: str = "auto"):
         self.host, self.port = parse_address(address)
+        if codec == "auto":
+            self._codec_pref: Tuple[str, ...] = DEFAULT_PREFERENCE
+        elif codec == "json":
+            self._codec_pref = ()  # legacy wire: no hello at all
+        else:
+            get_codec(codec)  # fail fast on a typo'd codec name
+            self._codec_pref = (codec,)
+        self._negotiated = "json"  # last handshake outcome, for stats
         self.connect_timeout = connect_timeout
         self.reconnect_timeout = reconnect_timeout
         self.request_grace = request_grace
@@ -385,6 +505,30 @@ class NetBroker:
         sock = socket.create_connection((self.host, self.port),
                                         timeout=self.connect_timeout)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._tls.codec = JSON_CODEC
+        if self._codec_pref:
+            # hello travels in JSON (the floor).  An old server answers
+            # with its unknown-op error — that's a valid "json" outcome,
+            # not a failure; only transport errors propagate (and the
+            # _call retry loop treats them like any connect failure).
+            try:
+                _send_frame(sock, {"op": "hello",
+                                   "codecs": list(self._codec_pref)})
+                resp = _recv_frame(sock)
+                chosen = resp.get("codec", "json") if resp.get("ok") \
+                    else "json"
+            except CodecError:
+                chosen = "json"  # unintelligible reply: stay on the floor
+            except (OSError, ConnectionError, struct.error):
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                raise
+            if chosen not in self._codec_pref:
+                chosen = "json"  # never adopt a codec we didn't offer
+            self._tls.codec = get_codec(chosen)
+            self._negotiated = chosen
         self._tls.sock = sock
         with self._socks_lock:
             dead = [s for s, t in self._socks.items() if not t.is_alive()]
@@ -403,6 +547,7 @@ class NetBroker:
         if sock is None:
             return
         self._tls.sock = None
+        self._tls.codec = JSON_CODEC  # renegotiated on the next connect
         with self._socks_lock:
             self._socks.pop(sock, None)
             self._reconnects += 1
@@ -448,10 +593,16 @@ class NetBroker:
             try:
                 sock = self._connected()
                 sock.settimeout(_timeout_hint + self.request_grace)
-                _send_frame(sock, {"op": op, **payload})
-                resp = _recv_frame(sock)
+                codec = getattr(self._tls, "codec", JSON_CODEC)
+                _send_frame(sock, {"op": op, **payload}, codec)
+                resp = _recv_frame(sock, codec)
+                if not isinstance(resp, dict):
+                    raise CodecError("response frame is not an object")
+            # CodecError here means the response STREAM desynced (not a
+            # quarantined request — those come back as structured replies):
+            # reconnect and retry like any transport failure
             except (OSError, ConnectionError, struct.error,
-                    json.JSONDecodeError, UnicodeDecodeError) as e:
+                    CodecError) as e:
                 self._drop_conn()
                 now = time.monotonic()
                 if now >= deadline or self._closed:
@@ -489,13 +640,13 @@ class NetBroker:
     # -- Broker protocol ------------------------------------------------------
     def put(self, task: Task) -> None:
         task.enqueued_at = time.time()
-        self._call("put", task=dataclasses.asdict(task))
+        self._call("put", task=task_to_wire(task))
 
     def put_many(self, tasks: List[Task]) -> None:
         now = time.time()
         for t in tasks:
             t.enqueued_at = now
-        self._call("put_many", tasks=[dataclasses.asdict(t) for t in tasks])
+        self._call("put_many", tasks=[task_to_wire(t) for t in tasks])
 
     def get(self, timeout: Optional[float] = 0.0,
             queues: Optional[Sequence[str]] = None) -> Optional[Lease]:
@@ -574,6 +725,7 @@ class NetBroker:
         s = dict(self._call("stats")["stats"])
         s["net_reconnects"] = self._reconnects
         s["circuit"] = self.breaker.state
+        s["wire_codec"] = self._negotiated
         return s
 
 
@@ -587,6 +739,8 @@ def make_broker(url, **kwargs) -> Broker:
     * ``mem://``               fresh in-process InMemoryBroker
     * ``file:///shared/dir``   FileBroker on a shared directory
     * ``tcp://host:port``      NetBroker client to a BrokerServer
+    * ``shm://<registry>``     ShmBroker: same-host shared-memory channel
+      to a BrokerServer started with ``shm_path=<registry>``
     * ``shard://h1:p1,h2:p2``  ShardedBroker federating N endpoints
       (comma-separated; entries without a scheme default to ``tcp://``;
       ``|``-separated replicas per shard — ``shard://h1:p1|h1r:p1r,...``
@@ -635,6 +789,13 @@ def make_broker(url, **kwargs) -> Broker:
         return ShardedBroker(endpoints, **kwargs)
     if url.startswith("tcp://"):
         return NetBroker(url, **kwargs)
+    if url.startswith("shm://"):
+        from repro.core.shmring import ShmBroker
+        path = url[len("shm://"):]
+        if not path:
+            raise ValueError("shm:// broker URL needs the registry file "
+                             "path published by the server")
+        return ShmBroker(path, **kwargs)
     if url.startswith("mem://"):
         return InMemoryBroker(**kwargs)
     if url.startswith("file://"):
@@ -643,4 +804,5 @@ def make_broker(url, **kwargs) -> Broker:
             raise ValueError("file:// broker URL needs a directory path")
         return FileBroker(path, **kwargs)
     raise ValueError(f"unsupported broker URL {url!r} (expected mem://, "
-                     "file://<dir>, tcp://host:port, or shard://h:p,h:p)")
+                     "file://<dir>, tcp://host:port, shm://<registry>, "
+                     "or shard://h:p,h:p)")

@@ -188,6 +188,73 @@ class Task:
         return Task(**json.loads(s))
 
 
+_TASK_FIELDS = tuple(f.name for f in dataclasses.fields(Task))
+
+
+def task_to_wire(task: "Task") -> Dict[str, Any]:
+    """Shallow task -> dict for immediate serialization.
+
+    ``dataclasses.asdict`` recursively *deep-copies* every payload value
+    (~0.5 ms per task at 512 payload floats — it dominated the broker
+    wire hot path, dwarfing both codecs).  Encoders only read the tree,
+    so sharing the payload references is safe; use this everywhere a
+    task dict goes straight into a codec.
+    """
+    return {f: getattr(task, f) for f in _TASK_FIELDS}
+
+
+# -- FileBroker task-file format ---------------------------------------------
+# v1 is Task.to_json() text (first byte "{", readable forever); v2 is one
+# format-version byte \x02 followed by the bin1 binary encoding of the
+# task dict (core/wirecodec.py) — payloads dominated by float arrays skip
+# text float formatting/parsing entirely.  Readers sniff the first byte,
+# so directories mixing formats (rolling upgrade, old producers) just work.
+TASK_FILE_V2_MAGIC = b"\x02"
+_TASK_FORMATS = ("auto", "json", "binary")
+_BIG_FLOAT_FIELD = 16  # floats; shorter lists aren't worth the binary path
+
+
+def _has_big_float_field(obj: Any, depth: int = 0) -> bool:
+    """Does this payload contain a float list long enough that binary
+    array encoding pays?  Cheap structural sniff, not a full scan."""
+    if depth > 4:
+        return False
+    if isinstance(obj, list):
+        if len(obj) >= _BIG_FLOAT_FIELD and isinstance(obj[0], float):
+            return True
+        return any(_has_big_float_field(v, depth + 1) for v in obj[:32])
+    if isinstance(obj, dict):
+        return any(_has_big_float_field(v, depth + 1) for v in obj.values())
+    # ndarray payloads (duck-typed: queue.py stays numpy-free) always
+    # take the binary path — Task.to_json can't carry them at all
+    return hasattr(obj, "dtype") and getattr(obj, "size", 0) > 0
+
+
+def encode_task_file(task: "Task", fmt: str = "auto") -> bytes:
+    """Serialize a task for a FileBroker task file.
+
+    ``auto`` picks v2 binary only when the payload carries large numeric
+    fields (everything else stays greppable JSON text); ``json`` forces
+    v1 (what pre-v2 readers understand); ``binary`` forces v2.
+    """
+    if fmt == "binary" or (fmt == "auto"
+                           and _has_big_float_field(task.payload)):
+        from repro.core.wirecodec import BIN_CODEC
+        return TASK_FILE_V2_MAGIC + BIN_CODEC.encode(task_to_wire(task))
+    return task.to_json().encode("utf-8")
+
+
+def decode_task_file(data: bytes) -> "Task":
+    """Parse either task-file format (first-byte sniff)."""
+    if data[:1] == TASK_FILE_V2_MAGIC:
+        from repro.core.wirecodec import BIN_CODEC
+        doc = BIN_CODEC.decode(data[1:])
+        if not isinstance(doc, dict):
+            raise ValueError("task file v2 does not hold a task object")
+        return Task(**doc)
+    return Task.from_json(data.decode("utf-8"))
+
+
 # fast process-unique task ids: one random prefix + a counter.  uuid4 per
 # task costs ~1.5us (os.urandom) and dominated hierarchy expansion at
 # >1e5 tasks/s (§Perf host-side log in EXPERIMENTS.md).
@@ -667,7 +734,14 @@ class FileBroker:
                  max_queue_depth: Optional[int] = None,
                  put_timeout: float = 5.0,
                  heartbeat_ttl: float = 15.0,
-                 queue_depths: Optional[Dict[str, int]] = None):
+                 queue_depths: Optional[Dict[str, int]] = None,
+                 task_format: str = "auto"):
+        if task_format not in _TASK_FORMATS:
+            raise ValueError(f"task_format must be one of {_TASK_FORMATS}, "
+                             f"got {task_format!r}")
+        # how THIS instance writes task files; reading always sniffs the
+        # format byte, so instances with different settings interoperate
+        self._task_format = task_format
         self.root = root
         self.qroot = os.path.join(root, "queues")
         self.cdir = os.path.join(root, "claimed")
@@ -922,8 +996,8 @@ class FileBroker:
         # temp lives INSIDE the queue dir (same fs, skipped by the index and
         # reaped by the expiry sweep if a crashed producer leaks it)
         tmp = os.path.join(qdir, f"{self._TMP_PREFIX}{uuid.uuid4().hex}")
-        with open(tmp, "w") as f:
-            f.write(task.to_json())
+        with open(tmp, "wb") as f:
+            f.write(encode_task_file(task, self._task_format))
         os.rename(tmp, os.path.join(qdir, name))
         return name
 
@@ -1089,11 +1163,12 @@ class FileBroker:
                     self._stats["stale_claims"] += 1
                 continue
             try:
-                with open(dst) as f:
-                    task = Task.from_json(f.read())
+                with open(dst, "rb") as f:
+                    task = decode_task_file(f.read())
             except (OSError, json.JSONDecodeError, TypeError, ValueError):
-                # unparseable OR carrying an invalid queue name (ValueError
-                # from Task validation): quarantine, move on
+                # unparseable (either format — CodecError is a ValueError)
+                # OR carrying an invalid queue name (ValueError from Task
+                # validation): quarantine, move on
                 self._dead_letter(dst)
                 continue
             return Lease(task, dst)
@@ -1177,12 +1252,12 @@ class FileBroker:
         qdir = self._ensure_queue(queue)
         dst = os.path.join(qdir, name)
         try:
-            with open(tag) as f:
+            with open(tag, "rb") as f:
                 raw = f.read()
         except OSError:
             return  # claim already gone: a concurrent sweep/ack won
         try:
-            task = Task.from_json(raw)
+            task = decode_task_file(raw)
         except (json.JSONDecodeError, TypeError, ValueError):
             # unparseable poison: redelivering would ping-pong it between
             # pending and claimed forever (retries can never increment)
@@ -1191,8 +1266,8 @@ class FileBroker:
         task.retries += 1
         tmp = os.path.join(qdir, f"{self._TMP_PREFIX}{uuid.uuid4().hex}")
         try:
-            with open(tmp, "w") as f:
-                f.write(task.to_json())
+            with open(tmp, "wb") as f:
+                f.write(encode_task_file(task, self._task_format))
             os.rename(tmp, dst)
         except OSError:
             return
@@ -1283,8 +1358,8 @@ class FileBroker:
         for name in os.listdir(self.cdir):
             try:
                 ts = float(name.split("__", 1)[0])
-                with open(os.path.join(self.cdir, name)) as f:
-                    task = Task.from_json(f.read())
+                with open(os.path.join(self.cdir, name), "rb") as f:
+                    task = decode_task_file(f.read())
             except (ValueError, OSError, json.JSONDecodeError, TypeError):
                 continue  # claim vanished (acked) or poison mid-read
             out.append((task, now - ts))

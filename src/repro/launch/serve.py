@@ -13,7 +13,7 @@ RabbitMQ stand-in of paper Sec. 2-3; workers on other nodes connect with
       [--backend mem|file] [--root DIR] [--host H] [--port P] \
       [--port-file PATH] [--visibility-timeout S] [--fairness priority|weighted] \
       [--max-queue-depth N] [--queue-depth Q=N ...] [--put-timeout S] \
-      [--shard-of I/N] [--announce PATH]
+      [--shard-of I/N] [--announce PATH] [--codecs bin1,json] [--shm PATH]
 
 ``--port 0`` picks a free port; ``--port-file`` atomically publishes the
 bound port for launcher scripts (examples/quickstart.py --two-process).
@@ -26,6 +26,13 @@ is bookkeeping for launchers — routing is client-side by queue hash).
 ``--announce PATH`` atomically publishes the bound endpoint into a shared
 discovery file: clients assemble the whole federation from it with
 ``make_broker("shard+file://PATH")`` instead of hand-building URL lists.
+``--codecs`` restricts the wire codecs offered at handshake (default
+``bin1,json``; ``json`` emulates a binary-unaware server — see the README
+"Wire protocol" section); ``--shm PATH`` additionally serves the backend
+over same-host shared-memory channels registered at PATH (clients connect
+with ``make_broker("shm://PATH")``).  The process applies ``repro.env``
+runtime tuning at entry (REPRO_* env knobs) so serving throughput is
+produced on recorded defaults.
 
 Broker status (the ops view of any broker URL — per-queue depth, in-flight
 leases, and live consumers from the heartbeat registry).  With ``--watch``
@@ -99,6 +106,15 @@ def broker_serve_main(argv=None):
                     help="atomically publish the bound endpoint into this "
                          "shared discovery file; clients build the shard "
                          "list with make_broker('shard+file://PATH')")
+    ap.add_argument("--codecs", default="bin1,json", metavar="C1,C2",
+                    help="preference-ordered wire codecs offered at the "
+                         "connection handshake (json is always the "
+                         "compatibility floor; '--codecs json' emulates a "
+                         "binary-unaware server)")
+    ap.add_argument("--shm", default=None, metavar="PATH",
+                    help="also serve same-host clients over shared-memory "
+                         "channels registered at PATH "
+                         "(make_broker('shm://PATH'))")
     ap.add_argument("--announce-host", default=None, metavar="HOST",
                     help="hostname to publish in the discovery file. "
                          "Default: --host, except the wildcard binds "
@@ -129,9 +145,13 @@ def broker_serve_main(argv=None):
             ap.error(f"--shard-of must be I/N with 0 <= I < N, "
                      f"got {args.shard_of!r}")
 
+    from repro import env as repro_env
+    repro_env.configure()
+
     from repro.core.netbroker import BrokerServer
     from repro.core.queue import FileBroker, InMemoryBroker
 
+    codecs = tuple(c for c in args.codecs.split(",") if c)
     kw = dict(visibility_timeout=args.visibility_timeout,
               fairness=args.fairness,
               max_queue_depth=args.max_queue_depth,
@@ -143,10 +163,15 @@ def broker_serve_main(argv=None):
         backend = FileBroker(args.root, **kw)
     else:
         backend = InMemoryBroker(**kw)
-    server = BrokerServer(backend, host=args.host, port=args.port)
+    try:
+        server = BrokerServer(backend, host=args.host, port=args.port,
+                              codecs=codecs, shm_path=args.shm)
+    except ValueError as e:
+        ap.error(str(e))  # e.g. a typo'd codec name
     server.start()
     print(json.dumps({"event": "listening", "host": args.host,
                       "port": server.port, "backend": args.backend,
+                      "codecs": list(codecs), "shm": args.shm,
                       "shard_of": None if shard_of is None
                       else f"{shard_of[0]}/{shard_of[1]}",
                       "max_queue_depth": args.max_queue_depth}),

@@ -309,3 +309,92 @@ def test_filebroker_depth_override_shared_across_instances(tmp_path):
     b2.idle()
     with pytest.raises(BrokerFull):
         b2.put(new_task("gen", {}, queue="gen"))
+
+
+# -- FileBroker task-file format (v1 JSON text / v2 binary) -------------------
+
+def _find_task_files(root):
+    import os
+    out = []
+    for dirpath, _dirs, files in os.walk(root):
+        for f in files:
+            if f.endswith(".json") and not f.startswith("."):
+                out.append(os.path.join(dirpath, f))
+    return out
+
+
+def test_task_file_format_sniffing_roundtrip():
+    """encode_task_file picks v2 only when the payload carries a float
+    array long enough to be worth it; decode sniffs the first byte, so
+    both formats round-trip through the same reader."""
+    from repro.core.queue import (TASK_FILE_V2_MAGIC, decode_task_file,
+                                  encode_task_file)
+    small = new_task("real", {"x": 1, "arr": [1.0, 2.0]}, queue="sims")
+    big = new_task("real", {"arr": [float(i) for i in range(64)]},
+                   queue="sims")
+    enc_small = encode_task_file(small)        # auto -> v1 (greppable text)
+    enc_big = encode_task_file(big)            # auto -> v2 (binary floats)
+    assert enc_small[:1] == b"{"
+    assert enc_big[:1] == TASK_FILE_V2_MAGIC
+    # forcing either direction works regardless of payload shape
+    assert encode_task_file(big, "json")[:1] == b"{"
+    assert encode_task_file(small, "binary")[:1] == TASK_FILE_V2_MAGIC
+    for enc, src in ((enc_small, small), (enc_big, big),
+                     (encode_task_file(big, "json"), big),
+                     (encode_task_file(small, "binary"), small)):
+        got = decode_task_file(enc)
+        assert got.id == src.id and got.queue == src.queue
+        assert got.payload == src.payload and got.priority == src.priority
+
+
+def test_task_file_v2_rejects_non_task_document():
+    from repro.core.queue import TASK_FILE_V2_MAGIC, decode_task_file
+    from repro.core.wirecodec import BIN_CODEC
+    with pytest.raises(ValueError, match="task object"):
+        decode_task_file(TASK_FILE_V2_MAGIC + BIN_CODEC.encode([1, 2, 3]))
+
+
+def test_filebroker_task_format_validated(tmp_path):
+    with pytest.raises(ValueError, match="task_format"):
+        FileBroker(str(tmp_path / "q"), task_format="msgpack")
+
+
+def test_filebroker_mixed_format_directory_drains(tmp_path):
+    """Rolling upgrade: a v1-only producer and a binary producer share one
+    queue root; any instance drains both formats transparently."""
+    from repro.core.queue import TASK_FILE_V2_MAGIC
+    root = str(tmp_path / "q")
+    old = FileBroker(root, task_format="json")
+    new = FileBroker(root, task_format="binary")
+    old.put(new_task("real", {"src": "v1", "i": 0}, queue="sims"))
+    new.put(new_task("real", {"src": "v2",
+                              "arr": [float(i) for i in range(32)]},
+                     queue="sims"))
+    firsts = set()
+    for path in _find_task_files(root):
+        with open(path, "rb") as f:
+            firsts.add(f.read(1))
+    assert firsts == {b"{", TASK_FILE_V2_MAGIC}  # both formats on disk
+    reader = FileBroker(root)  # auto: reads both, writes by payload shape
+    seen = {}
+    for _ in range(2):
+        lease = reader.get(timeout=1, queues=("sims",))
+        assert lease is not None
+        seen[lease.task.payload["src"]] = lease.task
+        reader.ack(lease.tag)
+    assert set(seen) == {"v1", "v2"}
+    assert seen["v2"].payload["arr"] == [float(i) for i in range(32)]
+
+
+def test_filebroker_v2_survives_nack_rewrite(tmp_path):
+    """nack rewrites the task file (retries bump); a binary-format broker
+    must keep the rewritten file decodable and the retry count durable."""
+    root = str(tmp_path / "q")
+    b = FileBroker(root, task_format="binary", visibility_timeout=5.0)
+    b.put(new_task("real", {"arr": [float(i) for i in range(32)]},
+                   queue="sims"))
+    lease = b.get(timeout=1, queues=("sims",))
+    b.nack(lease.tag)
+    again = FileBroker(root).get(timeout=1, queues=("sims",))  # fresh reader
+    assert again is not None and again.task.retries == 1
+    assert again.task.payload["arr"][-1] == 31.0

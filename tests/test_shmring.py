@@ -1,0 +1,450 @@
+"""Shared-memory transport (core/shmring.py): the SPSC ring, the
+``shm://`` broker channel (pipelined acks + consumer prefetch), and the
+Bundler's BundleRing write sink.
+
+Ring and BundleRing tests touch only /dev/shm.  Served-broker tests also
+open unix-domain doorbell sockets, so they carry the ``net`` marker for
+restricted sandboxes (same convention as test_netbroker.py).
+"""
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.bundler import Bundler
+from repro.core.netbroker import BrokerServer, make_broker
+from repro.core.queue import (Broker, BrokerError, InMemoryBroker, Lease,
+                              Task, new_task)
+from repro.core.shmring import (BundleRing, ShmBroker, ShmListener, ShmRing)
+
+
+# ---------------------------------------------------------------------------
+# ShmRing: the SPSC byte ring
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def ring():
+    r = ShmRing(create=True, capacity=256)
+    yield r
+    r.close()
+    r.unlink()
+
+
+def test_ring_fifo_roundtrip(ring):
+    for i in range(5):
+        assert ring.try_push(b"rec%d" % i)
+    got = []
+    while True:
+        rec = ring.try_pop()
+        if rec is None:
+            break
+        got.append(rec)
+    assert got == [b"rec%d" % i for i in range(5)]
+    assert ring.try_pop() is None
+
+
+def test_ring_peek_has_no_side_effects(ring):
+    assert not ring.try_peek()
+    ring.try_push(b"x")
+    assert ring.try_peek()
+    assert ring.try_peek()  # still there
+    assert ring.try_pop() == b"x"
+    assert not ring.try_peek()
+
+
+def test_ring_wraps_around_the_tail_fragment(ring):
+    # records sized so cursors repeatedly land mid-ring and the u32 wrap
+    # marker (or a too-small tail fragment) must be skipped
+    payloads = [bytes([i % 256]) * (17 + 7 * (i % 13)) for i in range(400)]
+    it = iter(payloads)
+    got, pending = [], 0
+    backlog = []
+    for p in it:
+        while not ring.try_push(p):  # full: drain one record first
+            rec = ring.try_pop()
+            assert rec is not None
+            got.append(rec)
+    while True:
+        rec = ring.try_pop()
+        if rec is None:
+            break
+        got.append(rec)
+    assert got == payloads
+
+
+def test_ring_full_returns_false_oversize_raises(ring):
+    big = b"z" * (ring.capacity + 1)
+    with pytest.raises(ValueError):
+        ring.try_push(big)
+    filler = b"f" * 100
+    while ring.try_push(filler):
+        pass
+    assert not ring.try_push(filler)  # full, not an error
+    assert ring.try_pop() == filler
+    assert ring.try_push(filler)  # space reclaimed
+
+
+def test_ring_blocking_push_pop_timeout(ring):
+    assert ring.pop(timeout=0.05) is None  # empty: times out
+    assert ring.push(b"a", timeout=0.05)
+    assert ring.pop(timeout=0.05) == b"a"
+    while ring.try_push(b"b" * 100):
+        pass
+    assert not ring.push(b"b" * 100, timeout=0.05)  # full: times out
+
+
+def test_ring_doorbell_elision_flag(ring):
+    # caught-up consumer (empty ring) -> producer must ring its doorbell
+    assert ring.try_push(b"one")
+    assert ring.consumer_was_caught_up
+    # backlog present -> the earlier record's wakeup byte still covers us
+    assert ring.try_push(b"two")
+    assert not ring.consumer_was_caught_up
+    ring.try_pop()
+    ring.try_pop()
+    assert ring.try_push(b"three")
+    assert ring.consumer_was_caught_up
+
+
+def test_ring_cross_process_attach(ring):
+    ring.try_push(b"parent->child")
+    code = (
+        "import sys\n"
+        "from repro.core.shmring import ShmRing\n"
+        "r = ShmRing(name=sys.argv[1])\n"
+        "assert r.try_pop() == b'parent->child'\n"
+        "assert r.try_push(b'child->parent')\n"
+        "r.close()\n"
+    )
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(os.path.dirname(os.path.dirname(
+               os.path.abspath(__file__))), "src")
+           + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    subprocess.run([sys.executable, "-c", code, ring.name],
+                   check=True, env=env, timeout=30)
+    assert ring.pop(timeout=1.0) == b"child->parent"
+
+
+# ---------------------------------------------------------------------------
+# ShmBroker over a served registry
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def served_shm(tmp_path):
+    backend = InMemoryBroker(visibility_timeout=2.0)
+    srv = BrokerServer(backend, shm_path=str(tmp_path / "ring")).start()
+    client = ShmBroker(str(tmp_path / "ring"))
+    yield backend, srv, client
+    client.close()
+    srv.stop()
+
+
+@pytest.mark.net
+def test_shm_broker_satisfies_protocol_and_url(served_shm, tmp_path):
+    _backend, _srv, client = served_shm
+    assert isinstance(client, Broker)
+    assert client.address == f"shm://{tmp_path / 'ring'}"
+    via_url = make_broker(client.address)
+    assert isinstance(via_url, ShmBroker)
+    assert via_url.ping()
+    via_url.close()
+
+
+@pytest.mark.net
+def test_shm_put_get_ack_drain(served_shm):
+    _backend, _srv, client = served_shm
+    client.put_many([new_task("k", {"i": i}) for i in range(100)])
+    assert client.qsize() == 100
+    seen = []
+    while True:
+        leases = client.get_many(8, timeout=0.2)
+        if not leases:
+            break
+        assert all(isinstance(l, Lease) for l in leases)
+        seen.extend(l.task.payload["i"] for l in leases)
+        client.ack_many([l.tag for l in leases])
+    assert sorted(seen) == list(range(100))
+    assert client.qsize() == 0
+    assert client.inflight() == 0
+
+
+@pytest.mark.net
+def test_shm_stats_report_transport(served_shm):
+    _backend, _srv, client = served_shm
+    s = client.stats
+    assert s["transport"] == "shm"
+    assert s["wire_codec"] == "bin1"
+
+
+@pytest.mark.net
+def test_shm_queue_selectors(served_shm):
+    _backend, _srv, client = served_shm
+    client.put(new_task("k", {}, queue="qa"))
+    client.put(new_task("k", {}, queue="qb"))
+    la = client.get(timeout=0.5, queues=["qa"])
+    assert la is not None and la.task.queue == "qa"
+    client.ack(la.tag)
+    assert client.qsize(queues=["qb"]) == 1
+    assert set(client.queue_names()) >= {"qb"}
+
+
+@pytest.mark.net
+def test_shm_nack_redelivers(served_shm):
+    _backend, _srv, client = served_shm
+    client.put(new_task("k", {"x": 1}))
+    lease = client.get(timeout=0.5)
+    client.nack(lease.tag)
+    again = client.get(timeout=2.0)
+    assert again is not None and again.task.payload == {"x": 1}
+    assert again.task.retries == lease.task.retries + 1
+    client.ack(again.tag)
+
+
+@pytest.mark.net
+def test_shm_visibility_timeout_redelivery(tmp_path):
+    backend = InMemoryBroker(visibility_timeout=0.3)
+    srv = BrokerServer(backend, shm_path=str(tmp_path / "ring")).start()
+    client = ShmBroker(str(tmp_path / "ring"), prefetch=0)
+    try:
+        client.put(new_task("k", {"v": 7}))
+        first = client.get(timeout=0.5)
+        assert first is not None  # leased, never acked: lease must expire
+        again = client.get(timeout=2.0)
+        assert again is not None and again.task.payload == {"v": 7}
+        client.ack(again.tag)
+    finally:
+        client.close()
+        srv.stop()
+
+
+@pytest.mark.net
+def test_shm_put_many_bisects_oversized_batches(served_shm):
+    _backend, _srv, client = served_shm
+    # ~100 KiB per payload, 24 tasks: the single put_many frame exceeds
+    # the 1 MiB request ring and must split transparently
+    blob = "x" * (100 * 1024)
+    client.put_many([new_task("k", {"i": i, "blob": blob})
+                     for i in range(24)])
+    assert client.qsize() == 24
+    got = 0
+    while got < 24:
+        leases = client.get_many(4, timeout=1.0)
+        assert leases
+        assert all(len(l.task.payload["blob"]) == len(blob) for l in leases)
+        client.ack_many([l.tag for l in leases])
+        got += len(leases)
+
+
+@pytest.mark.net
+def test_shm_single_task_too_large_raises(served_shm):
+    _backend, _srv, client = served_shm
+    with pytest.raises(BrokerError, match="too large"):
+        client.put(new_task("k", {"blob": "x" * (2 << 20)}))
+
+
+@pytest.mark.net
+def test_shm_deferred_failure_raises_on_next_sync_op(served_shm):
+    """Pipelined-ack contract: a deferred op's failure is reported
+    out-of-band by the NEXT synchronous call, with the deferred op
+    named — and the channel stays usable afterwards."""
+    _backend, _srv, client = served_shm
+    client._call("frobnicate", _defer=True)  # unknown op, no sync reply
+    with pytest.raises(BrokerError, match="deferred frobnicate"):
+        client.qsize()
+    client.put(new_task("k", {}))  # channel survived the oob error
+    assert client.qsize() == 1
+
+
+@pytest.mark.net
+def test_shm_sync_acks_when_pipelining_disabled(tmp_path):
+    backend = InMemoryBroker(visibility_timeout=2.0)
+    srv = BrokerServer(backend, shm_path=str(tmp_path / "ring")).start()
+    client = ShmBroker(str(tmp_path / "ring"), pipeline_acks=False)
+    try:
+        client.put_many([new_task("k", {"i": i}) for i in range(20)])
+        while True:
+            leases = client.get_many(4, timeout=0.2)
+            if not leases:
+                break
+            client.ack_many([l.tag for l in leases])
+        assert client.qsize() == 0 and client.inflight() == 0
+    finally:
+        client.close()
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# consumer prefetch (the depth-K speculative get_many pipeline)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.net
+def test_prefetch_serves_hot_drain_from_stash(tmp_path, monkeypatch):
+    backend = InMemoryBroker(visibility_timeout=5.0)
+    srv = BrokerServer(backend, shm_path=str(tmp_path / "ring")).start()
+    client = ShmBroker(str(tmp_path / "ring"), prefetch=2)
+    sync_gets = []
+    orig = ShmBroker._call
+
+    def counting(self, op, *a, **kw):
+        if op == "get_many" and not kw.get("_defer"):
+            sync_gets.append(op)
+        return orig(self, op, *a, **kw)
+
+    monkeypatch.setattr(ShmBroker, "_call", counting)
+    try:
+        client.put_many([new_task("k", {"i": i}) for i in range(160)])
+        got = 0
+        while got < 160:
+            leases = client.get_many(8, timeout=1.0)
+            assert leases
+            client.ack_many([l.tag for l in leases])
+            got += len(leases)
+        # after the first sync claim primes the pipeline, a hot drain is
+        # fed from the stash: sync get_manys stay far below the 20 calls
+        assert len(sync_gets) <= 5
+        assert client.qsize() == 0
+    finally:
+        client.close()
+        srv.stop()
+
+
+@pytest.mark.net
+def test_prefetch_selector_switch_returns_stash(served_shm):
+    """Speculative leases for queue A must be nacked back (not silently
+    consumed) when the caller switches to queue B mid-drain."""
+    _backend, _srv, client = served_shm
+    client.put_many([new_task("k", {}, queue="qa") for _ in range(8)])
+    client.put_many([new_task("k", {}, queue="qb") for _ in range(8)])
+    la = client.get_many(4, timeout=0.5, queues=["qa"])
+    client.ack_many([l.tag for l in la])
+    lb = client.get_many(8, timeout=1.0, queues=["qb"])  # switch selector
+    client.ack_many([l.tag for l in lb])
+    assert len(lb) == 8
+    rest = client.get_many(8, timeout=1.0, queues=["qa"])  # nacked back
+    client.ack_many([l.tag for l in rest])
+    assert client.qsize() == 0
+    deadline = time.monotonic() + 2.0
+    while client.inflight() and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert client.inflight() == 0
+
+
+@pytest.mark.net
+def test_prefetch_settled_before_sync_ops(served_shm):
+    """A sync op (qsize) issued while speculative get_manys are in
+    flight must stay in FIFO step — and the speculatively-claimed
+    leases remain claimable afterwards via the stash."""
+    _backend, _srv, client = served_shm
+    client.put_many([new_task("k", {"i": i}) for i in range(20)])
+    leases = client.get_many(4, timeout=0.5)  # primes the pipeline
+    client.ack_many([l.tag for l in leases])
+    n = client.qsize()  # forces settle of in-flight speculative gets
+    assert 0 <= n <= 16
+    got = len(leases)
+    while got < 20:
+        more = client.get_many(4, timeout=1.0)
+        assert more
+        client.ack_many([l.tag for l in more])
+        got += len(more)
+    assert client.qsize() == 0
+
+
+@pytest.mark.net
+def test_prefetch_close_hands_stash_back(tmp_path):
+    backend = InMemoryBroker(visibility_timeout=30.0)
+    srv = BrokerServer(backend, shm_path=str(tmp_path / "ring")).start()
+    client = ShmBroker(str(tmp_path / "ring"), prefetch=2)
+    client.put_many([new_task("k", {"i": i}) for i in range(12)])
+    leases = client.get_many(4, timeout=0.5)
+    client.ack_many([l.tag for l in leases])
+    client.close()  # stash + in-flight speculative leases nacked back
+    deadline = time.monotonic() + 3.0
+    while time.monotonic() < deadline:
+        if backend.qsize() == 8 and backend.inflight() == 0:
+            break
+        time.sleep(0.05)
+    # a 30 s visibility timeout cannot explain recovery: close() did it
+    assert backend.qsize() == 8 and backend.inflight() == 0
+    srv.stop()
+
+
+@pytest.mark.net
+def test_prefetch_disabled_is_purely_synchronous(tmp_path, monkeypatch):
+    backend = InMemoryBroker(visibility_timeout=5.0)
+    srv = BrokerServer(backend, shm_path=str(tmp_path / "ring")).start()
+    client = ShmBroker(str(tmp_path / "ring"), prefetch=0)
+    pushes = []
+    orig = ShmBroker._push_req
+
+    def recording(self, ch, frame):
+        pushes.append(frame)
+        return orig(self, ch, frame)
+
+    monkeypatch.setattr(ShmBroker, "_push_req", recording)
+    try:
+        client.put_many([new_task("k", {}) for _ in range(8)])
+        n_after_put = len(pushes)
+        leases = client.get_many(8, timeout=0.5)
+        client.ack_many([l.tag for l in leases])
+        # exactly one get frame + one (deferred) ack frame: no
+        # speculative extras
+        assert len(pushes) == n_after_put + 2
+        assert client.qsize() == 0
+    finally:
+        client.close()
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# BundleRing + Bundler sink
+# ---------------------------------------------------------------------------
+
+def test_bundle_ring_roundtrip(tmp_path):
+    reg = str(tmp_path / "bundles.json")
+    with BundleRing(reg, capacity=1 << 16, create=True) as consumer:
+        producer = BundleRing(reg)
+        arr = np.arange(12, dtype=np.float64).reshape(3, 4)
+        assert producer.push_bundle(0, 3, {"loss": arr})
+        lo, hi, arrays = consumer.pop_bundle(timeout=1.0)
+        assert (lo, hi) == (0, 3)
+        np.testing.assert_array_equal(arrays["loss"], arr)
+        producer.close()
+
+
+def test_bundle_ring_drops_when_full_or_oversized(tmp_path):
+    reg = str(tmp_path / "bundles.json")
+    with BundleRing(reg, capacity=1 << 12, create=True) as ring:
+        huge = np.zeros(1 << 14)  # frame > capacity: dropped, not raised
+        assert not ring.push_bundle(0, 1, {"a": huge})
+        small = np.zeros(64)
+        while ring.push_bundle(0, 1, {"a": small}):
+            pass  # fill it up -> further pushes drop
+        assert not ring.push_bundle(0, 1, {"a": small})
+        assert ring.drain()  # the accepted ones are all still readable
+
+
+def test_bundler_feeds_sink_after_durable_write(tmp_path):
+    reg = str(tmp_path / "bundles.json")
+    with BundleRing(reg, capacity=1 << 16, create=True) as consumer:
+        bundler = Bundler(str(tmp_path / "data"), sink=BundleRing(reg))
+        path = bundler.write_bundle(
+            0, 4, {"y": np.arange(4, dtype=np.float32)})
+        assert os.path.exists(path)  # file written BEFORE the sink push
+        lo, hi, arrays = consumer.pop_bundle(timeout=1.0)
+        assert (lo, hi) == (0, 4)
+        np.testing.assert_array_equal(arrays["y"],
+                                      np.arange(4, dtype=np.float32))
+
+
+def test_bundler_broken_sink_never_breaks_the_write(tmp_path):
+    class Broken:
+        def push_bundle(self, lo, hi, results):
+            raise RuntimeError("sink down")
+
+    bundler = Bundler(str(tmp_path / "data"))
+    bundler.attach_sink(Broken())
+    path = bundler.write_bundle(0, 2, {"y": np.zeros(2)})
+    assert os.path.exists(path)  # durable path unaffected

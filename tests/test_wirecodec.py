@@ -1,0 +1,361 @@
+"""Wire codec tests: bin1 roundtrips, defensive decoding, per-connection
+negotiation (including mixed fleets and legacy peers), and seeded frame
+fuzzing.  Socket tests carry the ``net`` marker; the fuzz tests carry
+``chaos`` like the rest of the fault-injection suite."""
+import json
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.netbroker import (BrokerServer, NetBroker, _recv_frame,
+                                  _recv_raw, _send_frame)
+from repro.core.queue import InMemoryBroker, new_task
+from repro.core.wirecodec import (BIN_CODEC, CODECS, CodecError,
+                                  DEFAULT_PREFERENCE, JSON_CODEC, get_codec,
+                                  negotiate_codec)
+
+
+# ---------------------------------------------------------------------------
+# bin1 roundtrips
+# ---------------------------------------------------------------------------
+
+ROUNDTRIP_VALUES = [
+    None,
+    True,
+    False,
+    0,
+    -1,
+    1,
+    2 ** 80,            # unbounded ints (JSON parity)
+    -(2 ** 80),
+    1.5,
+    -0.0,
+    float("inf"),
+    float("-inf"),
+    "",
+    "plain",
+    "unicode ☃ \U0001f600",
+    b"",
+    b"\x00\xff raw bytes",
+    [],
+    {},
+    [1, "two", None, [3.0, 4.0]],
+    {"nested": {"deep": [{"k": "v"}]}, "n": 7},
+]
+
+
+@pytest.mark.parametrize("value", ROUNDTRIP_VALUES,
+                         ids=[repr(v)[:40] for v in ROUNDTRIP_VALUES])
+def test_bin1_roundtrip(value):
+    assert BIN_CODEC.decode(BIN_CODEC.encode(value)) == value
+
+
+def test_bin1_roundtrip_nan():
+    out = BIN_CODEC.decode(BIN_CODEC.encode(float("nan")))
+    assert out != out  # NaN survives (JSON cannot even carry it)
+
+
+def test_bin1_float_list_fast_path():
+    # a homogeneous float list travels as ONE raw buffer; mixed lists
+    # take the generic path — both must round-trip identically
+    floats = [0.0, -1.25, 3.5e300, float("inf")]
+    enc = BIN_CODEC.encode(floats)
+    assert enc[0] == 0x09  # _T_F64ARR
+    assert BIN_CODEC.decode(enc) == floats
+    mixed = [1.0, 2, 3.0]
+    assert BIN_CODEC.decode(BIN_CODEC.encode(mixed)) == mixed
+
+
+@pytest.mark.parametrize("dtype", ["float64", "float32", "int32"])
+def test_bin1_ndarray_roundtrip(dtype):
+    arr = np.arange(24, dtype=dtype).reshape(2, 3, 4)
+    out = BIN_CODEC.decode(BIN_CODEC.encode({"x": arr}))["x"]
+    assert out.dtype == arr.dtype
+    assert out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_bin1_ndarray_noncontiguous_and_scalars():
+    arr = np.arange(16, dtype=np.float64).reshape(4, 4)[:, ::2]  # strided
+    out = BIN_CODEC.decode(BIN_CODEC.encode(arr))
+    np.testing.assert_array_equal(out, arr)
+    obj = {"i": np.int64(7), "f": np.float32(1.5), "b": np.bool_(True)}
+    dec = BIN_CODEC.decode(BIN_CODEC.encode(obj))
+    assert dec == {"i": 7, "f": 1.5, "b": True}
+
+
+def test_bin1_rejects_unencodable():
+    with pytest.raises(CodecError):
+        BIN_CODEC.encode({"bad": object()})
+
+
+def test_bin1_depth_limit():
+    deep = None
+    for _ in range(80):
+        deep = [deep]
+    with pytest.raises(CodecError, match="nesting"):
+        BIN_CODEC.encode(deep)
+
+
+# ---------------------------------------------------------------------------
+# JSON floor: arrays must survive a fallback connection
+# ---------------------------------------------------------------------------
+
+def test_json_codec_degrades_arrays_to_lists():
+    obj = {"x": np.arange(3, dtype=np.float64), "n": np.int32(5)}
+    out = JSON_CODEC.decode(JSON_CODEC.encode(obj))
+    assert out == {"x": [0.0, 1.0, 2.0], "n": 5}
+
+
+def test_json_codec_rejects_unknown_types():
+    with pytest.raises(TypeError):
+        JSON_CODEC.encode({"bad": object()})
+    with pytest.raises(CodecError):
+        JSON_CODEC.decode(b"\xff not json")
+
+
+# ---------------------------------------------------------------------------
+# defensive decode: corrupt bytes -> CodecError, never a hang or crash
+# ---------------------------------------------------------------------------
+
+def test_bin1_truncation_at_every_offset():
+    frame = BIN_CODEC.encode({"k": [1.0, 2.0, 3.0], "s": "abc",
+                              "a": np.arange(4, dtype=np.float64)})
+    for cut in range(len(frame)):
+        with pytest.raises(CodecError):
+            BIN_CODEC.decode(frame[:cut])
+
+
+def test_bin1_unknown_tag_and_trailing_garbage():
+    with pytest.raises(CodecError, match="unknown bin1 tag"):
+        BIN_CODEC.decode(b"\x99")
+    with pytest.raises(CodecError, match="trailing"):
+        BIN_CODEC.decode(BIN_CODEC.encode(1) + b"\x00")
+    with pytest.raises(CodecError):
+        BIN_CODEC.decode(b"")
+
+
+def test_bin1_hostile_lengths_do_not_allocate():
+    # a tag claiming a huge count must fail the bounds check, not try to
+    # build a billion-entry list / string
+    huge = bytearray([0x05])  # _T_STR
+    huge += b"\xff\xff\xff\xff\x7f"  # varint ~3.4e10
+    with pytest.raises(CodecError):
+        BIN_CODEC.decode(bytes(huge))
+    with pytest.raises(CodecError):
+        BIN_CODEC.decode(bytes([0x07]) + b"\xff\xff\xff\xff\x7f")  # list
+    with pytest.raises(CodecError):
+        BIN_CODEC.decode(bytes([0x09]) + b"\xff\xff\xff\xff\x7f")  # f64arr
+    # ndarray with an absurd rank or dtype
+    with pytest.raises(CodecError):
+        BIN_CODEC.decode(bytes([0x0A, 0x02]) + b"zz")
+    deep = b"\x07\x01" * 80 + b"\x00"  # 80 nested single-item lists
+    with pytest.raises(CodecError, match="nesting"):
+        BIN_CODEC.decode(deep)
+
+
+# ---------------------------------------------------------------------------
+# negotiation
+# ---------------------------------------------------------------------------
+
+def test_negotiate_codec_matrix():
+    assert negotiate_codec(DEFAULT_PREFERENCE, DEFAULT_PREFERENCE) == "bin1"
+    assert negotiate_codec(("json",), ("bin1", "json")) == "json"
+    assert negotiate_codec(DEFAULT_PREFERENCE, ("json",)) == "json"
+    assert negotiate_codec(DEFAULT_PREFERENCE, ()) == "json"
+    # unknown names on either side fall through to the floor
+    assert negotiate_codec(("zstd9", "json"), ("zstd9",)) == "json"
+    assert negotiate_codec((), ("bin1",)) == "json"
+
+
+def test_get_codec_unknown_raises():
+    assert get_codec("bin1") is BIN_CODEC
+    assert get_codec("json") is JSON_CODEC
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        get_codec("gzip")
+    with pytest.raises(ValueError):
+        NetBroker("tcp://127.0.0.1:1", codec="gzip")
+    with pytest.raises(ValueError):
+        BrokerServer(InMemoryBroker(), codecs=("gzip",))
+
+
+# ---------------------------------------------------------------------------
+# live negotiation over sockets
+# ---------------------------------------------------------------------------
+
+def _roundtrip_task(client):
+    arr = np.arange(8, dtype=np.float64)
+    client.put(new_task("sim", {"x": arr}))
+    lease = client.get(timeout=2.0)
+    assert lease is not None
+    client.ack(lease.tag)
+    got = lease.task.payload["x"]
+    # bin1 preserves the ndarray; the JSON floor degrades it to a list
+    np.testing.assert_array_equal(np.asarray(got, dtype=np.float64), arr)
+
+
+@pytest.mark.net
+@pytest.mark.parametrize("server_codecs,client_codec,expect", [
+    (DEFAULT_PREFERENCE, "auto", "bin1"),
+    (DEFAULT_PREFERENCE, "bin1", "bin1"),
+    (DEFAULT_PREFERENCE, "json", "json"),
+    (("json",), "auto", "json"),       # binary-unaware server
+    (("json",), "bin1", "json"),       # bin1 insisted, floor still wins
+])
+def test_negotiation_over_socket(server_codecs, client_codec, expect):
+    server = BrokerServer(InMemoryBroker(visibility_timeout=0.5),
+                          codecs=server_codecs).start()
+    try:
+        client = NetBroker(server.address, reconnect_timeout=2.0,
+                           codec=client_codec)
+        try:
+            _roundtrip_task(client)
+            assert client._negotiated == expect
+        finally:
+            client.close()
+    finally:
+        server.stop()
+
+
+@pytest.mark.net
+def test_mixed_fleet_one_server_counts_codecs():
+    server = BrokerServer(InMemoryBroker(visibility_timeout=0.5)).start()
+    try:
+        binc = NetBroker(server.address, codec="auto")
+        legacy = NetBroker(server.address, codec="json")
+        try:
+            binc.put(new_task("sim", {"i": 1}))
+            legacy.put(new_task("sim", {"i": 2}))
+            tags = []
+            for _ in range(2):
+                lease = binc.get(timeout=2.0)
+                assert lease is not None
+                tags.append(lease.tag)
+            binc.ack_many(tags)
+            assert server.stats["codecs"]["bin1"] >= 1
+            assert server.stats["codecs"]["json"] >= 1
+        finally:
+            binc.close()
+            legacy.close()
+    finally:
+        server.stop()
+
+
+@pytest.mark.net
+def test_raw_legacy_client_still_speaks_json():
+    # a pre-codec client never sends hello: bare length-prefixed JSON
+    # frames must keep working against an upgraded server
+    server = BrokerServer(InMemoryBroker(visibility_timeout=0.5)).start()
+    try:
+        with socket.create_connection(("127.0.0.1", server.port),
+                                      timeout=2.0) as s:
+            _send_frame(s, {"op": "put", "task": {
+                "id": "t-legacy", "kind": "sim", "payload": {"i": 1},
+                "priority": 0, "queue": "default", "retries": 0,
+                "enqueued_at": 0.0}})
+            assert _recv_frame(s)["ok"]
+            _send_frame(s, {"op": "qsize"})
+            resp = _recv_frame(s)
+            assert resp["ok"] and resp["n"] == 1
+    finally:
+        server.stop()
+
+
+@pytest.mark.net
+def test_client_falls_back_when_server_rejects_hello():
+    # emulate a pre-codec server: answers hello with an unknown-op error;
+    # the client must settle on JSON and keep working
+    lsock = socket.socket()
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+    port = lsock.getsockname()[1]
+
+    def fake_server():
+        conn, _ = lsock.accept()
+        with conn:
+            req = _recv_frame(conn)
+            assert req["op"] == "hello"
+            _send_frame(conn, {"ok": False, "error": "unknown op hello",
+                               "error_type": "BrokerError"})
+            req = _recv_frame(conn)  # must arrive as plain JSON
+            assert req["op"] == "qsize"
+            _send_frame(conn, {"ok": True, "n": 0})
+
+    t = threading.Thread(target=fake_server, daemon=True)
+    t.start()
+    try:
+        client = NetBroker(f"tcp://127.0.0.1:{port}", reconnect_timeout=1.0)
+        try:
+            assert client.qsize() == 0
+            assert client._negotiated == "json"
+        finally:
+            client.close()
+        t.join(timeout=5.0)
+        assert not t.is_alive()
+    finally:
+        lsock.close()
+
+
+@pytest.mark.net
+def test_corrupt_bin1_frame_is_quarantined_not_fatal():
+    # after negotiating bin1, send bytes that fail to decode: the server
+    # must answer with a typed CodecError and keep the connection alive
+    server = BrokerServer(InMemoryBroker(visibility_timeout=0.5)).start()
+    try:
+        with socket.create_connection(("127.0.0.1", server.port),
+                                      timeout=2.0) as s:
+            _send_frame(s, {"op": "hello", "codecs": ["bin1", "json"]})
+            assert _recv_frame(s)["codec"] == "bin1"
+            garbage = b"\x99\x01\x02"
+            s.sendall(struct.pack(">I", len(garbage)) + garbage)
+            resp = BIN_CODEC.decode(_recv_raw(s))
+            assert not resp["ok"]
+            assert resp["error_type"] == "CodecError"
+            # connection survives: a well-formed frame still works
+            _send_frame(s, {"op": "qsize"}, codec=BIN_CODEC)
+            resp = BIN_CODEC.decode(_recv_raw(s))
+            assert resp["ok"] and resp["n"] == 0
+        assert server.stats["codec_errors"] >= 1
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# seeded fuzz (chaos tier): corrupt frames decode to CodecError or a
+# value — never a hang, MemoryError, or interpreter-level blowup
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_fuzz_bitflips_and_truncations():
+    rng = np.random.default_rng(0xC0DEC)
+    seeds = [BIN_CODEC.encode(v) for v in (
+        {"op": "put_many", "tasks": [{"id": "t", "payload":
+                                      {"x": [1.0] * 32}}] * 4},
+        {"arr": np.arange(64, dtype=np.float64).reshape(8, 8)},
+        ["str", b"bytes", 2 ** 70, None, {"k": [True, False]}],
+    )]
+    for _ in range(400):
+        frame = bytearray(seeds[rng.integers(len(seeds))])
+        for _ in range(rng.integers(1, 4)):
+            frame[rng.integers(len(frame))] ^= 1 << rng.integers(8)
+        if rng.random() < 0.3:
+            frame = frame[:rng.integers(len(frame) + 1)]
+        try:
+            BIN_CODEC.decode(bytes(frame))
+        except CodecError:
+            pass  # the contract: typed error, nothing else
+
+
+@pytest.mark.chaos
+def test_fuzz_random_bytes_never_crash_decoder():
+    rng = np.random.default_rng(7)
+    for _ in range(300):
+        blob = rng.integers(0, 256, size=rng.integers(0, 128),
+                            dtype=np.uint8).tobytes()
+        try:
+            BIN_CODEC.decode(blob)
+        except CodecError:
+            pass
