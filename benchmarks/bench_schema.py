@@ -106,7 +106,8 @@ ENSEMBLE_SPEC: Dict[str, Any] = {
 # wire-codec acceptance unmeasured while the artifact still "passes"
 _REQUIRED_BROKER_SCENARIOS = ("net_mem_arr_w1_b32_bin1",
                               "net_mem_arr_w1_b32_json",
-                              "net_mem_procs4_b8", "shm_w4_b8")
+                              "net_mem_procs4_b8", "shm_w4_b8",
+                              "elastic_rebalance")
 
 
 def _broker_scenarios(d: Any) -> Optional[str]:
@@ -137,6 +138,11 @@ BROKER_SPEC: Dict[str, Any] = {
                    "shard2_vs_net_mem_b8": _NUM, "pass_shard": bool,
                    "bin1_vs_json_arr_b32": _NUM, "pass_codec": bool,
                    "shm_vs_net_mem_procs4_b8": _NUM, "pass_shm": bool,
+                   "elastic_moved_fraction": _NUM,
+                   "elastic_moved_bar": _NUM,
+                   "elastic_rebalance_s": _NUM,
+                   "elastic_task_loss": _NUM,
+                   "pass_elastic": bool,
                    "pass": bool},
 }
 

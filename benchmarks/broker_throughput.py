@@ -401,6 +401,137 @@ def bench_study_codecs(n_tasks: int, n_procs: int = 2, batch: int = 8,
     return out
 
 
+def bench_elastic_rebalance(n_tasks: int, n_queues: int = 24,
+                            n_consumers: int = 3) -> dict:
+    """Kill-then-join under saturating load: 3 file-backed shards in a
+    membership federation, a consumer fleet draining through elastic
+    clients; mid-drain one shard dies, heartbeat-TTL eviction re-homes
+    its ring share, and a replacement adopts the dead shard's durable
+    root and joins.  Measures time-to-rebalance, the fraction of queues
+    each membership change moved (bar: <= 2/N), and audits zero task
+    loss (every produced id delivered; duplicates are redeliveries the
+    once-marker layer absorbs)."""
+    from repro.core.hashring import (HashRing, join_membership,
+                                     heartbeat_membership, moved_keys,
+                                     read_membership, sweep_membership)
+    from repro.core.shardbroker import join_federation
+
+    tmp = tempfile.mkdtemp(prefix="elastic-bench-")
+    path = os.path.join(tmp, "members.json")
+    queues = [f"bench{q}" for q in range(n_queues)]
+    servers = {}
+    replacement = None
+    try:
+        for i in range(3):
+            s = BrokerServer(FileBroker(os.path.join(tmp, f"shard{i}"),
+                                        visibility_timeout=2.0)).start()
+            servers[s.address] = s
+            join_membership(path, s.address)
+        urls = list(servers)
+        victim = urls[0]
+
+        # short reconnect_timeout: membership eviction, not TCP-level
+        # retry patience, is the elastic failure detector — a client
+        # parked 10s on a dead endpoint would measure the reconnect
+        # budget, not the rebalance
+        sb = ShardedBroker.from_membership(path, refresh_interval=0.05,
+                                           reconnect_timeout=1.0)
+        produced = [new_task("real", {"i": i}, queue=queues[i % n_queues])
+                    for i in range(n_tasks)]
+        sb.put_many(produced)
+        all_ids = {t.id for t in produced}
+        sb.close()
+
+        lock = threading.Lock()
+        seen: dict = {}
+        done = threading.Event()
+
+        def consume():
+            cb = ShardedBroker.from_membership(path, refresh_interval=0.05,
+                                               poll_slice=0.02,
+                                               reconnect_timeout=1.0)
+            try:
+                while not done.is_set():
+                    try:
+                        leases = cb.get_many(8, timeout=0.2)
+                    except Exception:
+                        continue  # dead shard mid-churn; retry re-routes
+                    if not leases:
+                        continue
+                    try:
+                        cb.ack_many([l.tag for l in leases])
+                    except Exception:
+                        pass  # lost acks redeliver after the vt
+                    with lock:
+                        for l in leases:
+                            seen[l.task.id] = seen.get(l.task.id, 0) + 1
+                        if all_ids <= seen.keys():
+                            done.set()
+            finally:
+                cb.close()
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=consume)
+                   for _ in range(n_consumers)]
+        [t.start() for t in threads]
+
+        # let the fleet reach steady state, then kill the victim
+        while not done.is_set():
+            with lock:
+                if len(seen) >= n_tasks // 6:
+                    break
+            time.sleep(0.02)
+        ring_before = HashRing(urls)
+        t_kill = time.perf_counter()
+        servers.pop(victim).stop()
+
+        # heartbeat the survivors, then TTL-evict the silent victim
+        survivors = list(servers)
+        for u in survivors:
+            heartbeat_membership(path, u)
+        m = read_membership(path)
+        dead_age = time.time() - float(m.members[victim]["heartbeat_at"])
+        sweep_membership(path, ttl=max(dead_age * 0.5, 0.05))
+        ring_evicted = HashRing(survivors)
+        frac_evict = len(moved_keys(ring_before, ring_evicted,
+                                    queues)) / n_queues
+
+        # replacement adopts the dead shard's durable root on a new port
+        replacement = BrokerServer(
+            FileBroker(os.path.join(tmp, "shard0"),
+                       visibility_timeout=2.0)).start()
+        res = join_federation(path, replacement.address)
+        rebalance_s = time.perf_counter() - t_kill
+        ring_after = HashRing(survivors + [replacement.address])
+        frac_join = len(moved_keys(ring_evicted, ring_after,
+                                   queues)) / n_queues
+
+        if not done.wait(timeout=120.0):
+            done.set()
+        [t.join(timeout=10.0) for t in threads]
+        wall = time.perf_counter() - t0
+        with lock:
+            lost = len(all_ids - seen.keys())
+            dups = sum(c - 1 for c in seen.values())
+        if lost:
+            raise RuntimeError(
+                f"elastic rebalance lost {lost}/{n_tasks} task(s)")
+        return {"tasks_per_s": n_tasks / wall, "wall_s": wall,
+                "rebalance_s": round(rebalance_s, 4),
+                "moved_frac_evict": round(frac_evict, 4),
+                "moved_frac_join": round(frac_join, 4),
+                "queues_rehomed_on_join": len(res["moved"]),
+                "task_loss": lost, "duplicates": dups,
+                "n_tasks": n_tasks, "n_queues": n_queues,
+                "members": 3}
+    finally:
+        for s in servers.values():
+            s.stop()
+        if replacement is not None:
+            replacement.stop()
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def run(tasks: int = 1000, quick: bool = False,
         out: str = DEFAULT_OUT) -> dict:
     """Run the full scenario matrix, write the artifact, return it
@@ -497,6 +628,26 @@ def run(tasks: int = 1000, quick: bool = False,
                      / scenarios["net_mem_procs4_b8"]["tasks_per_s"])
         rows.append(("shm_vs_net_mem_procs4_b8", shm_ratio,
                      f"{shm_ratio:.2f}x (acceptance > 1x)"))
+        # elastic federation: kill one shard mid-drain, TTL-evict it,
+        # join a replacement adopting the durable root.  Runs in --quick
+        # too (the schema fences the scenario + its acceptance keys)
+        elastic = bench_elastic_rebalance(600 if quick else 3000)
+        record("elastic_rebalance", elastic,
+               f"rebalance={elastic['rebalance_s']*1e3:.0f}ms "
+               f"moved={elastic['moved_frac_evict']:.2f}/"
+               f"{elastic['moved_frac_join']:.2f} "
+               f"loss={elastic['task_loss']}")
+        elastic_bar = 2.0 / elastic["members"]
+        elastic_moved = max(elastic["moved_frac_evict"],
+                            elastic["moved_frac_join"])
+        scenarios["elastic_rebalance"].update(
+            {k: elastic[k] for k in
+             ("rebalance_s", "moved_frac_evict", "moved_frac_join",
+              "queues_rehomed_on_join", "task_loss", "duplicates",
+              "n_tasks", "n_queues", "members")})
+        rows.append(("elastic_moved_fraction", elastic_moved,
+                     f"{elastic_moved:.2f} (acceptance <= "
+                     f"{elastic_bar:.2f} per membership change)"))
         # end-to-end study wall time per codec (meta, not a scenario:
         # it is a wall-clock delta, not a tasks/s figure)
         study = bench_study_codecs(200 if quick else 800)
@@ -556,8 +707,20 @@ def run(tasks: int = 1000, quick: bool = False,
             "pass_codec": bool(codec_ratio >= 3.0),
             "shm_vs_net_mem_procs4_b8": round(shm_ratio, 2),
             "pass_shm": bool(shm_ratio > 1.0),
+            # elastic rebalance: a membership change may move at most
+            # 2/N of the queues, and the kill-then-join run must lose
+            # nothing (duplicates are redeliveries, absorbed by the
+            # once-marker layer — recorded, not gated)
+            "elastic_moved_fraction": round(elastic_moved, 4),
+            "elastic_moved_bar": round(elastic_bar, 4),
+            "elastic_rebalance_s": elastic["rebalance_s"],
+            "elastic_task_loss": elastic["task_loss"],
+            "pass_elastic": bool(elastic_moved <= elastic_bar
+                                 and elastic["task_loss"] == 0),
             "pass": bool(net_ratio >= 1.0 and shard_ratio >= shard_bar
-                         and codec_ratio >= 3.0 and shm_ratio > 1.0),
+                         and codec_ratio >= 3.0 and shm_ratio > 1.0
+                         and elastic_moved <= elastic_bar
+                         and elastic["task_loss"] == 0),
         },
     }
     with open(out + ".tmp", "w") as f:

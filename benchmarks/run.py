@@ -112,6 +112,14 @@ def main() -> None:
                      1e6 / bt["scenarios"]["shm_w4_b8"]["tasks_per_s"],
                      f"{bt['acceptance']['shm_vs_net_mem_procs4_b8']:.2f}x "
                      f"vs tcp, same-host fleet (bar > 1x)"))
+        el = bt["scenarios"]["elastic_rebalance"]
+        rows.append(("broker_elastic_rebalance",
+                     1e6 / el["tasks_per_s"],
+                     f"rebalance {el['rebalance_s']:.2f}s; moved "
+                     f"{bt['acceptance']['elastic_moved_fraction']:.2f} of "
+                     f"queues (bar <= "
+                     f"{bt['acceptance']['elastic_moved_bar']:.2f}); "
+                     f"loss={el['task_loss']}"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

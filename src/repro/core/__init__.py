@@ -8,7 +8,14 @@ from repro.core.queue import (Broker, BrokerError, BrokerFull,  # noqa
                               PRIORITY_REAL, PRIORITY_GEN,
                               dlq_queue_name, is_dlq, original_queue)
 from repro.core.netbroker import BrokerServer, NetBroker, make_broker  # noqa
-from repro.core.shardbroker import ShardedBroker  # noqa
+from repro.core.shardbroker import (ShardedBroker,  # noqa
+                                    migrate_queue_between,
+                                    join_federation, leave_federation)
+from repro.core.hashring import (HashRing, Membership,  # noqa
+                                 read_membership, join_membership,
+                                 leave_membership, heartbeat_membership,
+                                 sweep_membership, pin_queue)
+from repro.core.autoscale import Autoscaler, AutoscalePolicy  # noqa
 from repro.core.hierarchy import HierarchyCfg, root_task, expand  # noqa
 from repro.core.spec import StudySpec, Step, SpecError  # noqa
 from repro.core.dag import TaskDag, DagNode, DagEdge, compile_dag  # noqa

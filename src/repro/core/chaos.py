@@ -183,6 +183,17 @@ class ChaosBroker:
                   queues: Optional[Sequence[str]] = None) -> None:
         self.inner.heartbeat(consumer_id, queues)
 
+    # migration protocol ops are control-plane: chaos must not break the
+    # handoff itself, only the data traffic flowing around it
+    def migrate_queue(self, queue: str, target: Optional[str]) -> None:
+        self.inner.migrate_queue(queue, target)
+
+    def export_queue(self, queue: str, max_n: int = 256) -> List[Dict[str, Any]]:
+        return self.inner.export_queue(queue, max_n)
+
+    def import_tasks(self, tasks: List[Dict[str, Any]]) -> None:
+        self.inner.import_tasks(tasks)
+
     @property
     def stats(self) -> Dict[str, Any]:
         s = dict(self.inner.stats)

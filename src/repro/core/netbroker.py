@@ -430,6 +430,19 @@ class BrokerServer:
             b.heartbeat(str(req["consumer_id"]),
                         tuple(queues) if queues is not None else None)
             return {}
+        # live-migration protocol ops (drain-and-forward queue handoff;
+        # see repro.core.shardbroker.migrate_queue_between)
+        if op == "migrate_queue":
+            target = req.get("target")
+            b.migrate_queue(str(req["queue"]),
+                            None if target is None else str(target))
+            return {}
+        if op == "export_queue":
+            return {"tasks": b.export_queue(str(req["queue"]),
+                                            int(req.get("max_n", 256)))}
+        if op == "import_tasks":
+            b.import_tasks(req["tasks"])
+            return {"n": len(req["tasks"])}
         raise BrokerError(f"unknown op {op!r}")
 
 
@@ -720,6 +733,24 @@ class NetBroker:
         return [(Task(**d), float(age))
                 for d, age in self._call("inflight_tasks")["tasks"]]
 
+    # -- live-migration protocol ops (both codecs: plain dict payloads) ------
+    def migrate_queue(self, queue: str, target: Optional[str]) -> None:
+        """Mark/clear ``queue`` migrating on the server backend (while
+        marked: consumers see it empty, puts forward to ``target``)."""
+        self._call("migrate_queue", queue=queue,
+                   target=None if target is None else str(target))
+
+    def export_queue(self, queue: str, max_n: int = 256) -> List[Dict[str, Any]]:
+        """Atomically pop up to ``max_n`` pending tasks as wire dicts."""
+        return list(self._call("export_queue", queue=queue,
+                               max_n=int(max_n))["tasks"])
+
+    def import_tasks(self, tasks: List[Dict[str, Any]]) -> None:
+        """Enqueue exported task dicts, exempt from the depth bound."""
+        self._call("import_tasks",
+                   tasks=[t if isinstance(t, dict) else task_to_wire(t)
+                          for t in tasks])
+
     @property
     def stats(self) -> Dict[str, int]:
         s = dict(self._call("stats")["stats"])
@@ -749,6 +780,10 @@ def make_broker(url, **kwargs) -> Broker:
       discovery file published by ``broker-serve --announce <path>``
       (waits for the declared federation size; ``expect=`` overrides it,
       ``discover_timeout=`` bounds the wait)
+    * ``ring+file://<path>``   ELASTIC ShardedBroker following the
+      membership registry at ``<path>`` (``broker-serve --join <path>``):
+      routing re-resolves on membership version bumps, so shards can
+      join and leave while this client runs
     * ``["tcp://...", ...]``   a list/tuple of URLs == a ShardedBroker
 
     Extra kwargs go to the chosen constructor (e.g. ``visibility_timeout``
@@ -769,6 +804,13 @@ def make_broker(url, **kwargs) -> Broker:
                                expect=kwargs.pop("expect", None),
                                timeout=kwargs.pop("discover_timeout", 10.0),
                                **kwargs)
+    if url.startswith("ring+file://"):
+        from repro.core.shardbroker import ShardedBroker
+        path = url[len("ring+file://"):]
+        if not path:
+            raise ValueError("ring+file:// broker URL needs the "
+                             "membership file path")
+        return ShardedBroker.from_membership(path, **kwargs)
     if url.startswith("shard://"):
         from repro.core.shardbroker import ShardedBroker
         # each comma-separated shard entry may carry |-separated replica

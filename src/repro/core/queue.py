@@ -426,6 +426,12 @@ class InMemoryBroker:
                        "starvation_avoided": 0}
         # per-queue ack counters feed merlin-status --watch throughput
         self._acked_q: Dict[str, int] = {}
+        # live-migration marks: queue -> forward target URL.  While set,
+        # consumers see the queue as empty, new puts forward to the
+        # target, and in-flight leases drain in place (their acks/nacks
+        # still land here).  See ShardedBroker.migrate_queue_between.
+        self._migrating: Dict[str, str] = {}
+        self._fwd_clients: Dict[str, Any] = {}
 
     @property
     def stats(self) -> Dict[str, Any]:
@@ -433,6 +439,8 @@ class InMemoryBroker:
             s = dict(self._stats)
             s["acked_by_queue"] = dict(self._acked_q)
             s["consumers"] = self._consumers_view_locked()
+            if self._migrating:
+                s["migrating"] = sorted(self._migrating)
         return s
 
     # -- consumer heartbeats -------------------------------------------------
@@ -507,26 +515,118 @@ class InMemoryBroker:
                     f"for {self._put_timeout}s (max_queue_depth)")
             self._lock.wait(remaining)
 
-    def put(self, task: Task) -> None:
+    # -- live queue migration -----------------------------------------------
+    def migrate_queue(self, queue: str, target: Optional[str]) -> None:
+        """Mark ``queue`` migrating to ``target`` (a broker URL), or clear
+        the mark with ``None``.  While marked: gets skip the queue, puts
+        forward to the target, in-flight leases drain in place."""
+        validate_queue_name(queue)
+        orphans = []
         with self._lock:
-            if self._bounded():
-                self._wait_capacity_locked(
-                    task.queue, time.monotonic() + self._put_timeout)
-            task.enqueued_at = time.monotonic()
-            self._push_locked(task)
-            self._stats["enqueued"] += 1
+            if target is None:
+                self._migrating.pop(queue, None)
+                live = set(self._migrating.values())
+                orphans = [self._fwd_clients.pop(u)
+                           for u in list(self._fwd_clients)
+                           if u not in live]
+            else:
+                self._migrating[queue] = str(target)
+            self._lock.notify_all()
+        for c in orphans:
+            close = getattr(c, "close", None)
+            if close is not None:
+                try:
+                    close()
+                except Exception:
+                    pass
+
+    def _forward(self, target: str, tasks: List[Task]) -> None:
+        client = self._fwd_clients.get(target)
+        if client is None:
+            from repro.core.netbroker import make_broker
+            with self._lock:
+                client = self._fwd_clients.get(target)
+                if client is None:
+                    client = self._fwd_clients[target] = make_broker(target)
+        client.put_many(tasks)  # target applies its own backpressure
+        with self._lock:
+            self._stats["forwarded"] = \
+                self._stats.get("forwarded", 0) + len(tasks)
+
+    def export_queue(self, queue: str, max_n: int = 256) -> List[Dict[str, Any]]:
+        """Atomically pop up to ``max_n`` pending tasks as wire dicts (the
+        migration drain path; works on migrating and normal queues)."""
+        out: List[Dict[str, Any]] = []
+        with self._lock:
+            heap = self._heaps.get(queue)
+            while heap and len(out) < int(max_n):
+                out.append(task_to_wire(heapq.heappop(heap)[2]))
+            if out:
+                self._stats["exported"] = \
+                    self._stats.get("exported", 0) + len(out)
+                self._lock.notify_all()  # freed capacity wakes producers
+        return out
+
+    def import_tasks(self, tasks: List[Any]) -> None:
+        """Enqueue exported task dicts (or Tasks).  Exempt from the depth
+        bound like redelivery — the tasks were already admitted once by
+        the federation; blocking a migration on a full queue would strand
+        them between owners."""
+        with self._lock:
+            now = time.monotonic()
+            for d in tasks:
+                t = d if isinstance(d, Task) else Task(**d)
+                t.enqueued_at = now
+                self._push_locked(t)
+            self._stats["imported"] = \
+                self._stats.get("imported", 0) + len(tasks)
             self._lock.notify_all()
 
-    def put_many(self, tasks: List[Task]) -> None:
-        if not self._bounded():  # unbounded: one lock, one wakeup
-            now = time.monotonic()
-            with self._lock:
-                for t in tasks:
-                    t.enqueued_at = now
-                    self._push_locked(t)
-                self._stats["enqueued"] += len(tasks)
+    def put(self, task: Task) -> None:
+        with self._lock:
+            target = self._migrating.get(task.queue)
+            if target is None:
+                if self._bounded():
+                    self._wait_capacity_locked(
+                        task.queue, time.monotonic() + self._put_timeout)
+                task.enqueued_at = time.monotonic()
+                self._push_locked(task)
+                self._stats["enqueued"] += 1
                 self._lock.notify_all()
-            return
+                return
+        self._forward(target, [task])
+
+    def put_many(self, tasks: List[Task]) -> None:
+        fwd: Dict[str, List[Task]] = {}
+        if self._migrating:
+            with self._lock:
+                if self._migrating:
+                    local: List[Task] = []
+                    for t in tasks:
+                        tgt = self._migrating.get(t.queue)
+                        if tgt is None:
+                            local.append(t)
+                        else:
+                            fwd.setdefault(tgt, []).append(t)
+                    tasks = local
+        try:
+            if not tasks:
+                return
+            if not self._bounded():  # unbounded: one lock, one wakeup
+                now = time.monotonic()
+                with self._lock:
+                    for t in tasks:
+                        t.enqueued_at = now
+                        self._push_locked(t)
+                    self._stats["enqueued"] += len(tasks)
+                    self._lock.notify_all()
+                return
+            self._put_many_bounded(tasks)
+        finally:
+            for target, ts in fwd.items():
+                self._forward(target, ts)
+
+    def _put_many_bounded(self, tasks: List[Task]) -> None:
         with self._lock:
             # ONE deadline for the whole call: put_timeout bounds total
             # blocking, so a relayed put_many can never park a server
@@ -547,9 +647,13 @@ class InMemoryBroker:
     # -- consumer side ------------------------------------------------------
     def _pop_best_locked(self, queues: Optional[Tuple[str, ...]]) -> Optional[Task]:
         # wildcard subscribers never see dead-letter queues; dlq.* must be
-        # addressed explicitly (merlin-dlq) or its tasks would re-execute
+        # addressed explicitly (merlin-dlq) or its tasks would re-execute.
+        # Migrating queues are invisible even to explicit subscribers —
+        # their pending tasks are mid-handoff to the new owner.
         names = ([q for q in self._heaps if not is_dlq(q)]
                  if queues is None else queues)
+        if self._migrating:
+            names = [q for q in names if q not in self._migrating]
         best_q = None
         best_key: Optional[Tuple[int, int]] = None
         nonempty: List[str] = []
@@ -805,6 +909,10 @@ class FileBroker:
         # per-queue ack counters (this instance's acks only — each worker
         # process counts its own work) feed merlin-status --watch rates
         self._acked_q: Dict[str, int] = {}
+        # live-migration marks (in-memory, held by the serving instance):
+        # queue -> forward target URL.  See InMemoryBroker._migrating.
+        self._migrating: Dict[str, str] = {}
+        self._fwd_clients: Dict[str, Any] = {}
         if queue_timeouts:  # constructor overrides are shared state too
             self._save_vtconf()
 
@@ -813,6 +921,8 @@ class FileBroker:
         with self._ilock:
             s = dict(self._stats)
             s["acked_by_queue"] = dict(self._acked_q)
+            if self._migrating:
+                s["migrating"] = sorted(self._migrating)
         s["consumers"] = self._consumers_view()
         return s
 
@@ -1001,8 +1111,117 @@ class FileBroker:
         os.rename(tmp, os.path.join(qdir, name))
         return name
 
+    # -- live queue migration -----------------------------------------------
+    def migrate_queue(self, queue: str, target: Optional[str]) -> None:
+        """Mark ``queue`` migrating to ``target`` (a broker URL), or clear
+        the mark with ``None``.  The mark is in-memory state of the
+        serving instance (one BrokerServer per root): while set, gets skip
+        the queue, puts forward, in-flight leases drain in place."""
+        validate_queue_name(queue)
+        orphans = []
+        with self._ilock:
+            if target is None:
+                self._migrating.pop(queue, None)
+                live = set(self._migrating.values())
+                orphans = [self._fwd_clients.pop(u)
+                           for u in list(self._fwd_clients)
+                           if u not in live]
+            else:
+                self._migrating[queue] = str(target)
+        for c in orphans:
+            close = getattr(c, "close", None)
+            if close is not None:
+                try:
+                    close()
+                except Exception:
+                    pass
+
+    def _forward(self, target: str, tasks: List[Task]) -> None:
+        client = self._fwd_clients.get(target)
+        if client is None:
+            from repro.core.netbroker import make_broker
+            with self._ilock:
+                client = self._fwd_clients.get(target)
+                if client is None:
+                    client = self._fwd_clients[target] = make_broker(target)
+        client.put_many(tasks)  # target applies its own backpressure
+        with self._ilock:
+            self._stats["forwarded"] = \
+                self._stats.get("forwarded", 0) + len(tasks)
+
+    def export_queue(self, queue: str, max_n: int = 256) -> List[Dict[str, Any]]:
+        """Atomically pop up to ``max_n`` pending tasks as wire dicts.
+
+        Each task file is claimed by atomic rename (so concurrent local
+        consumers cannot double-deliver it), decoded, and removed.  The
+        migration orchestrator imports the returned batch on the new
+        owner; a crash between export and import is the at-least-once
+        window every pull-based handoff has — the exactly-once *completion*
+        guarantee stays with the once-marker machinery downstream."""
+        validate_queue_name(queue)
+        out: List[Dict[str, Any]] = []
+        self._rescan((queue,), force=True)
+        while len(out) < int(max_n):
+            with self._ilock:
+                heap = self._index.get(queue)
+                name = heapq.heappop(heap) if heap else None
+            if name is None:
+                break
+            src = os.path.join(self._qdir(queue), name)
+            dst = os.path.join(self.cdir,
+                               f"{time.time():.6f}__{queue}__{name}")
+            try:
+                os.rename(src, dst)  # atomic claim-for-export
+            except OSError:
+                with self._ilock:
+                    self._saw_stale = True
+                continue
+            try:
+                with open(dst, "rb") as f:
+                    task = decode_task_file(f.read())
+            except (OSError, json.JSONDecodeError, TypeError, ValueError):
+                self._dead_letter(dst)
+                continue
+            out.append(task_to_wire(task))
+            try:
+                os.unlink(dst)
+            except OSError:
+                pass
+        if out:
+            with self._ilock:
+                self._stats["exported"] = \
+                    self._stats.get("exported", 0) + len(out)
+        return out
+
+    def import_tasks(self, tasks: List[Any]) -> None:
+        """Enqueue exported task dicts (or Tasks), exempt from the depth
+        bound like nack redelivery — the federation already admitted them
+        once; blocking mid-migration would strand them between owners."""
+        now = time.time()
+        by_q: Dict[str, List[Task]] = {}
+        for d in tasks:
+            t = d if isinstance(d, Task) else Task(**d)
+            self._check_priority(t)
+            t.enqueued_at = now
+            by_q.setdefault(t.queue, []).append(t)
+        for queue, ts in by_q.items():
+            qdir = self._ensure_queue(queue)
+            names = [self._write_pending(qdir, t) for t in ts]
+            with self._ilock:
+                index = self._index[queue]
+                for name in names:
+                    heapq.heappush(index, name)
+                self._stats["imported"] = \
+                    self._stats.get("imported", 0) + len(names)
+
     def put(self, task: Task) -> None:
         self._check_priority(task)
+        if self._migrating:
+            with self._ilock:
+                target = self._migrating.get(task.queue)
+            if target is not None:
+                self._forward(target, [task])
+                return
         qdir = self._ensure_queue(task.queue)
         self._load_depthconf()  # throttled: other instances' overrides
         if self._depth_for(task.queue) is not None:
@@ -1034,6 +1253,12 @@ class FileBroker:
             self._check_priority(t)
             t.enqueued_at = now
             by_q.setdefault(t.queue, []).append(t)
+        if self._migrating:
+            with self._ilock:
+                marks = {q: self._migrating[q] for q in by_q
+                         if q in self._migrating}
+            for q, target in marks.items():
+                self._forward(target, by_q.pop(q))
         self._load_depthconf()  # throttled: other instances' overrides
         for queue, ts in by_q.items():
             qdir = self._ensure_queue(queue)
@@ -1113,9 +1338,12 @@ class FileBroker:
 
     def _pop_best(self, queues: Optional[Tuple[str, ...]]) -> Optional[Tuple[str, str]]:
         with self._ilock:
-            # wildcard consumers skip dead-letter queues (see DLQ_PREFIX)
+            # wildcard consumers skip dead-letter queues (see DLQ_PREFIX);
+            # migrating queues are invisible even to explicit subscribers
             names = ([q for q in self._index if not is_dlq(q)]
                      if queues is None else queues)
+            if self._migrating:
+                names = [q for q in names if q not in self._migrating]
             best_q = None
             nonempty = []
             for q in names:
@@ -1321,6 +1549,21 @@ class FileBroker:
                         os.unlink(path)
                 except OSError:
                     pass
+        # prune stale consumer heartbeat files on the same cadence: the
+        # read path (_consumers_view) reaps long-dead entries only when
+        # someone actually reads stats, so an unwatched root would grow
+        # <root>/consumers/ forever as worker fleets churn
+        try:
+            hb_names = os.listdir(self.hbdir)
+        except OSError:
+            hb_names = []
+        for n in hb_names:
+            path = os.path.join(self.hbdir, n)
+            try:
+                if now - os.path.getmtime(path) > 4 * self._hb_ttl:
+                    os.unlink(path)
+            except OSError:
+                pass
 
     # -- introspection -------------------------------------------------------
     def qsize(self, queues: Optional[Sequence[str]] = None) -> int:

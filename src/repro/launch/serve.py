@@ -41,7 +41,26 @@ tasks/s) from the ``acked_by_queue`` counter deltas; ``--json`` turns the
 watch into a machine-readable stream, one snapshot object per line:
 
   PYTHONPATH=src python -m repro.launch.serve merlin-status \
-      --broker tcp://host:port [--watch S] [--json]
+      --broker tcp://host:port [--watch S] [--json] [--ring]
+
+``--ring`` renders the elastic-federation view instead: membership
+version, per-member owned-queue counts, in-flight migrations, and
+replica candidate health (requires a shard:// / shard+file:// /
+ring+file:// broker URL).
+
+Autoscaling (the stats-driven policy loop of ``core/autoscale.py`` —
+one-shot ``--plan`` prints what it would do; ``--watch S`` applies,
+starting/stopping local worker pools and sweeping dead members out of
+the membership file):
+
+  PYTHONPATH=src python -m repro.launch.serve merlin-scale \
+      --broker URL [--membership PATH] [--plan | --watch S] [--json]
+
+Elastic federation: ``broker-serve --join PATH`` registers the server in
+the membership file at PATH, pulls the queues the new ring assigns to it
+from their previous owners (live drain-and-forward migration), and
+heartbeats until shutdown, when it drains its queues back out and
+leaves.  See the README "Elastic federation" section.
 
 Dead-letter queue operations (the operator's side of ``on_failure:
 dead_letter`` — inspect what was parked and feed it back after fixing
@@ -124,6 +143,19 @@ def broker_serve_main(argv=None):
                          "server only accepts local connections anyway; "
                          "bind 0.0.0.0 (or set this flag) for "
                          "cross-node federations")
+    ap.add_argument("--join", default=None, metavar="PATH",
+                    help="join the elastic federation whose membership "
+                         "registry lives at PATH: register this server, "
+                         "pull the queues the new ring assigns to it from "
+                         "their previous owners (live migration), "
+                         "heartbeat until shutdown, then drain out and "
+                         "leave.  Clients follow the registry with "
+                         "make_broker('ring+file://PATH')")
+    ap.add_argument("--membership-ttl", type=float, default=15.0,
+                    metavar="S",
+                    help="heartbeat TTL for --join: peers/sweepers evict "
+                         "this member when its heartbeat is older than S "
+                         "seconds (heartbeats are sent every S/3)")
     args = ap.parse_args(argv)
 
     queue_depths = {}
@@ -192,11 +224,57 @@ def broker_serve_main(argv=None):
         announce_endpoint(args.announce, f"tcp://{host}:{server.port}",
                           index=None if shard_of is None else shard_of[0],
                           total=None if shard_of is None else shard_of[1])
+    join_url, hb_stop, hb_thread = None, None, None
+    if args.join:
+        import socket as _socket
+        import threading as _threading
+        from repro.core.hashring import heartbeat_membership
+        from repro.core.shardbroker import join_federation
+        host = args.announce_host or args.host
+        if host in ("0.0.0.0", "::", ""):
+            host = _socket.gethostname()
+        join_url = f"tcp://{host}:{server.port}"
+        res = join_federation(args.join, join_url)
+        print(json.dumps({"event": "joined", "membership": args.join,
+                          "url": join_url, "version": res["version"],
+                          "queues_pulled": len(res["moved"])}),
+              flush=True)
+        hb_stop = _threading.Event()
+        hb_period = max(args.membership_ttl / 3.0, 0.2)
+
+        def _heartbeat_loop():
+            while not hb_stop.wait(hb_period):
+                try:
+                    heartbeat_membership(args.join, join_url)
+                except OSError:
+                    pass  # registry briefly unwritable; retry next beat
+
+        hb_thread = _threading.Thread(target=_heartbeat_loop, daemon=True,
+                                      name="membership-heartbeat")
+        hb_thread.start()
     try:
         server.serve_forever()
     except KeyboardInterrupt:
         pass
     finally:
+        if join_url is not None:
+            hb_stop.set()
+            hb_thread.join(timeout=2.0)
+            # drain our queues to the surviving members BEFORE stopping
+            # the server (the migration pulls through our own endpoint);
+            # an unclean death instead relies on heartbeat-TTL eviction +
+            # a replacement adopting the durable root
+            from repro.core.shardbroker import leave_federation
+            try:
+                res = leave_federation(args.join, join_url)
+                print(json.dumps({"event": "left",
+                                  "membership": args.join,
+                                  "version": res["version"],
+                                  "queues_drained": len(res["moved"])}),
+                      flush=True)
+            except Exception as e:
+                print(json.dumps({"event": "leave-failed",
+                                  "error": str(e)}), flush=True)
         server.stop()
 
 
@@ -292,6 +370,39 @@ def watch_rates(prev: Optional[dict], prev_t: float, snap: dict,
             "total_tasks_per_s": round(sum(per_q.values()), 2)}
 
 
+def _render_ring(info: dict, broker_url: str) -> str:
+    """The ``merlin-status --ring`` table: membership version, per-member
+    owned-queue counts, in-flight migrations, candidate health."""
+    mode = "elastic" if info.get("elastic") else "static"
+    lines = [f"broker {broker_url}",
+             f"ring version {info['version']} ({mode}, "
+             f"vnodes={info['vnodes']})"]
+    header = (f"{'slot':>4} {'member':<28} {'epoch':>5} {'queues':>7} "
+              f"{'migrating':<18} candidates")
+    lines.append(header)
+    lines.append("-" * len(header))
+    for m in info.get("members", ()):
+        cands = ", ".join(
+            f"{'*' if c['active'] else ''}{c['endpoint']}"
+            f"[{'up' if c['alive'] else 'DOWN'}]"
+            for c in m.get("candidates", ()))
+        mig = ",".join(m.get("migrating", ())) or "-"
+        lines.append(f"{m['slot']:>4} {m['member']:<28} {m['epoch']:>5} "
+                     f"{m['queues_owned']:>7} {mig:<18} {cands}")
+    if not info.get("members"):
+        lines.append("(no members)")
+    if info.get("pins"):
+        lines.append("pins: " + ", ".join(
+            f"{q}->{u}" for q, u in sorted(info["pins"].items())))
+    if info.get("queue_pins"):
+        lines.append("index pins: " + ", ".join(
+            f"{q}->{i}" for q, i in sorted(info["queue_pins"].items())))
+    if info.get("retired_slots"):
+        lines.append("retired slots: " + ", ".join(
+            f"{s} ({u})" for s, u in sorted(info["retired_slots"].items())))
+    return "\n".join(lines)
+
+
 def merlin_status_main(argv=None):
     """``merlin-status``: the ROADMAP's 'surface consumers in a CLI' item —
     one-shot (or --watch) per-queue depth/inflight/consumers against any
@@ -311,14 +422,35 @@ def merlin_status_main(argv=None):
     ap.add_argument("--json", action="store_true",
                     help="emit machine-readable JSON instead of the table "
                          "(with --watch: a stream, one object per line)")
+    ap.add_argument("--ring", action="store_true",
+                    help="show the elastic-federation view instead: "
+                         "membership version, per-member owned-queue "
+                         "counts, migrating queues, candidate health "
+                         "(sharded broker URLs only)")
     args = ap.parse_args(argv)
 
     import time as _time
     from repro.core.netbroker import make_broker
     broker = make_broker(args.broker)
+    if args.ring and not hasattr(broker, "ring_info"):
+        ap.error(f"--ring needs a sharded broker URL (shard://, "
+                 f"shard+file://, ring+file://), got {args.broker!r}")
     prev, prev_t = None, 0.0
     try:
         while True:
+            if args.ring:
+                info = broker.ring_info()
+                if args.json:
+                    print(json.dumps({"broker": args.broker, **info}),
+                          flush=True)
+                else:
+                    print(_render_ring(info, args.broker), flush=True)
+                if args.watch is None:
+                    return
+                _time.sleep(args.watch)
+                if not args.json:
+                    print()
+                continue
             snap = status_snapshot(broker)
             now = _time.monotonic()
             rates = watch_rates(prev, prev_t, snap, now)
@@ -338,6 +470,140 @@ def merlin_status_main(argv=None):
     except KeyboardInterrupt:
         pass
     finally:
+        close = getattr(broker, "close", None)
+        if close is not None:
+            close()
+
+
+def _render_plan(plan) -> str:
+    o = plan.observed
+    lines = [f"depth {o['depth']}  inflight {o['inflight']}  "
+             f"consumers {o['consumers']}  managed workers "
+             f"{o['managed_workers']} ({o['pools']} pool(s))  "
+             f"backlog/worker {o.get('backlog_per_worker', 0)}"]
+    if o.get("members") is not None:
+        lines[0] += (f"  members {o['members']} "
+                     f"(ring v{o.get('ring_version', '?')})")
+    for a in plan.actions:
+        lines.append(f"  action: {a.kind} n={a.n} — {a.reason}")
+    for a in plan.recommendations:
+        lines.append(f"  recommend: {a.kind} — {a.reason}")
+    for a in o.get("applied", ()):
+        lines.append(f"  applied: {a['kind']} n={a['n']}")
+    if o.get("evicted_members"):
+        lines.append("  evicted: " + ", ".join(o["evicted_members"]))
+    if not plan.actions and not plan.recommendations:
+        lines.append("  steady (no action)")
+    return "\n".join(lines)
+
+
+def merlin_scale_main(argv=None):
+    """``merlin-scale``: the autoscaler policy loop as a CLI.  ``--plan``
+    (default) samples the broker once and prints what the policy would
+    do; ``--watch S`` runs plan-then-apply every S seconds — scaling a
+    set of local :class:`~repro.core.worker.WorkerPool`\\ s attached to
+    ``--broker`` up and down, sweeping heartbeat-dead members out of the
+    ``--membership`` registry, and printing shard join/leave
+    recommendations for the operator to act on (``broker-serve
+    --join``)."""
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve merlin-scale",
+        description="Plan or apply stats-driven autoscaling against a "
+                    "broker (worker pools + shard recommendations).")
+    ap.add_argument("--broker", required=True,
+                    help="broker URL: tcp://host:port, file://dir, "
+                         "shard://..., shard+file:// or ring+file://PATH")
+    ap.add_argument("--membership", default=None, metavar="PATH",
+                    help="federation membership file: apply mode evicts "
+                         "heartbeat-expired members; plan mode sizes "
+                         "shard recommendations against the member count")
+    ap.add_argument("--plan", action="store_true",
+                    help="one-shot: print the plan, change nothing "
+                         "(default when --watch is absent)")
+    ap.add_argument("--watch", type=float, default=None, metavar="S",
+                    help="apply loop: plan-then-apply every S seconds "
+                         "until interrupted")
+    ap.add_argument("--workspace", default="/tmp/merlin-scale",
+                    help="runtime workspace for worker pools started in "
+                         "apply mode")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable plans, one object per line")
+    pol = ap.add_argument_group("policy knobs")
+    pol.add_argument("--up-backlog", type=float, default=8.0,
+                     help="scale up above this many pending tasks per "
+                          "worker (default 8)")
+    pol.add_argument("--pool-size", type=int, default=2,
+                     help="workers per scale-up increment (default 2)")
+    pol.add_argument("--min-workers", type=int, default=0)
+    pol.add_argument("--max-workers", type=int, default=16)
+    pol.add_argument("--down-idle", type=float, default=10.0, metavar="S",
+                     help="retire a pool after this long continuously "
+                          "idle (default 10s)")
+    pol.add_argument("--cooldown", type=float, default=5.0, metavar="S",
+                     help="minimum spacing between applied worker "
+                          "actions (default 5s)")
+    pol.add_argument("--shard-up-depth", type=int, default=5000,
+                     help="recommend joining a shard above this total "
+                          "backlog (default 5000)")
+    pol.add_argument("--shard-down-depth", type=int, default=0,
+                     help="recommend draining a shard at/below this "
+                          "total backlog (default 0)")
+    pol.add_argument("--membership-ttl", type=float, default=15.0,
+                     help="evict members with heartbeats older than this "
+                          "when sweeping --membership (default 15s)")
+    args = ap.parse_args(argv)
+    if args.plan and args.watch is not None:
+        ap.error("--plan and --watch are mutually exclusive")
+
+    import time as _time
+    from repro.core.autoscale import Autoscaler, AutoscalePolicy
+    from repro.core.netbroker import make_broker
+    policy = AutoscalePolicy(
+        up_backlog_per_worker=args.up_backlog, pool_size=args.pool_size,
+        min_workers=args.min_workers, max_workers=args.max_workers,
+        down_idle_s=args.down_idle, cooldown_s=args.cooldown,
+        shard_up_depth=args.shard_up_depth,
+        shard_down_depth=args.shard_down_depth,
+        membership_ttl=args.membership_ttl)
+
+    apply_mode = args.watch is not None
+    runtime = None
+    if apply_mode:
+        # pools need a runtime to execute against; it shares the broker
+        from repro.core.runtime import MerlinRuntime
+        from repro.core.worker import WorkerPool
+        runtime = MerlinRuntime(broker=args.broker,
+                                workspace=args.workspace)
+        broker = runtime.broker
+
+        def pool_factory(n):
+            return WorkerPool(runtime, n_workers=n)
+
+        def engine_stats():
+            eng = runtime._engine
+            return dict(eng.stats) if eng is not None else {}
+    else:
+        broker = make_broker(args.broker)
+        pool_factory = None
+        engine_stats = None
+
+    scaler = Autoscaler(broker, policy, pool_factory=pool_factory,
+                        membership_path=args.membership,
+                        engine_stats=engine_stats)
+    try:
+        while True:
+            plan = scaler.step() if apply_mode else scaler.plan()
+            if args.json:
+                print(json.dumps(plan.to_doc()), flush=True)
+            else:
+                print(_render_plan(plan), flush=True)
+            if not apply_mode:
+                return 0
+            _time.sleep(args.watch)
+    except KeyboardInterrupt:
+        return 0
+    finally:
+        scaler.shutdown()
         close = getattr(broker, "close", None)
         if close is not None:
             close()
@@ -490,6 +756,8 @@ def main(argv=None):
         return merlin_validate_main(argv[1:])
     if argv and argv[0] == "merlin-dlq":
         return merlin_dlq_main(argv[1:])
+    if argv and argv[0] == "merlin-scale":
+        return merlin_scale_main(argv[1:])
     return llm_serve_main(argv)
 
 
