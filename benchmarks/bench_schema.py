@@ -147,6 +147,47 @@ BROKER_SPEC: Dict[str, Any] = {
 }
 
 
+# all three serving scenarios must be present by name: dropping the
+# naive baseline (or the overload run) would leave the continuous-
+# batching acceptance ratio and the shed gate unmeasured
+_REQUIRED_SERVE_SCENARIOS = ("continuous", "naive", "overload_shed")
+
+
+def _serve_scenarios(d: Any) -> Optional[str]:
+    if not (isinstance(d, dict) and d):
+        return "expected a non-empty scenarios object"
+    errs: List[str] = []
+    for name in _REQUIRED_SERVE_SCENARIOS:
+        if name not in d:
+            errs.append(f"required scenario missing: {name}")
+            continue
+        sc = d[name]
+        if not isinstance(sc, dict):
+            errs.append(f"{name}: expected object")
+            continue
+        for key in ("requests_per_s", "p50_ms", "p99_ms", "issued",
+                    "completed", "shed", "expired", "other", "wall_s"):
+            if not _finite(sc.get(key)):
+                errs.append(f"{name}.{key}: expected finite number, "
+                            f"got {sc.get(key)!r}")
+        if not isinstance(sc.get("occupancy_hist"), dict):
+            errs.append(f"{name}.occupancy_hist: expected object")
+    return "; ".join(errs) if errs else None
+
+
+SERVE_SPEC: Dict[str, Any] = {
+    "meta": {"bench": str, "quick": bool, "unix_time": _NUM,
+             "clients": _NUM, "requests_per_client": _NUM,
+             "rows_per_request": _NUM, "env": dict},
+    "scenarios": _serve_scenarios,
+    "acceptance": {"continuous_vs_naive_rps": _NUM, "p99_ratio": _NUM,
+                   "continuous_p99_ms": _NUM, "naive_p99_ms": _NUM,
+                   "shed_rate": _NUM, "accounting_ok": bool,
+                   "pass_throughput": bool, "pass_shed": bool,
+                   "pass": bool},
+}
+
+
 def check_doc(doc: Any, spec: Dict[str, Any], name: str) -> List[str]:
     errors: List[str] = []
     _check_node(doc, spec, name, errors)
@@ -166,11 +207,13 @@ def check_file(path: str, spec: Dict[str, Any]) -> List[str]:
 
 
 def check_all(root: str = REPO_ROOT) -> List[str]:
-    """Validate both artifacts at the repo root; returns all errors."""
+    """Validate every artifact at the repo root; returns all errors."""
     return (check_file(os.path.join(root, "BENCH_ensemble.json"),
                        ENSEMBLE_SPEC)
             + check_file(os.path.join(root, "BENCH_broker.json"),
-                         BROKER_SPEC))
+                         BROKER_SPEC)
+            + check_file(os.path.join(root, "BENCH_serve.json"),
+                         SERVE_SPEC))
 
 
 if __name__ == "__main__":

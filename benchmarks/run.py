@@ -120,6 +120,23 @@ def main() -> None:
                      f"queues (bar <= "
                      f"{bt['acceptance']['elastic_moved_bar']:.2f}); "
                      f"loss={el['task_loss']}"))
+        # serving-gateway bench (small fleet): refreshes BENCH_serve.json
+        # so the perf trajectory covers the inference tier too
+        from benchmarks import serve_latency as SL
+        sl = SL.run(quick=True)
+        sa = sl["acceptance"]
+        cont = sl["scenarios"]["continuous"]
+        rows.append(("serve_continuous",
+                     1e6 / max(cont["requests_per_s"], 1e-9),
+                     f"{sa['continuous_vs_naive_rps']:.2f}x vs "
+                     f"flush-per-request (bar >= 2x); p99 "
+                     f"{sa['continuous_p99_ms']:.0f}ms vs "
+                     f"{sa['naive_p99_ms']:.0f}ms"))
+        over = sl["scenarios"]["overload_shed"]
+        rows.append(("serve_overload_shed",
+                     1e6 / max(over["requests_per_s"], 1e-9),
+                     f"shed_rate={sa['shed_rate']:.2f} (bar > 0); "
+                     f"accounting_ok={sa['accounting_ok']}"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -151,6 +151,104 @@ def train_surrogate(X: np.ndarray, y: np.ndarray, n_members: int = 3,
 
 
 # ---------------------------------------------------------------------------
+# serving snapshot
+# ---------------------------------------------------------------------------
+
+class SurrogateSnapshot:
+    """A resident, reloadable serving view of a study's surrogate ensemble.
+
+    The gateway tier (``repro.serve.gateway``) answers predict/calibrate/
+    what-if requests against this object: it holds the trained
+    :class:`Surrogate` in memory (stacked member pytree, jitted batched
+    apply) and tracks the study's bundle archive through
+    ``Bundler.load_since`` deltas — ``refresh()`` reads only bundles that
+    appeared since the last call, appends their rows, and retrains,
+    bumping ``version``.  Serving and refreshing are concurrent-safe: the
+    retrain happens under the snapshot lock and the new model swaps in
+    with a single attribute assignment, so in-flight ``predict`` calls
+    finish on the old ensemble and the next batch picks up the new one
+    (no request ever observes a half-trained model).
+
+    ``min_new_rows`` batches refresh work: deltas accumulate until at
+    least that many new rows arrived, then one retrain covers them all
+    (retrains are the expensive part; padded bucket sizes keep them on
+    cached compiles).
+    """
+
+    def __init__(self, root: str, objective_key: str = "yield",
+                 input_key: str = "inputs", n_members: int = 3,
+                 hidden: int = 64, steps: int = 300, lr: float = 3e-3,
+                 seed: int = 0, min_new_rows: int = 1):
+        self.bundler = Bundler(root)
+        self.objective_key = objective_key
+        self.input_key = input_key
+        self.n_members, self.hidden = int(n_members), int(hidden)
+        self.steps, self.lr, self.seed = int(steps), float(lr), int(seed)
+        self.min_new_rows = max(1, int(min_new_rows))
+        self._lock = threading.Lock()
+        self._cursor = None
+        self._X: Optional[np.ndarray] = None
+        self._y: Optional[np.ndarray] = None
+        self._pending_rows = 0
+        self._sur: Optional[Surrogate] = None
+        self.version = 0
+        self.refresh()
+        if self._sur is None:
+            raise ValueError(
+                f"no training rows under {root!r}: bundles must carry "
+                f"'{input_key}' and '{objective_key}' arrays")
+
+    @property
+    def rows(self) -> int:
+        X = self._X
+        return 0 if X is None else len(X)
+
+    @property
+    def dims(self) -> int:
+        X = self._X
+        return 0 if X is None else X.shape[1]
+
+    def refresh(self) -> bool:
+        """Pull new bundles since the last refresh and retrain if at least
+        ``min_new_rows`` accumulated; returns True when the served model
+        changed (``version`` bumped)."""
+        with self._lock:
+            data, self._cursor = self.bundler.load_since(self._cursor)
+            X_new = data.get(self.input_key)
+            y_new = data.get(self.objective_key)
+            if X_new is not None and y_new is not None and len(X_new):
+                X_new = np.asarray(X_new, np.float32)
+                y_new = np.asarray(y_new, np.float32).reshape(len(X_new))
+                if X_new.ndim == 1:
+                    X_new = X_new[:, None]
+                if self._X is None:
+                    self._X, self._y = X_new, y_new
+                else:
+                    self._X = np.concatenate([self._X, X_new])
+                    self._y = np.concatenate([self._y, y_new])
+                self._pending_rows += len(X_new)
+            if self._X is None or not len(self._X):
+                return False
+            if self._sur is not None and self._pending_rows < self.min_new_rows:
+                return False
+            self._sur = train_surrogate(
+                self._X, self._y, n_members=self.n_members,
+                hidden=self.hidden, steps=self.steps, lr=self.lr,
+                seed=self.seed)
+            self._pending_rows = 0
+            self.version += 1
+            return True
+
+    def predict(self, X) -> Tuple[np.ndarray, np.ndarray]:
+        """(mu, sd) over rows — lock-free: the model reference is read
+        once, so a concurrent refresh never tears a batch."""
+        sur = self._sur
+        if sur is None:
+            raise RuntimeError("snapshot has no trained model yet")
+        return sur.predict(X)
+
+
+# ---------------------------------------------------------------------------
 # acquisition
 # ---------------------------------------------------------------------------
 

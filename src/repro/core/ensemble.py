@@ -159,6 +159,7 @@ class EnsembleExecutor:
         self.share_cache = share_cache
         self._private_jit: Dict[Tuple, Callable] = {}
         self.stats = {"bundles": 0, "samples": 0, "sim_time": 0.0,
+                      "write_s": 0.0,
                       "compiles": 0, "launches": 0, "padded_samples": 0,
                       "mesh_launches": 0,
                       "devices": 1 if self.mesh is None
@@ -214,13 +215,19 @@ class EnsembleExecutor:
 
     def run_bundle(self, lo: int, hi: int, samples: np.ndarray,
                    sub_ranges: Optional[Sequence[Tuple[int, int]]] = None,
-                   block: bool = True) -> Dict[str, np.ndarray]:
+                   block: bool = True, defer_write: bool = False):
         """Simulate samples [lo, hi) as one fused device launch.
 
         ``sub_ranges``: optional absolute [slo, shi) spans partitioning
         [lo, hi); one bundle file is written per span (coalesced execution
         keeps the per-task on-disk layout).  ``block=False`` skips the final
         host sync and returns device arrays (only valid without a bundler).
+
+        ``defer_write=True`` (bundler only) dispatches the compute and
+        returns a zero-arg closure that performs the host sync + bundle
+        writes when called — the engine's writer thread runs it so the
+        write of this bundle overlaps the dispatch of the next one
+        (``stats["write_s"]`` accumulates on the closure's thread).
         """
         t0 = time.monotonic()
         n = hi - lo
@@ -242,23 +249,41 @@ class EnsembleExecutor:
         if self._mesh_divides(padded):
             self.stats["mesh_launches"] += 1
         if self.bundler is not None:
-            jax.block_until_ready(out)  # sync exactly once, at write time
-            out = jax.tree.map(np.asarray, out)
-            for slo, shi in sub_ranges or ((lo, hi),):
-                sl = slice(slo - lo, shi - lo)
-                self.bundler.write_bundle(
-                    slo, shi, {k: v[sl] for k, v in out.items()})
+            spans = tuple(sub_ranges or ((lo, hi),))
+
+            def finish_write(dev_out=out):
+                tw = time.monotonic()
+                jax.block_until_ready(dev_out)  # sync once, at write time
+                host = jax.tree.map(np.asarray, dev_out)
+                for slo, shi in spans:
+                    sl = slice(slo - lo, shi - lo)
+                    self.bundler.write_bundle(
+                        slo, shi, {k: v[sl] for k, v in host.items()})
+                self.stats["write_s"] += time.monotonic() - tw
+                return host
+            if defer_write:
+                self.stats["sim_time"] += time.monotonic() - t0
+                return finish_write
+            out = finish_write()
         elif block:
             out = jax.tree.map(np.asarray, out)
         self.stats["sim_time"] += time.monotonic() - t0
         return out
 
     def step_fn(self) -> Callable:
-        """A Merlin fn-step: simulate ctx's sample block and bundle results."""
+        """A Merlin fn-step: simulate ctx's sample block and bundle results.
+
+        Under deferred execution (the engine's write pipeline) the bundle
+        write is parked on ``ctx.defer`` so it runs on the writer thread,
+        after this batch's compute but overlapping the next dispatch."""
         def step(ctx):
             block = ctx.sample_block
             if block is None:
                 raise ValueError("ensemble step requires study samples")
-            self.run_bundle(ctx.lo, ctx.hi, block,
-                            sub_ranges=getattr(ctx, "sub_ranges", None))
+            pending = self.run_bundle(
+                ctx.lo, ctx.hi, block,
+                sub_ranges=getattr(ctx, "sub_ranges", None),
+                defer_write=getattr(ctx, "deferrable", False))
+            if callable(pending):
+                ctx.defer(pending)
         return step

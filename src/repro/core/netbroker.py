@@ -63,6 +63,9 @@ BrokerServer as a standalone process (see examples/quickstart.py
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import hmac as _hmac
+import os
 import socket
 import struct
 import threading
@@ -77,6 +80,21 @@ from repro.core.resilience import BackoffPolicy, CircuitBreaker
 from repro.core.wirecodec import (CodecError, DEFAULT_PREFERENCE, JSON_CODEC,
                                   get_codec, negotiate_codec)
 
+
+class AuthError(BrokerError):
+    """The hello handshake's HMAC was missing or invalid (shared-secret
+    auth, ``REPRO_AUTH_TOKEN``) — or an op arrived before authenticating
+    on a server that requires it."""
+
+
+def hello_mac(token: str, codecs: Sequence[str]) -> str:
+    """HMAC-SHA256 over the hello's codec offer, keyed by the shared
+    secret.  Binding the offer (not just a constant) means a recorded
+    hello cannot be replayed with a different negotiation."""
+    msg = ("merlin-hello:" + ",".join(codecs)).encode()
+    return _hmac.new(token.encode(), msg, hashlib.sha256).hexdigest()
+
+
 # structured server errors carry the exception class name; the client maps
 # it back to the right BrokerError subclass so e.g. backpressure
 # (BrokerFull) is catchable as BrokerFull on the producer's side of the
@@ -84,7 +102,8 @@ from repro.core.wirecodec import (CodecError, DEFAULT_PREFERENCE, JSON_CODEC,
 # quarantined frame surfaces typed on the sender's side too.
 _ERROR_TYPES = {"BrokerFull": BrokerFull,
                 "StaleEpochError": StaleEpochError,
-                "CodecError": CodecError}
+                "CodecError": CodecError,
+                "AuthError": AuthError}
 
 # one frame = one request or response; big enough for a 32-task lease batch
 # of fat payloads, small enough to reject garbage (e.g. an HTTP client)
@@ -176,8 +195,10 @@ class BrokerServer:
 
     def __init__(self, backend: Broker, host: str = "127.0.0.1",
                  port: int = 0, codecs: Sequence[str] = DEFAULT_PREFERENCE,
-                 shm_path: Optional[str] = None):
+                 shm_path: Optional[str] = None,
+                 auth_token: Optional[str] = None):
         self.backend = backend
+        self.auth_token = auth_token
         self.codecs = tuple(codecs)
         for name in self.codecs:
             get_codec(name)  # fail fast on a typo'd codec name
@@ -200,7 +221,7 @@ class BrokerServer:
         self._conns: set = set()
         self._conns_lock = threading.Lock()
         self.stats = {"connections": 0, "requests": 0, "errors": 0,
-                      "codec_errors": 0,
+                      "codec_errors": 0, "auth_failures": 0,
                       "codecs": {name: 0 for name in self.codecs}}
 
     @property
@@ -299,6 +320,7 @@ class BrokerServer:
     def _serve_conn(self, conn: socket.socket) -> None:
         codec = JSON_CODEC  # every connection starts on the floor
         counted = False  # stats["codecs"]: one bump per connection
+        authed = self.auth_token is None  # no token -> open server
         try:
             while not self._stopping.is_set():
                 try:
@@ -323,6 +345,27 @@ class BrokerServer:
                         return
                     continue
                 if req.get("op") == "hello":
+                    if self.auth_token is not None:
+                        # the MAC covers the client's codec OFFER as sent,
+                        # so verify against that exact list
+                        offer = [str(c) for c in (req.get("codecs") or ())]
+                        mac = hello_mac(self.auth_token, offer)
+                        got = req.get("auth")
+                        if not (isinstance(got, str)
+                                and _hmac.compare_digest(got, mac)):
+                            self.stats["auth_failures"] += 1
+                            try:
+                                _send_frame(
+                                    conn,
+                                    {"ok": False,
+                                     "error_type": "AuthError",
+                                     "error": "AuthError: hello HMAC "
+                                              "missing or invalid"},
+                                    codec)
+                            except OSError:
+                                return
+                            continue
+                        authed = True
                     chosen = negotiate_codec(self.codecs,
                                              req.get("codecs") or ())
                     try:
@@ -335,6 +378,21 @@ class BrokerServer:
                     counts = self.stats["codecs"]
                     counts[chosen] = counts.get(chosen, 0) + 1
                     counted = True
+                    continue
+                if not authed:
+                    # ops before a valid authenticated hello are refused
+                    # (typed, connection kept) — the client re-hellos with
+                    # the right MAC or gives up with AuthError
+                    self.stats["auth_failures"] += 1
+                    try:
+                        _send_frame(
+                            conn,
+                            {"ok": False, "error_type": "AuthError",
+                             "error": "AuthError: server requires "
+                                      "REPRO_AUTH_TOKEN hello auth"},
+                            codec)
+                    except OSError:
+                        return
                     continue
                 if not counted:
                     # a pre-negotiation client never sends hello: count its
@@ -474,8 +532,11 @@ class NetBroker:
                  reconnect_timeout: float = 10.0,
                  request_grace: float = 10.0, block_chunk: float = 5.0,
                  breaker: Optional[CircuitBreaker] = None,
-                 codec: str = "auto"):
+                 codec: str = "auto",
+                 auth_token: Optional[str] = None):
         self.host, self.port = parse_address(address)
+        self.auth_token = (auth_token if auth_token is not None
+                           else os.environ.get("REPRO_AUTH_TOKEN"))
         if codec == "auto":
             self._codec_pref: Tuple[str, ...] = DEFAULT_PREFERENCE
         elif codec == "json":
@@ -519,14 +580,19 @@ class NetBroker:
                                         timeout=self.connect_timeout)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self._tls.codec = JSON_CODEC
-        if self._codec_pref:
+        # an auth token forces a hello even on the legacy-JSON wire: the
+        # handshake is the only place the shared-secret MAC can travel
+        if self._codec_pref or self.auth_token is not None:
             # hello travels in JSON (the floor).  An old server answers
             # with its unknown-op error — that's a valid "json" outcome,
             # not a failure; only transport errors propagate (and the
             # _call retry loop treats them like any connect failure).
             try:
-                _send_frame(sock, {"op": "hello",
-                                   "codecs": list(self._codec_pref)})
+                hello = {"op": "hello", "codecs": list(self._codec_pref)}
+                if self.auth_token is not None:
+                    hello["auth"] = hello_mac(self.auth_token,
+                                              hello["codecs"])
+                _send_frame(sock, hello)
                 resp = _recv_frame(sock)
                 chosen = resp.get("codec", "json") if resp.get("ok") \
                     else "json"

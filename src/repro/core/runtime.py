@@ -154,7 +154,8 @@ class Context:
     def __init__(self, runtime: "MerlinRuntime", study: str, combo: Dict,
                  samples: Optional[np.ndarray], lo: int, hi: int,
                  workspace: str, variables: Dict,
-                 sub_ranges: Optional[Sequence[tuple]] = None):
+                 sub_ranges: Optional[Sequence[tuple]] = None,
+                 deferred: bool = False):
         self.runtime = runtime
         self.study = study
         self.combo = combo
@@ -163,10 +164,35 @@ class Context:
         self.workspace = workspace
         self.variables = variables
         self.sub_ranges = list(sub_ranges) if sub_ranges else [(lo, hi)]
+        self._deferred: Optional[list] = [] if deferred else None
 
     @property
     def sample_block(self) -> Optional[np.ndarray]:
         return None if self.samples is None else self.samples[self.lo:self.hi]
+
+    @property
+    def deferrable(self) -> bool:
+        """True under deferred execution: completion work registered with
+        ``defer`` runs on the engine's writer thread, overlapping the next
+        batch's dispatch, instead of blocking the step."""
+        return self._deferred is not None
+
+    def defer(self, fn: Callable[[], None]) -> None:
+        """Register completion work (host sync + artifact writes).  Under
+        deferred execution it runs later, before this context's tasks get
+        their once-markers; otherwise it runs immediately — steps may call
+        this unconditionally."""
+        if self._deferred is None:
+            fn()
+        else:
+            self._deferred.append(fn)
+
+    def run_deferred(self) -> None:
+        """Run (and clear) the registered completion work, in order."""
+        if self._deferred:
+            fns, self._deferred = self._deferred, []
+            for fn in fns:
+                fn()
 
     def publish_samples(self, name: str, arr) -> None:
         """Publish ``arr`` as sample set ``name`` scoped to this combo, for
@@ -630,6 +656,24 @@ class MerlinRuntime:
             return False
         return self._node_fusable(node)
 
+    def affinity_key(self, task: Task):
+        """The engine's coalescing-bucket key: ``(study, simulator)``.
+
+        Tasks only micro-batch with key-mates, so one fused dispatch never
+        interleaves two studies' (or two simulators') bundles — a mixed
+        buffer would shred ``execute_real_many``'s contiguity grouping
+        into per-study fragments of a half-empty batch.  The simulator
+        identity is the node's step fn/cmd tuple; tasks for studies this
+        runtime does not know share the ``None`` bucket (they are not
+        coalescable anyway)."""
+        try:
+            p = task.payload
+            study = p["study"]
+            node = self._dags[study].nodes[p["stage"]]
+        except (KeyError, IndexError, TypeError):
+            return None
+        return (study, tuple(s.fn or s.cmd for s in node.steps))
+
     @staticmethod
     def _done_key(task: Task) -> str:
         p = task.payload
@@ -680,6 +724,23 @@ class MerlinRuntime:
         ``execute_real`` so one poison task cannot take down its
         batch-mates' progress or retry accounting.
         """
+        self._execute_many(tasks, deferred=False)
+
+    def execute_real_many_deferred(
+            self, tasks: Sequence[Task]) -> Callable[[], None]:
+        """Pipelined variant of :meth:`execute_real_many` for the engine's
+        writer thread: device compute for every fused run is dispatched
+        *now* (asynchronously), while the host-side completion — the
+        ``block_until_ready`` sync, bundle writes, and once-markers — is
+        packaged into the returned ``finalize()`` callable.  The engine
+        runs finalize on its single writer thread, so the dispatch of
+        batch N+1 overlaps the write of batch N.  Exceptions inside
+        finalize propagate; the engine then re-runs the batch per-task
+        (completed runs no-op on their once-markers)."""
+        return self._execute_many(tasks, deferred=True)
+
+    def _execute_many(self, tasks: Sequence[Task],
+                      deferred: bool) -> Optional[Callable[[], None]]:
         groups: Dict[tuple, List[Task]] = {}
         singles: List[Task] = []
         for t in tasks:
@@ -694,6 +755,24 @@ class MerlinRuntime:
                 singles.append(t)
         for t in singles:
             self.execute_real(t)
+        if deferred:
+            fins = []
+            for run in self._contiguous_runs(groups):
+                try:
+                    fins.append(self._execute_coalesced(run, deferred=True))
+                except Exception:
+                    # poison run: its compute failure must not discard the
+                    # sibling runs already dispatched (their once-markers
+                    # live in finalize) — package this run's per-task
+                    # retry into the finalize stage instead, mirroring the
+                    # sync path's per-run isolation
+                    fins.append(lambda run=run: [self.execute_real(t)
+                                                 for t in run])
+
+            def finalize() -> None:
+                for fin in fins:
+                    fin()
+            return finalize
         for run in self._contiguous_runs(groups):
             if len(run) == 1:
                 self.execute_real(run[0])
@@ -703,6 +782,7 @@ class MerlinRuntime:
             except Exception:
                 for t in run:  # isolate the failure: per-task retry semantics
                     self.execute_real(t)
+        return None
 
     @staticmethod
     def _contiguous_runs(groups: Dict[tuple, List[Task]]) -> List[List[Task]]:
@@ -719,8 +799,16 @@ class MerlinRuntime:
             runs.append(cur)
         return runs
 
-    def _execute_coalesced(self, run: List[Task]) -> None:
-        """One fused execution covering a contiguous run of leaf tasks."""
+    def _execute_coalesced(self, run: List[Task],
+                           deferred: bool = False
+                           ) -> Optional[Callable[[], None]]:
+        """One fused execution covering a contiguous run of leaf tasks.
+
+        With ``deferred=True`` the steps run now (device compute
+        dispatches asynchronously; steps park their host sync + artifact
+        writes on ``ctx.defer``) and the returned closure performs the
+        deferred completion work *then* sets the once-markers — durable
+        write strictly before the marker that suppresses re-execution."""
         p = run[0].payload
         study, nidx, iidx = p["study"], p["stage"], p["combo"]
         lo = p["samples"][0]
@@ -734,13 +822,21 @@ class MerlinRuntime:
         os.makedirs(wdir, exist_ok=True)
         ctx = Context(self, study, inst, samples, lo, hi, wdir,
                       spec.variables,
-                      sub_ranges=[tuple(t.payload["samples"]) for t in run])
+                      sub_ranges=[tuple(t.payload["samples"]) for t in run],
+                      deferred=deferred)
         handler = self._handler_for(node)
         for step in node.steps:
             handler.execute(self, step, ctx)
-        for t in run:  # per-sub-bundle markers + node accounting, as before
-            if self.counters.once(self._done_key(t)):
-                self._bundle_done(t)
+
+        def finalize() -> None:
+            ctx.run_deferred()
+            for t in run:  # per-sub-bundle markers + node accounting
+                if self.counters.once(self._done_key(t)):
+                    self._bundle_done(t)
+        if deferred:
+            return finalize
+        finalize()
+        return None
 
     # -- completion ----------------------------------------------------------
     def study_done(self, study: str) -> bool:

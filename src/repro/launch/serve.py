@@ -34,6 +34,19 @@ with ``make_broker("shm://PATH")``).  The process applies ``repro.env``
 runtime tuning at entry (REPRO_* env knobs) so serving throughput is
 produced on recorded defaults.
 
+Surrogate serving (``merlin-serve``: the inference gateway over a
+study's trained surrogate ensemble — continuous batching, per-request
+deadlines, 429 load shedding, graceful drain on SIGINT; see the README
+"Serving tier" section):
+
+  PYTHONPATH=src python -m repro.launch.serve merlin-serve \
+      --study DIR [--host H] [--port P] [--port-file PATH] \
+      [--max-inflight N] [--max-batch-rows N] [--deadline-ms MS] \
+      [--members N] [--hidden N] [--steps N] [--refresh-s S] [--naive]
+
+Set ``REPRO_AUTH_TOKEN`` to require ``Authorization: Bearer <token>``
+on every request (the same shared secret arms the broker hello HMAC).
+
 Broker status (the ops view of any broker URL — per-queue depth, in-flight
 leases, and live consumers from the heartbeat registry).  With ``--watch``
 it keeps history between polls and derives per-queue throughput (acked
@@ -195,15 +208,18 @@ def broker_serve_main(argv=None):
         backend = FileBroker(args.root, **kw)
     else:
         backend = InMemoryBroker(**kw)
+    auth_token = os.environ.get("REPRO_AUTH_TOKEN")
     try:
         server = BrokerServer(backend, host=args.host, port=args.port,
-                              codecs=codecs, shm_path=args.shm)
+                              codecs=codecs, shm_path=args.shm,
+                              auth_token=auth_token)
     except ValueError as e:
         ap.error(str(e))  # e.g. a typo'd codec name
     server.start()
     print(json.dumps({"event": "listening", "host": args.host,
                       "port": server.port, "backend": args.backend,
                       "codecs": list(codecs), "shm": args.shm,
+                      "auth": auth_token is not None,
                       "shard_of": None if shard_of is None
                       else f"{shard_of[0]}/{shard_of[1]}",
                       "max_queue_depth": args.max_queue_depth}),
@@ -746,8 +762,91 @@ def merlin_validate_main(argv=None):
     return 1 if failures else 0
 
 
+def merlin_serve_main(argv=None):
+    """``merlin-serve``: HTTP gateway over a study's surrogate ensemble.
+
+    Trains a resident snapshot from the study archive's bundled rows,
+    then serves predict/calibrate/what-if with continuous batching
+    (see repro/serve/gateway.py).  SIGINT/SIGTERM triggers a graceful
+    drain: new requests get 503, admitted requests complete.
+    """
+    ap = argparse.ArgumentParser(prog="merlin-serve")
+    ap.add_argument("--study", required=True, metavar="DIR",
+                    help="study archive root (the Bundler directory "
+                         "holding the training bundles)")
+    ap.add_argument("--objective-key", default="yield")
+    ap.add_argument("--input-key", default="inputs")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 picks a free port (published via --port-file)")
+    ap.add_argument("--port-file", default=None,
+                    help="atomically publish the bound port to this path")
+    ap.add_argument("--max-inflight", type=int, default=64,
+                    help="admission queue bound; requests beyond it are "
+                         "shed with 429 before admission")
+    ap.add_argument("--max-batch-rows", type=int, default=256)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="default per-request deadline (504 when it "
+                         "passes while queued); requests can override")
+    ap.add_argument("--members", type=int, default=3)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--refresh-s", type=float, default=None,
+                    help="poll the archive for new rows every S seconds "
+                         "and fold them into the snapshot")
+    ap.add_argument("--naive", action="store_true",
+                    help="flush-per-request baseline mode (benchmark A/B)")
+    args = ap.parse_args(argv)
+
+    from repro import env as repro_env
+    repro_env.configure()
+
+    import signal
+    import threading
+    from repro.core.active import SurrogateSnapshot
+    from repro.serve.gateway import SurrogateGateway
+
+    try:
+        snap = SurrogateSnapshot(args.study,
+                                 objective_key=args.objective_key,
+                                 input_key=args.input_key,
+                                 n_members=args.members,
+                                 hidden=args.hidden, steps=args.steps)
+    except ValueError as e:
+        ap.error(str(e))  # e.g. archive has no training rows yet
+    gw = SurrogateGateway(snap, host=args.host, port=args.port,
+                          max_inflight=args.max_inflight,
+                          max_batch_rows=args.max_batch_rows,
+                          default_deadline_ms=args.deadline_ms,
+                          refresh_s=args.refresh_s,
+                          naive=args.naive).start()
+    print(json.dumps({"event": "listening", "host": args.host,
+                      "port": gw.port, "study": args.study,
+                      "rows": snap.rows, "version": snap.version,
+                      "mode": "naive" if args.naive else "continuous",
+                      "auth": gw.auth_token is not None}), flush=True)
+    if args.port_file:
+        tmp = args.port_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(str(gw.port))
+        os.rename(tmp, args.port_file)
+
+    stop = threading.Event()
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        signal.signal(sig, lambda *_: stop.set())
+    try:
+        stop.wait()
+    finally:
+        drained = gw.stop(drain=True)
+        print(json.dumps({"event": "drained", "clean": bool(drained),
+                          "stats": gw.stats()}), flush=True)
+    return 0
+
+
 def main(argv=None):
     argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "merlin-serve":
+        return merlin_serve_main(argv[1:])
     if argv and argv[0] == "broker-serve":
         return broker_serve_main(argv[1:])
     if argv and argv[0] == "merlin-status":

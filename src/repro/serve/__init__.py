@@ -1,1 +1,2 @@
 from repro.serve.engine import ServeEngine, make_prefill_fn, make_decode_fn  # noqa
+from repro.serve.gateway import SurrogateGateway  # noqa

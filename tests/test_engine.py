@@ -6,6 +6,7 @@ import json
 import os
 import subprocess
 import sys
+import threading
 import time
 
 import numpy as np
@@ -13,9 +14,10 @@ import pytest
 
 from repro.core import ensemble as E
 from repro.core.bundler import Bundler
-from repro.core.engine import EngineClosed, ExecutionEngine
+from repro.core.engine import (ContinuousBatcher, DeadlineExpired,
+                               EngineClosed, ExecutionEngine)
 from repro.core.hierarchy import HierarchyCfg
-from repro.core.queue import PRIORITY_REAL, new_task
+from repro.core.queue import PRIORITY_REAL, BrokerFull, new_task
 from repro.core.resilience import RetryPolicy
 from repro.core.runtime import MerlinRuntime
 from repro.core.spec import Step, StudySpec
@@ -391,3 +393,308 @@ def test_single_device_auto_mesh_is_none():
     out = ex.run_bundle(0, 3, np.zeros((3, 2), np.float32))
     assert out["v"].shape == (3, 2)
     assert ex.stats["mesh_launches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# affinity-keyed batching (per-study engine affinity)
+# ---------------------------------------------------------------------------
+
+class _AffinityStub:
+    """Records which affinity keys each fused launch mixed."""
+
+    def __init__(self):
+        self.batches = []
+
+    def affinity_key(self, task):
+        return task.payload["study"]
+
+    def execute_real_many(self, tasks):
+        self.batches.append([t.payload["study"] for t in tasks])
+
+    def execute_real(self, task):
+        self.batches.append([task.payload["study"]])
+
+
+def test_affinity_key_keeps_interleaved_studies_apart():
+    """Two studies submitting interleaved through one shared engine: no
+    fused launch may mix studies (each study's ensemble executor has its
+    own jit cache and bundle archive), and the short dispatch is counted
+    as an affinity split."""
+    rt = _AffinityStub()
+    eng = ExecutionEngine(rt, max_batch=8, max_wait_ms=60.0,
+                          adaptive=False)
+    try:
+        tasks = [new_task("real", {"study": "a" if i % 2 == 0 else "b",
+                                   "i": i}) for i in range(8)]
+        pendings = eng.submit_many(tasks)
+        assert all(p.wait(10.0) for p in pendings)
+        s = eng.stats()
+    finally:
+        eng.close()
+    assert len(rt.batches) >= 2  # one fused launch would have mixed keys
+    for batch in rt.batches:
+        assert len(set(batch)) == 1, f"launch mixed studies: {batch}"
+    assert sorted(k for b in rt.batches for k in b) == ["a"] * 4 + ["b"] * 4
+    # the front group dispatched short (4 < max_batch) with "b" waiting
+    assert s["affinity_splits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# deferred host writes (single writer thread overlapping dispatch)
+# ---------------------------------------------------------------------------
+
+class _DeferStub:
+    """Runtime exposing the deferred-write pipeline with visible phases."""
+
+    def __init__(self, compute_s=0.0, write_s=0.0):
+        self.compute_s = compute_s
+        self.write_s = write_s
+        self.events = []
+
+    def execute_real_many_deferred(self, tasks):
+        time.sleep(self.compute_s)
+        self.events.append(("compute", len(tasks)))
+
+        def finalize():
+            time.sleep(self.write_s)
+            self.events.append(("finalize", len(tasks)))
+        return finalize
+
+    def execute_real_many(self, tasks):
+        pass
+
+    def execute_real(self, task):
+        pass
+
+
+def test_deferred_pipeline_resolves_only_after_finalize():
+    """Ack-after-durable: a handle may not resolve until the writer ran
+    the batch's finalize (host sync + bundle write + once-markers)."""
+    rt = _DeferStub(write_s=0.05)
+    eng = ExecutionEngine(rt, max_batch=4, max_wait_ms=20.0)
+    try:
+        pendings = eng.submit_many([new_task("real", {"i": i})
+                                    for i in range(4)])
+        assert all(p.wait(10.0) for p in pendings)
+        # resolution implies the writer already finalized this batch
+        assert ("finalize", 4) in rt.events
+        s = eng.stats()
+        assert s["deferred_batches"] == 1
+        assert s["write_s"] > 0.0
+        assert "write_overlap_s" in s
+    finally:
+        eng.close()
+
+
+def test_deferred_writes_overlap_next_dispatch():
+    """Back-to-back batches: batch N's finalize runs on the writer thread
+    while the dispatcher is already computing batch N+1, and the overlap
+    shows up in stats["write_overlap_s"]."""
+    rt = _DeferStub(compute_s=0.05, write_s=0.05)
+    eng = ExecutionEngine(rt, max_batch=1, max_wait_ms=5.0)
+    try:
+        pendings = eng.submit_many([new_task("real", {"i": i})
+                                    for i in range(3)])
+        assert all(p.wait(20.0) for p in pendings)
+        s = eng.stats()
+        assert s["deferred_batches"] == 3
+        assert s["write_overlap_s"] > 0.0, \
+            "finalize never overlapped a dispatch"
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# serving: ContinuousBatcher (admission, deadlines, shed, drain)
+# ---------------------------------------------------------------------------
+
+class _Gate:
+    """infer_fn whose FIRST call blocks on an event — lets a test park
+    the batcher loop mid-launch while follow-up requests queue up."""
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.calls = []  # first-column values of each launch, in order
+
+    def __call__(self, X):
+        first = not self.calls
+        self.calls.append(np.array(X[:, 0]))
+        if first:
+            assert self.event.wait(10.0)
+        return X * 2.0
+
+    def wait_entered(self):
+        for _ in range(1000):
+            if self.calls:
+                return
+            time.sleep(0.005)
+        raise AssertionError("batcher loop never entered infer_fn")
+
+
+def test_batcher_fuses_requests_queued_behind_a_launch():
+    """Requests arriving while a batch executes are admitted together
+    into the next launch, and each caller gets exactly its own slice."""
+    gate = _Gate()
+    b = ContinuousBatcher(gate, max_batch_rows=64, max_inflight=32)
+    try:
+        hold = b.submit(np.zeros((2, 3), np.float32))
+        gate.wait_entered()
+        reqs = [b.submit(np.full((2, 3), float(i), np.float32))
+                for i in range(4)]
+        gate.event.set()
+        assert hold.wait(10.0) and all(r.wait(10.0) for r in reqs)
+        assert np.allclose(hold.result, 0.0)
+        for i, r in enumerate(reqs):  # per-request slices, not batch-mates'
+            assert r.result.shape == (2, 3)
+            assert np.allclose(r.result, 2.0 * i)
+        s = b.stats()
+        assert s["batches"] == 2  # 1 held launch + 1 fused launch of 4
+        assert s["batch_requests_hist"].get(4) == 1
+        assert s["completed"] == 5 and s["failed"] == 0
+    finally:
+        b.close()
+
+
+def test_batcher_naive_mode_is_flush_per_request():
+    """The A/B baseline: naive mode launches exactly one request per
+    batch even when the queue is deep."""
+    calls = []
+
+    def infer(X):
+        calls.append(len(X))
+        time.sleep(0.02)  # slow enough that peers pile up behind it
+        return X
+
+    b = ContinuousBatcher(infer, naive=True, max_inflight=32)
+    try:
+        reqs = [b.submit(np.ones((2, 2), np.float32)) for _ in range(5)]
+        assert all(r.wait(10.0) for r in reqs)
+        s = b.stats()
+        assert s["batches"] == 5
+        assert set(s["batch_requests_hist"]) == {1}
+    finally:
+        b.close()
+
+
+def test_batcher_admission_is_deadline_ordered():
+    """Under backlog the deadline-carrying request is admitted ahead of
+    an earlier-submitted request with no deadline."""
+    gate = _Gate()
+    b = ContinuousBatcher(gate, max_inflight=16)
+    try:
+        hold = b.submit(np.zeros((1, 2), np.float32))
+        gate.wait_entered()
+        slack = b.submit(np.full((1, 2), 1.0, np.float32))  # no deadline
+        urgent = b.submit(np.full((1, 2), 2.0, np.float32),
+                          deadline_s=30.0)
+        gate.event.set()
+        assert all(r.wait(10.0) for r in (hold, slack, urgent))
+    finally:
+        b.close()
+    fused = np.concatenate(gate.calls[1:])
+    assert fused[0] == 2.0, f"deadline request not first: {fused}"
+
+
+def test_batcher_bucket_boundary_topup():
+    """Admission grows the batch to max_batch_rows, then keeps topping up
+    only while rows still fit the power-of-two bucket the batch already
+    pays padding for: queued 5+3+2 rows at max_batch_rows=8 must launch
+    as [8, 2], never [10]."""
+    gate = _Gate()
+    b = ContinuousBatcher(gate, max_batch_rows=8, max_inflight=16)
+    try:
+        hold = b.submit(np.zeros((1, 2), np.float32))
+        gate.wait_entered()
+        reqs = [b.submit(np.ones((n, 2), np.float32)) for n in (5, 3, 2)]
+        gate.event.set()
+        assert hold.wait(10.0) and all(r.wait(10.0) for r in reqs)
+    finally:
+        b.close()
+    assert [len(c) for c in gate.calls] == [1, 8, 2]
+
+
+def test_batcher_deadline_expires_without_executing():
+    """A request whose deadline passes while queued resolves with
+    DeadlineExpired and its rows never reach infer_fn (504 semantics)."""
+    gate = _Gate()
+    b = ContinuousBatcher(gate, max_inflight=16)
+    try:
+        hold = b.submit(np.zeros((1, 2), np.float32))
+        gate.wait_entered()
+        doomed = b.submit(np.full((1, 2), 7.0, np.float32),
+                          deadline_s=0.05)
+        time.sleep(0.15)  # deadline passes while the loop is parked
+        gate.event.set()
+        assert hold.wait(10.0) and doomed.wait(10.0)
+        assert isinstance(doomed.error, DeadlineExpired)
+        assert doomed.result is None
+        s = b.stats()
+        assert s["expired"] == 1
+        # accounting identity: every admitted request is accounted for
+        assert s["completed"] + s["failed"] + s["expired"] == s["submitted"]
+    finally:
+        b.close()
+    assert all(7.0 not in c for c in gate.calls), "expired request executed"
+
+
+def test_batcher_sheds_with_brokerfull_before_admission():
+    """At max_inflight queued requests, submit raises BrokerFull (429
+    semantics) without admitting — and the queued requests still finish."""
+    gate = _Gate()
+    b = ContinuousBatcher(gate, max_inflight=2)
+    try:
+        hold = b.submit(np.zeros((1, 2), np.float32))
+        gate.wait_entered()  # hold left the heap; queue is empty again
+        queued = [b.submit(np.ones((1, 2), np.float32)) for _ in range(2)]
+        with pytest.raises(BrokerFull):
+            b.submit(np.ones((1, 2), np.float32))
+        assert b.stats()["shed"] == 1
+        gate.event.set()
+        assert hold.wait(10.0) and all(r.wait(10.0) for r in queued)
+        assert all(r.error is None for r in queued)  # shed cost no one else
+    finally:
+        b.close()
+
+
+def test_batcher_drain_completes_admitted_then_refuses():
+    """drain(): already-admitted requests run to completion while new
+    submissions are refused with EngineClosed (the gateway's 503)."""
+    gate = _Gate()
+    b = ContinuousBatcher(gate, max_inflight=16)
+    hold = b.submit(np.zeros((1, 2), np.float32))
+    gate.wait_entered()
+    queued = [b.submit(np.ones((1, 2), np.float32)) for _ in range(3)]
+    drained = []
+    t = threading.Thread(target=lambda: drained.append(b.drain(10.0)))
+    t.start()
+    for _ in range(1000):  # wait for drain() to flip the admission gate
+        try:
+            b.submit(np.ones((1, 2), np.float32))
+        except EngineClosed:
+            break
+        time.sleep(0.005)
+    else:
+        raise AssertionError("drain never started refusing admissions")
+    gate.event.set()
+    t.join(timeout=15.0)
+    assert drained == [True]
+    assert hold.wait(1.0) and all(r.wait(1.0) for r in queued)
+    assert all(r.error is None for r in queued)
+    b.close()
+
+
+def test_batcher_close_resolves_backlog_with_engineclosed():
+    """close() without drain must never strand a waiter: anything still
+    queued resolves with EngineClosed."""
+    gate = _Gate()
+    b = ContinuousBatcher(gate, max_inflight=16)
+    hold = b.submit(np.zeros((1, 2), np.float32))
+    gate.wait_entered()
+    queued = b.submit(np.ones((1, 2), np.float32))
+    gate.event.set()
+    b.close()
+    assert hold.wait(10.0) and queued.wait(10.0)
+    # the held request was mid-execution (completes); anything the loop
+    # did not reach before close resolves, with a typed error if dropped
+    assert queued.done()
+    assert queued.error is None or isinstance(queued.error, EngineClosed)

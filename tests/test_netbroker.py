@@ -13,8 +13,8 @@ import pytest
 
 from repro.core import Bundler, MerlinRuntime, Step, StudySpec, WorkerPool
 from repro.core.hierarchy import HierarchyCfg
-from repro.core.netbroker import (BrokerServer, NetBroker, make_broker,
-                                  parse_address)
+from repro.core.netbroker import (AuthError, BrokerServer, NetBroker,
+                                  hello_mac, make_broker, parse_address)
 from repro.core.queue import (Broker, BrokerError, BrokerUnavailable,
                               FileBroker, InMemoryBroker, new_task)
 from repro.core.resilience import SpeculativeReissuer
@@ -315,3 +315,76 @@ def test_merlin_status_cli_renders_table(served_mem, capsys):
     merlin_status_main(["--broker", server.address, "--json"])
     doc = json.loads(capsys.readouterr().out)
     assert doc["queues"]["sims"]["depth"] == 1
+
+
+# ---------------------------------------------------------------------------
+# shared-secret hello auth (REPRO_AUTH_TOKEN HMAC)
+# ---------------------------------------------------------------------------
+
+def test_hello_mac_binds_token_and_codec_offer():
+    """The MAC covers the codec offer, so a captured hello cannot be
+    replayed with a different negotiation."""
+    mac = hello_mac("tok", ["bin1"])
+    assert mac == hello_mac("tok", ["bin1"])  # deterministic
+    assert mac != hello_mac("tok", ["json"])
+    assert mac != hello_mac("other", ["bin1"])
+
+
+@pytest.mark.net
+def test_authed_hello_end_to_end():
+    server = BrokerServer(InMemoryBroker(), auth_token="sekrit").start()
+    nb = NetBroker(server.address, auth_token="sekrit")
+    try:
+        nb.put(new_task("real", {"x": 1}))
+        lease = nb.get(timeout=2)
+        assert lease is not None and lease.task.payload == {"x": 1}
+        nb.ack(lease.tag)
+        assert nb.idle()
+        assert server.stats["auth_failures"] == 0
+    finally:
+        nb.close()
+        server.stop()
+
+
+@pytest.mark.net
+def test_missing_or_wrong_token_is_refused_typed():
+    """Unauthenticated ops come back as a typed AuthError (connection
+    kept — the client may retry with the right MAC), never as silent
+    drops or transport failures; the server keeps serving valid
+    clients."""
+    server = BrokerServer(InMemoryBroker(), auth_token="sekrit").start()
+    anon = NetBroker(server.address, reconnect_timeout=2.0)
+    wrong = NetBroker(server.address, auth_token="nope",
+                      reconnect_timeout=2.0)
+    good = NetBroker(server.address, auth_token="sekrit")
+    try:
+        with pytest.raises(AuthError):
+            anon.qsize()
+        with pytest.raises(AuthError):
+            wrong.put(new_task("real", {}))
+        assert server.stats["auth_failures"] >= 2
+        # the refusals didn't poison the endpoint for valid clients
+        good.put(new_task("real", {"ok": 1}))
+        lease = good.get(timeout=2)
+        assert lease.task.payload == {"ok": 1}
+        good.ack(lease.tag)
+    finally:
+        anon.close()
+        wrong.close()
+        good.close()
+        server.stop()
+
+
+@pytest.mark.net
+def test_auth_token_defaults_from_environment(monkeypatch):
+    """NetBroker picks up REPRO_AUTH_TOKEN from the environment — the
+    deployment path where workers inherit the secret, not a kwarg."""
+    monkeypatch.setenv("REPRO_AUTH_TOKEN", "sekrit")
+    server = BrokerServer(InMemoryBroker(), auth_token="sekrit").start()
+    nb = NetBroker(server.address)
+    try:
+        nb.put(new_task("real", {}))
+        assert nb.qsize() == 1
+    finally:
+        nb.close()
+        server.stop()
